@@ -1,0 +1,36 @@
+"""Emit the §Roofline table from the dry-run artifacts (no recompiles)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def main() -> None:
+    if not ARTIFACTS.exists():
+        emit("roofline_table_missing", 0.0,
+             "run python -m repro.launch.dryrun --all --mesh both first")
+        return
+    for p in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            if r.get("status") == "skipped":
+                emit(f"roofline_{r['cell']}", 0.0, "skipped")
+            continue
+        t = r["roofline"]
+        dom = max(t["t_compute"], t["t_memory"], t["t_collective"])
+        frac = t["t_compute"] / max(dom, 1e-12)
+        emit(f"roofline_{r['cell']}", dom * 1e6,
+             f"T_comp={t['t_compute'] * 1e3:.1f}ms;"
+             f"T_mem={t['t_memory'] * 1e3:.1f}ms;"
+             f"T_coll={t['t_collective'] * 1e3:.1f}ms;"
+             f"bound={t['bottleneck']};roofline_frac={frac:.3f};"
+             f"useful_ratio={t['useful_flops_ratio'] or 0:.2f};"
+             f"mem_GB={r['memory']['peak_est_bytes'] / 1e9:.1f}")
+
+
+if __name__ == "__main__":
+    main()

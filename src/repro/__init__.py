@@ -1,0 +1,3 @@
+"""repro: counterfactual simulation for large-scale systems with burnout
+variables (Heymann, CS.DC 2025) — multi-pod JAX framework."""
+__version__ = "1.0.0"

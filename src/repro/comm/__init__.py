@@ -1,0 +1,10 @@
+from repro.comm.compression import (
+    quantize_int8, dequantize_int8, compress_with_feedback,
+    ring_all_reduce_mean, compressed_all_reduce_mean,
+    make_cross_pod_grad_mean)
+
+__all__ = [
+    "quantize_int8", "dequantize_int8", "compress_with_feedback",
+    "ring_all_reduce_mean", "compressed_all_reduce_mean",
+    "make_cross_pod_grad_mean",
+]

@@ -1,0 +1,147 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture is an :class:`ArchConfig` built from a repeating
+``pattern`` of :class:`LayerSpec` (mixer kind, attention window, MoE flag).
+``n_layers // len(pattern)`` groups are scanned with stacked params
+(``lax.scan`` keeps the HLO O(1) in depth); a remainder tail (e.g. gemma3-4b's
+34 = 5*6 + 4) is applied unscanned.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str = "attn"              # attn | mamba | mlstm | slstm
+    window: Optional[int] = None    # sliding-window size; None = global attn
+    moe: bool = False               # MoE MLP instead of dense MLP
+    # xlstm blocks carry their own FFN; kind != attn/mamba ignores `moe`
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    # --- MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    moe_group_size: int = 1024      # GShard dispatch group (memory lever)
+    capacity_factor: float = 1.25
+    # --- attention details
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    logit_softcap: float = 0.0      # gemma-style attn logit soft-capping (0 = off)
+    # --- mamba
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    # --- xlstm
+    xlstm_proj_factor: float = 2.0      # mLSTM up-projection
+    xlstm_slstm_proj: float = 4.0 / 3.0  # sLSTM FFN factor
+    # --- encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_frames: int = 0         # precomputed frame embeddings (stub frontend)
+    # --- vlm
+    num_patches: int = 0            # precomputed patch embeddings (stub frontend)
+    # --- misc
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    long_context_ok: bool = False   # eligible for long_500k (sub-quadratic)
+    notes: str = ""
+
+    def __post_init__(self):
+        assert self.n_heads % self.n_kv_heads == 0 or self.n_kv_heads == 0
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 (shardability; pad ids are
+        masked to -inf in the loss)."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def tail(self) -> Tuple[LayerSpec, ...]:
+        return self.pattern[: self.n_layers % len(self.pattern)]
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def param_count_estimate(self) -> int:
+        """6*N*D-style accounting uses this (embedding + per-layer weights)."""
+        from repro.models import lm as lm_lib
+        from repro.models import spec as spec_lib
+        return spec_lib.count_params(lm_lib.param_specs(self))
+
+    def active_param_count_estimate(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        total = self.param_count_estimate()
+        if self.n_experts == 0:
+            return total
+        from repro.models import lm as lm_lib
+        specs = lm_lib.param_specs(self)
+        # expert weights: (E, d, ff)-shaped leaves under a "moe" subtree
+        expert_leaves = [
+            s for p, s in _flatten_with_path(specs)
+            if "moe" in p and len(s.shape) >= 3
+            and self.n_experts in s.shape
+        ]
+        expert_params = sum(_prod(s.shape) for s in expert_leaves)
+        active = total - expert_params + int(
+            expert_params * self.top_k / self.n_experts)
+        return active
+
+
+def _prod(t):
+    out = 1
+    for x in t:
+        out *= x
+    return out
+
+
+def _flatten_with_path(tree):
+    import jax
+    from repro.models.spec import is_spec
+    flat = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_spec)[0]
+    return [("/".join(str(k) for k in path), leaf) for path, leaf in flat]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+    microbatches: int = 1
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether a (arch x shape) cell is runnable, and why not if not."""
+    if shape.name == "long_500k" and not arch.long_context_ok:
+        return False, ("skipped: pure full-attention architecture (task rule: "
+                       "long_500k needs sub-quadratic attention)")
+    if shape.name == "long_500k" and arch.is_encdec:
+        return False, "skipped: whisper decoder is positionally capped << 512k"
+    return True, ""

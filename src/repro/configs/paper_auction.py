@@ -1,0 +1,47 @@
+"""The paper's own experiment configurations (§7.1 / §7.2), as named presets
+used by benchmarks and examples.
+
+Full-paper scale (§7.1: N=1e6, C=100, d=10, b_base=70) is feasible on this
+container but slow under pytest; the benchmarks default to the CPU-scale
+variants and accept --full for the paper numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticPreset:
+    n_events: int
+    n_campaigns: int
+    emb_dim: int
+    b_base: float | None
+
+
+# §7.1 exactly as published
+PAPER_SYNTHETIC_FULL = SyntheticPreset(
+    n_events=1_000_000, n_campaigns=100, emb_dim=10, b_base=70.0)
+
+# CPU-scale default used across benchmarks (same structure, ~50% cap rate
+# via calibration)
+PAPER_SYNTHETIC_CPU = SyntheticPreset(
+    n_events=65_536, n_campaigns=64, emb_dim=10, b_base=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class YahooPreset:
+    n_keywords: int
+    n_campaigns: int
+    n_day1: int
+    n_day2: int
+    budget: float
+
+
+# §7.2: ~1000 keywords, volume 100k -> 150k, constant budget 2000
+PAPER_YAHOO_FULL = YahooPreset(
+    n_keywords=1000, n_campaigns=200, n_day1=100_000, n_day2=150_000,
+    budget=2000.0)
+
+PAPER_YAHOO_CPU = YahooPreset(
+    n_keywords=1000, n_campaigns=100, n_day1=32_768, n_day2=49_152,
+    budget=120.0)

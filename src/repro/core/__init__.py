@@ -1,0 +1,20 @@
+"""Core library: the paper's contribution as composable JAX modules."""
+from repro.core.types import AuctionRule, Segments, SimResult, never_capped
+from repro.core.auction import resolve, resolve_row, spend_sums, spend_matrix
+from repro.core.sequential import sequential_replay, naive_sampled_replay, capped_sum
+from repro.core.parallel import parallel_simulate
+from repro.core.segments import aggregate, masked_rate, block_spend_sums, first_crossing_times
+from repro.core.vi import estimate_pi, pi_to_cap_times, capping_order, PiEstimate
+from repro.core.sort2aggregate import sort2aggregate, refine_segments, Sort2AggregateResult
+from repro.core.counterfactual import CounterfactualEngine, CounterfactualDelta
+
+__all__ = [
+    "AuctionRule", "Segments", "SimResult", "never_capped",
+    "resolve", "resolve_row", "spend_sums", "spend_matrix",
+    "sequential_replay", "naive_sampled_replay", "capped_sum",
+    "parallel_simulate",
+    "aggregate", "masked_rate", "block_spend_sums", "first_crossing_times",
+    "estimate_pi", "pi_to_cap_times", "capping_order", "PiEstimate",
+    "sort2aggregate", "refine_segments", "Sort2AggregateResult",
+    "CounterfactualEngine", "CounterfactualDelta",
+]

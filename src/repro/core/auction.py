@@ -1,0 +1,99 @@
+"""The auction rule ``f(e, a)``.
+
+``f`` maps (event, activation vector) -> per-campaign spend increment. We keep
+it in factored form — ``resolve`` returns (winner, price) per event and
+:func:`spend_sums` / :func:`spend_matrix` turn that into per-campaign spends —
+because the (N, C) one-hot spend matrix is the only superlinear intermediate
+and most consumers only need reductions of it.
+
+Everything here is vectorised over events; the activation vector can be shared
+(one (C,) mask for a block — Algorithm 2 / SORT2AGGREGATE aggregation) or
+per-event ((T, C) — uncertainty-relaxation draws, segment-indexed replay).
+
+Invariant (paper §3): ``a^c = 0  =>  f^c(., a) = 0`` — an inactive campaign
+never wins and never spends.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import AuctionRule
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+def bids(values: jax.Array, rule: AuctionRule) -> jax.Array:
+    """(T, C) values -> (T, C) bids under the rule's multipliers."""
+    return values * rule.multipliers[None, :].astype(values.dtype)
+
+
+def resolve(
+    values: jax.Array,          # (T, C) float
+    active: jax.Array,          # (C,) or (T, C) bool
+    rule: AuctionRule,
+) -> Tuple[jax.Array, jax.Array]:
+    """Resolve a block of auctions under fixed or per-event activation.
+
+    Returns ``(winners, prices)``: winners (T,) int32 with -1 = no sale,
+    prices (T,) float32. First price: winner pays own bid. Second price:
+    winner pays max(second-highest active bid, reserve).
+    """
+    b = bids(values, rule)
+    if active.ndim == 1:
+        active = jnp.broadcast_to(active[None, :], b.shape)
+    eligible = active & (b > rule.reserve)
+    masked = jnp.where(eligible, b, NEG_INF)
+    if rule.kind == "first_price":
+        winners = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+        top = jnp.take_along_axis(masked, winners[:, None], axis=-1)[:, 0]
+        sale = top > NEG_INF
+        prices = jnp.where(sale, top, 0.0).astype(jnp.float32)
+    elif rule.kind == "second_price":
+        top2, idx2 = jax.lax.top_k(masked, 2)
+        winners = idx2[:, 0].astype(jnp.int32)
+        sale = top2[:, 0] > NEG_INF
+        second = jnp.where(top2[:, 1] > NEG_INF, top2[:, 1], rule.reserve)
+        prices = jnp.where(sale, jnp.maximum(second, rule.reserve), 0.0)
+        prices = prices.astype(jnp.float32)
+    else:  # pragma: no cover - guarded by AuctionRule constructors
+        raise ValueError(f"unknown auction kind: {rule.kind}")
+    winners = jnp.where(sale, winners, -1)
+    return winners, prices
+
+
+def resolve_row(values_row: jax.Array, active: jax.Array, rule: AuctionRule):
+    """Single-event resolve — the literal ``f(e, a)`` (used by the oracle)."""
+    w, p = resolve(values_row[None, :], active[None, :], rule)
+    return w[0], p[0]
+
+
+def spend_sums(
+    winners: jax.Array, prices: jax.Array, num_campaigns: int,
+    weights: jax.Array | None = None,
+) -> jax.Array:
+    """Per-campaign total spend over a block: a pure (order-free) reduction.
+
+    This is the MapReduce "reduce" of the paper; ``weights`` lets callers
+    restrict to an index range without slicing (keeps shapes static for jit).
+    """
+    p = prices if weights is None else prices * weights
+    # winners == -1 (no sale) are dropped by segment_sum's out-of-range policy
+    # only for >= num_segments; map -1 to num_campaigns bucket and slice off.
+    w = jnp.where(winners < 0, num_campaigns, winners)
+    sums = jax.ops.segment_sum(p, w, num_segments=num_campaigns + 1)
+    return sums[:num_campaigns]
+
+
+def spend_matrix(winners: jax.Array, prices: jax.Array, num_campaigns: int) -> jax.Array:
+    """(T,) winners/prices -> (T, C) one-hot spend increments (memory heavy —
+    only for within-block cumulative sums)."""
+    onehot = jax.nn.one_hot(winners, num_campaigns, dtype=prices.dtype)
+    return onehot * prices[:, None]
+
+
+def spend_of(winners: jax.Array, prices: jax.Array, c) -> jax.Array:
+    """(T,) spend increments of a single campaign."""
+    return jnp.where(winners == c, prices, 0.0)

@@ -1,0 +1,38 @@
+"""Error metrics used in the paper's figures."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def relative_error(s_hat: jax.Array, s_ref: jax.Array, c: int | None = None):
+    """Fig. 1 metric: |s_hat - s| / s (for campaign |C| by default)."""
+    if c is None:
+        c = s_ref.shape[0] - 1
+    denom = jnp.maximum(jnp.abs(s_ref[c]), 1e-12)
+    return jnp.abs(s_hat[c] - s_ref[c]) / denom
+
+
+def spend_weighted_relative_error(s_hat: jax.Array, s_ref: jax.Array):
+    """Fig. 6 metric: per-campaign relative errors weighted by reference spend."""
+    rel = jnp.abs(s_hat - s_ref) / jnp.maximum(jnp.abs(s_ref), 1e-12)
+    w = s_ref / jnp.maximum(s_ref.sum(), 1e-12)
+    return (rel * w).sum()
+
+
+def relative_error_cdf(s_hat: jax.Array, s_ref: jax.Array):
+    """Spend-weighted cumulative distribution of per-campaign relative error
+    (the Fig. 6 curve). Returns (sorted errors, cumulative weight)."""
+    rel = jnp.abs(s_hat - s_ref) / jnp.maximum(jnp.abs(s_ref), 1e-12)
+    w = s_ref / jnp.maximum(s_ref.sum(), 1e-12)
+    order = jnp.argsort(rel)
+    return rel[order], jnp.cumsum(w[order])
+
+
+def cap_time_error(cap_hat: jax.Array, cap_ref: jax.Array, n_events: int):
+    """Mean |cap_hat - cap_ref| / N over campaigns that cap in either run."""
+    caps = (cap_ref <= n_events) | (cap_hat <= n_events)
+    err = jnp.abs(
+        jnp.minimum(cap_hat, n_events + 1).astype(jnp.float32)
+        - jnp.minimum(cap_ref, n_events + 1).astype(jnp.float32))
+    return jnp.where(caps, err, 0.0).sum() / jnp.maximum(caps.sum(), 1) / n_events

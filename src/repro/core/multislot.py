@@ -1,0 +1,152 @@
+"""Multi-slot auctions — the paper's §8 generality claim, made executable.
+
+Search-result pages sell ``S`` ad slots per query; the top-S active bidders
+win, each paying their own bid scaled by a position-discount curve
+(first-price position auction). The burnout machinery is unchanged: ``f``
+now returns up to S spend increments per event, still satisfying
+``a^c = 0 => f^c = 0`` and Assumption 3.2 (bids bounded), so the whole
+SORT2AGGREGATE playbook applies verbatim — this module provides the
+multi-slot ``resolve`` plus a sequential oracle and a segment aggregate with
+identical interfaces to the single-slot versions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import auction
+from repro.core.types import AuctionRule, Segments, SimResult, never_capped
+
+NEG = jnp.float32(-2.0 ** 30)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MultiSlotRule:
+    base: AuctionRule
+    discounts: jax.Array       # (S,) position discounts, e.g. 1, .5, .25
+
+    @staticmethod
+    def first_price(num_campaigns: int, slots: int = 3,
+                    decay: float = 0.5) -> "MultiSlotRule":
+        return MultiSlotRule(
+            base=AuctionRule.first_price(num_campaigns),
+            discounts=(decay ** jnp.arange(slots, dtype=jnp.float32)))
+
+    @property
+    def slots(self) -> int:
+        return self.discounts.shape[0]
+
+
+def resolve_multislot(
+    values: jax.Array,          # (T, C)
+    active: jax.Array,          # (C,) or (T, C)
+    rule: MultiSlotRule,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (winners (T, S) int32 [-1 = unfilled], prices (T, S))."""
+    b = auction.bids(values, rule.base)
+    if active.ndim == 1:
+        active = jnp.broadcast_to(active[None, :], b.shape)
+    eligible = active & (b > rule.base.reserve)
+    masked = jnp.where(eligible, b, NEG)
+    top, idx = jax.lax.top_k(masked, rule.slots)           # (T, S)
+    sale = top > NEG
+    prices = jnp.where(sale, top * rule.discounts[None, :], 0.0)
+    winners = jnp.where(sale, idx.astype(jnp.int32), -1)
+    return winners, prices.astype(jnp.float32)
+
+
+def spend_sums_multislot(winners, prices, num_campaigns: int,
+                         weights=None) -> jax.Array:
+    t, s = winners.shape
+    w = winners.reshape(-1)
+    p = prices.reshape(-1)
+    if weights is not None:
+        p = p * jnp.repeat(weights, s)
+    return auction.spend_sums(w, p, num_campaigns)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sequential_replay_multislot(
+    values: jax.Array, budgets: jax.Array, rule: MultiSlotRule,
+) -> SimResult:
+    """Exact serial oracle with S winners per event."""
+    n_events, n_campaigns = values.shape
+    sentinel = jnp.int32(never_capped(n_events))
+
+    def step(carry, inp):
+        s_state, cap = carry
+        v_row, n = inp
+        a = s_state < budgets
+        winners, prices = resolve_multislot(v_row[None, :], a[None, :], rule)
+        winners, prices = winners[0], prices[0]            # (S,)
+        idx = jnp.where(winners >= 0, winners, n_campaigns)
+        s_new = s_state + jax.ops.segment_sum(
+            prices, idx, num_segments=n_campaigns + 1)[:n_campaigns]
+        crossed = (s_new >= budgets) & (cap == sentinel)
+        cap = jnp.where(crossed, n + 1, cap)
+        return (s_new, cap), (winners, prices)
+
+    init = (jnp.zeros((n_campaigns,), jnp.float32),
+            jnp.full((n_campaigns,), sentinel, jnp.int32))
+    (s_fin, cap), (winners, prices) = jax.lax.scan(
+        step, init, (values, jnp.arange(n_events, dtype=jnp.int32)))
+    return SimResult(final_spend=s_fin, cap_times=cap,
+                     winners=winners, prices=prices, segments=None)
+
+
+@jax.jit
+def aggregate_multislot(
+    values: jax.Array, segments: Segments, budgets: jax.Array,
+    rule: MultiSlotRule,
+) -> SimResult:
+    """Segment-indexed parallel replay (Step 3) for multi-slot auctions."""
+    n_events, n_campaigns = values.shape
+    seg_ids = segments.seg_ids(n_events)
+    masks = segments.masks[seg_ids]
+    winners, prices = resolve_multislot(values, masks, rule)
+    final = spend_sums_multislot(winners, prices, n_campaigns)
+    # cap-time diagnosis: blockwise cumulative over flattened (event, slot)
+    flat_w = winners.reshape(-1)
+    flat_p = prices.reshape(-1)
+    cap = auction_first_crossing(flat_w, flat_p, budgets, n_campaigns,
+                                 rule.slots, n_events)
+    return SimResult(final_spend=final, cap_times=cap, winners=winners,
+                     prices=prices, segments=segments)
+
+
+def auction_first_crossing(flat_w, flat_p, budgets, n_campaigns, slots,
+                           n_events, block: int = 4096) -> jax.Array:
+    from repro.core.segments import first_crossing_times
+    cap_flat = first_crossing_times(flat_w, flat_p, budgets, n_campaigns,
+                                    block=block)
+    # flattened index -> event index (1-based): ceil(flat / slots)
+    capped = cap_flat <= n_events * slots
+    cap = jnp.where(capped, (cap_flat + slots - 1) // slots,
+                    never_capped(n_events))
+    return cap.astype(jnp.int32)
+
+
+def refine_segments_multislot(values, budgets, rule: MultiSlotRule,
+                              cap_times0, max_iters: int = 10):
+    """Step-2 fixed point, multi-slot flavour."""
+    import numpy as np
+    n_events = values.shape[0]
+    caps = np.asarray(cap_times0, np.int64)
+    best, best_gap = caps, np.inf
+    for it in range(max_iters):
+        segs = Segments.from_cap_times(jnp.asarray(caps, jnp.int32), n_events)
+        rep = aggregate_multislot(values, segs, budgets, rule)
+        new = np.asarray(rep.cap_times, np.int64)
+        gap = int(np.max(np.abs(np.minimum(new, n_events + 1)
+                                - np.minimum(caps, n_events + 1))))
+        if gap < best_gap:
+            best, best_gap = caps, gap
+        if gap == 0:
+            return jnp.asarray(caps, jnp.int32), it + 1, True
+        caps = new
+    return jnp.asarray(best, jnp.int32), max_iters, False

@@ -1,0 +1,109 @@
+"""Sequential (oracle) simulation — §4 of the paper.
+
+The ground truth every parallel method is judged against: a ``lax.scan`` over
+events carrying the spend state, recomputing the activation vector each step.
+O(N) serial — exactly the thing the paper exists to avoid at scale — but
+indispensable for validation, and (as `Algorithm 1`) trivially parallel in the
+single-campaign degenerate case.
+
+A blocked TPU kernel with identical semantics lives in
+``repro.kernels.capped_scan`` (sequential grid, spend carry in VMEM scratch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import auction
+from repro.core.types import AuctionRule, SimResult, never_capped
+
+
+def capped_sum(xs: jax.Array, budget) -> jax.Array:
+    """Algorithm 1: S_T for a single budget-capped accumulator.
+
+    ``min(B, sum(xs))`` — the sum is order-free, hence distributable; the
+    whole paper generalises this observation to coupled campaigns.
+    """
+    return jnp.minimum(jnp.asarray(budget, xs.dtype), xs.sum())
+
+
+@functools.partial(jax.jit, static_argnames=("record_events",))
+def sequential_replay(
+    values: jax.Array,           # (N, C)
+    budgets: jax.Array,          # (C,)
+    rule: AuctionRule,
+    record_events: bool = True,
+) -> SimResult:
+    """Exact serial replay of Eqs. (1)-(3).
+
+    ``a_n^c = 1{s_n^c < b^c}`` is evaluated *before* auction ``n+1``; the
+    spend increment is applied in full even if it overshoots the budget
+    (Assumption 3.2 bounds the overshoot by C/N).
+    """
+    n_events, n_campaigns = values.shape
+    sentinel = jnp.int32(never_capped(n_events))
+
+    def step(carry, inp):
+        s, cap = carry
+        v_row, n = inp
+        a = s < budgets
+        w, p = auction.resolve_row(v_row, a, rule)
+        s_new = s.at[jnp.maximum(w, 0)].add(jnp.where(w >= 0, p, 0.0))
+        crossed = (s_new >= budgets) & (cap == sentinel)
+        cap = jnp.where(crossed, n + 1, cap)  # 1-based cap time
+        out = (w, p) if record_events else None
+        return (s_new, cap), out
+
+    init = (jnp.zeros((n_campaigns,), jnp.float32),
+            jnp.full((n_campaigns,), sentinel, jnp.int32))
+    idx = jnp.arange(n_events, dtype=jnp.int32)
+    (s_final, cap_times), outs = jax.lax.scan(step, init, (values, idx))
+    winners, prices = outs if record_events else (None, None)
+    return SimResult(final_spend=s_final, cap_times=cap_times,
+                     winners=winners, prices=prices, segments=None)
+
+
+@functools.partial(jax.jit, static_argnames=("sample_size",))
+def naive_sampled_replay(
+    values: jax.Array,
+    budgets: jax.Array,
+    rule: AuctionRule,
+    key: jax.Array,
+    sample_size: int,
+) -> SimResult:
+    """The Fig.-1 baseline the paper warns about: subsample events, replay
+    sequentially with spend increments rescaled by 1/rho.
+
+    Scales (serial chain is rho*N long) but the budget-coupling dynamics are
+    distorted — cap-out times are hit after the wrong *realised* competition,
+    so the estimate degrades fast as rho shrinks.
+    """
+    n_events, n_campaigns = values.shape
+    rho = sample_size / n_events
+    idx = jax.random.choice(key, n_events, (sample_size,), replace=False)
+    idx = jnp.sort(idx)  # keep realized order
+    sub = values[idx]
+
+    sentinel = jnp.int32(never_capped(n_events))
+
+    def step(carry, inp):
+        s, cap = carry
+        v_row, n_sub = inp
+        a = s < budgets
+        w, p = auction.resolve_row(v_row, a, rule)
+        p_scaled = jnp.where(w >= 0, p, 0.0) / rho
+        s_new = s.at[jnp.maximum(w, 0)].add(p_scaled)
+        crossed = (s_new >= budgets) & (cap == sentinel)
+        # map back to an (approximate) global event index for cap times
+        approx_n = ((n_sub + 1) / rho).astype(jnp.int32)
+        cap = jnp.where(crossed, approx_n, cap)
+        return (s_new, cap), None
+
+    init = (jnp.zeros((n_campaigns,), jnp.float32),
+            jnp.full((n_campaigns,), sentinel, jnp.int32))
+    (s_final, cap_times), _ = jax.lax.scan(
+        step, init, (sub, jnp.arange(sample_size, dtype=jnp.int32)))
+    return SimResult(final_spend=s_final, cap_times=cap_times,
+                     winners=None, prices=None, segments=None)

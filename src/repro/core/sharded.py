@@ -1,0 +1,248 @@
+"""Event-sharded (multi-device) drivers for the paper's algorithms.
+
+This is the TPU realization of the paper's MapReduce framing: the event log is
+sharded along the mesh's event axes (``("data",)`` per pod, ``("pod","data")``
+across pods); campaign state (pi, spends, budgets — all O(|C|)) is replicated.
+Every algorithm below is the single-process version with its reductions
+replaced by ``psum`` over the event axes:
+
+* :func:`sharded_rate_and_block` — map + all-reduce for Algorithm 2;
+* :func:`sharded_aggregate` — SORT2AGGREGATE Step 3 (one pass, one psum);
+* :func:`sharded_first_crossing` — two-pass distributed prefix: per-device
+  partial sums are all-gathered (exclusive prefix), then each device scans its
+  local block with the correct starting state;
+* :func:`estimate_pi_sharded` — Algorithm 4 with the residual averaged across
+  all devices each step (global-batch stochastic iteration); pi stays
+  replicated because every device applies the identical psum'd update.
+
+All functions assume ``values`` is already placed with its event (leading)
+dimension sharded over ``event_axes`` and campaigns replicated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import auction
+from repro.core.types import AuctionRule, Segments, SimResult, never_capped
+
+
+def event_sharding(mesh: Mesh, event_axes: Sequence[str]) -> NamedSharding:
+    return NamedSharding(mesh, P(tuple(event_axes)))
+
+
+def shard_events(values: jax.Array, mesh: Mesh,
+                 event_axes: Sequence[str] = ("data",)) -> jax.Array:
+    """Place (N, C) values with events sharded, campaigns replicated."""
+    return jax.device_put(
+        values, NamedSharding(mesh, P(tuple(event_axes), None)))
+
+
+def _global_offset(event_axes: Sequence[str], local_n: int) -> jax.Array:
+    """Global index of this shard's first event (row-major over event axes)."""
+    idx = jnp.int32(0)
+    for ax in event_axes:
+        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    return idx * local_n
+
+
+def make_sharded_kernels(mesh: Mesh, rule: AuctionRule,
+                         event_axes: Sequence[str] = ("data",)):
+    """Build (rate_fn, block_fn) closures for the Algorithm-2 driver.
+
+    Each is a ``shard_map``-ped program: local masked resolve + spend sums,
+    then one float32 all-reduce of a (C,)-vector — the only cross-device
+    traffic per Algorithm-2 round.
+    """
+    axes = tuple(event_axes)
+    spec_vals = P(axes, None)
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(spec_vals, P(), P()), out_specs=(P(), P()),
+        check_vma=False)
+    def _rate_kernel(values_local, active, lo):
+        local_n, n_campaigns = values_local.shape
+        offset = _global_offset(axes, local_n)
+        gidx = offset + jnp.arange(local_n, dtype=jnp.int32)
+        winners, prices = auction.resolve(values_local, active, rule)
+        w_rate = (gidx >= lo).astype(prices.dtype)
+        local_sum = auction.spend_sums(winners, prices, n_campaigns,
+                                       weights=w_rate)
+        local_cnt = w_rate.sum()
+        total = jax.lax.psum(local_sum, axes)
+        cnt = jax.lax.psum(local_cnt, axes)
+        return total, cnt
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(spec_vals, P(), P(), P()), out_specs=P(),
+        check_vma=False)
+    def _block_kernel(values_local, active, lo, hi):
+        local_n, n_campaigns = values_local.shape
+        offset = _global_offset(axes, local_n)
+        gidx = offset + jnp.arange(local_n, dtype=jnp.int32)
+        winners, prices = auction.resolve(values_local, active, rule)
+        w_blk = ((gidx >= lo) & (gidx < hi)).astype(prices.dtype)
+        local_sum = auction.spend_sums(winners, prices, n_campaigns,
+                                       weights=w_blk)
+        return jax.lax.psum(local_sum, axes)
+
+    rate_jit = jax.jit(_rate_kernel)
+    block_jit = jax.jit(_block_kernel)
+
+    def rate_fn(values):
+        def f(active, lo):
+            total, cnt = rate_jit(values, active, jnp.int32(lo))
+            return total / jnp.maximum(cnt, 1.0)
+        return f
+
+    def block_fn(values):
+        def f(active, lo, hi):
+            return block_jit(values, active, jnp.int32(lo), jnp.int32(hi))
+        return f
+
+    return rate_fn, block_fn
+
+
+def sharded_aggregate(
+    mesh: Mesh,
+    values: jax.Array,            # sharded (N, C)
+    segments: Segments,
+    budgets: jax.Array,
+    rule: AuctionRule,
+    event_axes: Sequence[str] = ("data",),
+) -> SimResult:
+    """SORT2AGGREGATE Step 3 on the mesh: one parallel pass + one psum, plus
+    the distributed first-crossing diagnosis (one all-gather of per-device
+    partials)."""
+    axes = tuple(event_axes)
+    n_events, n_campaigns = values.shape
+    boundaries, masks = segments.boundaries, segments.masks
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(axes, None), P(), P(), P()), out_specs=(P(), P()),
+        check_vma=False)
+    def _agg(values_local, bnds, msks, b):
+        local_n = values_local.shape[0]
+        offset = _global_offset(axes, local_n)
+        gidx = offset + jnp.arange(local_n, dtype=jnp.int32)
+        seg_ids = jnp.searchsorted(bnds[1:-1], gidx, side="right").astype(jnp.int32)
+        act = msks[seg_ids]
+        winners, prices = auction.resolve(values_local, act, rule)
+        local_sum = auction.spend_sums(winners, prices, n_campaigns)
+        total = jax.lax.psum(local_sum, axes)
+        cap = _local_first_crossing(winners, prices, local_sum, b,
+                                    n_campaigns, offset, axes, n_events)
+        return total, cap
+
+    total, cap = jax.jit(_agg)(values, boundaries, masks, budgets)
+    return SimResult(final_spend=total, cap_times=cap, winners=None,
+                     prices=None, segments=segments)
+
+
+def _local_first_crossing(winners, prices, local_sum, budgets, n_campaigns,
+                          offset, axes, n_events):
+    """Distributed budget-crossing detection (runs inside shard_map).
+
+    Pass 1 (already done): local per-campaign sums. All-gather them to build
+    each device's exclusive prefix; pass 2: local scan for the first crossing
+    with that starting state. min-psum of candidate times gives the global
+    first crossing.
+    """
+    local_n = winners.shape[0]
+    # exclusive prefix of this device's events: sum of sums on devices before
+    # this one in the row-major event order.
+    all_sums = jax.lax.all_gather(local_sum, axes, tiled=False)  # (ndev, C)
+    ndev = all_sums.shape[0]
+    my_rank = offset // local_n
+    before = (jnp.arange(ndev, dtype=jnp.int32) < my_rank).astype(local_sum.dtype)
+    s0 = (all_sums * before[:, None]).sum(axis=0)
+    # local cumulative + crossing search (blockwise to bound memory)
+    sm = auction.spend_matrix(winners, prices, n_campaigns)
+    cum = s0[None, :] + jnp.cumsum(sm, axis=0)
+    crossed = cum >= budgets[None, :]
+    any_cross = crossed.any(axis=0)
+    t_first = jnp.argmax(crossed, axis=0)
+    sentinel = jnp.int32(never_capped(n_events))
+    cand = jnp.where(any_cross,
+                     (offset + t_first + 1).astype(jnp.int32), sentinel)
+    return jax.lax.pmin(cand, axes)
+
+
+def sharded_first_crossing(mesh, values, segments, budgets, rule,
+                           event_axes=("data",)):
+    """Convenience wrapper returning only the cap times."""
+    return sharded_aggregate(mesh, values, segments, budgets, rule,
+                             event_axes).cap_times
+
+
+def estimate_pi_sharded(
+    mesh: Mesh,
+    values: jax.Array,             # sharded (N, C) — full log; sampling is local
+    budgets: jax.Array,
+    rule: AuctionRule,
+    key: jax.Array,
+    *,
+    num_iters: int = 200,
+    local_batch: int = 64,
+    eta: float = 0.5,
+    eta_decay: float = 0.0,
+    pi0: jax.Array | None = None,
+    event_axes: Sequence[str] = ("data",),
+    coupling: str = "shared",
+) -> jax.Array:
+    """Algorithm 4 at scale: every device contributes a local minibatch
+    residual each step; one (C,)-psum per step; pi replicated.
+
+    The per-event drift matches the paper's B=1 iteration: the update is
+    ``eta * global_batch * (b/N - mean_spend)``.
+    """
+    axes = tuple(event_axes)
+    n_events, n_campaigns = values.shape
+    btilde = budgets.astype(jnp.float32) / n_events
+    pi_init = (jnp.ones((n_campaigns,), jnp.float32) if pi0 is None
+               else pi0.astype(jnp.float32))
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(axes, None), P(), P()), out_specs=P(),
+        check_vma=False)
+    def _vi(values_local, pi0_in, key_in):
+        local_n = values_local.shape[0]
+        offset = _global_offset(axes, local_n)
+        dev_key = jax.random.fold_in(key_in, offset)
+        ndev = 1
+        for ax in axes:
+            ndev *= jax.lax.axis_size(ax)
+        global_batch = jnp.float32(local_batch * ndev)
+
+        def body(carry, k):
+            pi, step = carry
+            k_idx, k_u = jax.random.split(k)
+            rows = jax.random.randint(k_idx, (local_batch,), 0, local_n)
+            vblock = values_local[rows]
+            u_shape = ((local_batch, 1) if coupling == "shared"
+                       else (local_batch, n_campaigns))
+            u = jax.random.uniform(k_u, u_shape)
+            active = u < pi[None, :]
+            winners, prices = auction.resolve(vblock, active, rule)
+            local_sum = auction.spend_sums(winners, prices, n_campaigns)
+            mean_spend = jax.lax.psum(local_sum, axes) / global_batch
+            eta_t = eta / (1.0 + eta_decay * step.astype(jnp.float32))
+            pi = jnp.clip(pi + eta_t * global_batch * (btilde - mean_spend),
+                          0.0, 1.0)
+            return (pi, step + 1), None
+
+        keys = jax.random.split(dev_key, num_iters)
+        (pi, _), _ = jax.lax.scan(body, (pi0_in, jnp.int32(0)), keys)
+        # identical on every device (same psum'd updates) — but the Bernoulli
+        # draws differ per device only inside the residual, so assert via mean
+        return jax.lax.pmean(pi, axes)
+
+    return jax.jit(_vi)(values, pi_init, key)

@@ -1,0 +1,135 @@
+"""Algorithm 3 — SORT2AGGREGATE: the production counterfactual estimator.
+
+Three steps, each embarrassingly parallel over the event log:
+
+* **Sort** — estimate the cap-out ranks/times, either by Algorithm 4
+  (uncertainty relaxation on a small sample) or from a warm start (e.g. the
+  previous day's cap times, as in the paper's Yahoo experiment);
+* **Refine** (optional) — fixed-point iteration on the segment history: replay
+  under the current piecewise-constant activation masks, read off the *actual*
+  budget-crossing times, rebuild the segments, repeat. Each iteration is one
+  parallel pass; convergence follows from the monotonicity ("lattice") argument
+  the paper sketches (Tarski / Topkis) when ``f^c`` is decreasing in the other
+  campaigns' activations;
+* **Aggregate** — one final parallel pass that materialises the counterfactual
+  history (winners, prices, spends) under the converged segments.
+
+Built-in safeguard (paper §6): any error in the sort step shows up as an
+inconsistency between a segment's assumed cap time and the replayed budget
+crossing; we report that gap and iterate on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import segments as seg_lib
+from repro.core import vi as vi_lib
+from repro.core.types import AuctionRule, Segments, SimResult
+
+
+@dataclasses.dataclass
+class Sort2AggregateResult:
+    result: SimResult
+    pi: Optional[jax.Array]         # step-1 estimate (None if warm-started)
+    refine_iters_used: int
+    converged: bool
+    consistency_gap: float          # max |assumed cap - replayed cap| (events)
+
+
+def refine_segments(
+    values: jax.Array,
+    budgets: jax.Array,
+    rule: AuctionRule,
+    cap_times0: jax.Array,
+    *,
+    max_iters: int = 8,
+):
+    """Step 2: fixed-point refinement of cap times under segment replay.
+
+    The map ``caps -> budget-crossing times of the replay under
+    Segments.from_cap_times(caps)`` has the oracle cap times as a fixed point;
+    iterating it is the Tarski-style scheme the paper sketches. Because the
+    discrete map can 2-cycle near ties, we detect revisited states and damp
+    (average the cycle endpoints) instead of looping; the returned state is
+    the one with the smallest self-consistency gap seen.
+    """
+    n_events = values.shape[0]
+    caps = np.asarray(cap_times0, np.int64)
+    seen: set = set()
+    best_caps, best_gap = caps, np.inf
+    converged = False
+    it = 0
+    for it in range(max_iters):
+        segs = Segments.from_cap_times(jnp.asarray(caps, jnp.int32), n_events)
+        replay = seg_lib.aggregate(values, segs, budgets, rule,
+                                   record_events=False)
+        new_caps = np.asarray(replay.cap_times, np.int64)
+        gap = int(np.max(np.abs(np.minimum(new_caps, n_events + 1)
+                                - np.minimum(caps, n_events + 1))))
+        if gap < best_gap:
+            best_caps, best_gap = caps, gap
+        if gap == 0:
+            converged = True
+            break
+        state = new_caps.tobytes()
+        if state in seen:                      # cycle: damp and continue
+            new_caps = (caps + new_caps) // 2
+            seen.clear()
+        seen.add(state)
+        caps = new_caps
+    return jnp.asarray(best_caps, jnp.int32), it + 1, converged
+
+
+def sort2aggregate(
+    values: jax.Array,             # (N, C)
+    budgets: jax.Array,            # (C,)
+    rule: AuctionRule,
+    key: Optional[jax.Array] = None,
+    *,
+    # Step 1 (skipped if cap_times_init is given)
+    cap_times_init: Optional[jax.Array] = None,
+    sample_rate: float = 0.01,
+    vi_iters: int = 20,
+    vi_eta: float = 0.5,
+    vi_eta_decay: float = 0.0,
+    vi_batch_size: int = 64,
+    # Step 2
+    refine_iters: int = 8,
+    # Step 3
+    record_events: bool = False,
+) -> Sort2AggregateResult:
+    n_events, n_campaigns = values.shape
+
+    pi = None
+    if cap_times_init is None:
+        if key is None:
+            raise ValueError("need a PRNG key when no warm start is given")
+        sample_size = max(int(round(n_events * sample_rate)), vi_batch_size)
+        est = vi_lib.estimate_pi(
+            values, budgets, rule, key,
+            sample_size=sample_size, num_iters=vi_iters, eta=vi_eta,
+            eta_decay=vi_eta_decay, batch_size=vi_batch_size)
+        pi = est.pi
+        cap_times = vi_lib.pi_to_cap_times(pi, n_events)
+    else:
+        cap_times = jnp.asarray(cap_times_init, jnp.int32)
+
+    iters_used, converged = 0, refine_iters == 0
+    if refine_iters > 0:
+        cap_times, iters_used, converged = refine_segments(
+            values, budgets, rule, cap_times, max_iters=refine_iters)
+
+    segs = Segments.from_cap_times(cap_times, n_events)
+    final = seg_lib.aggregate(values, segs, budgets, rule,
+                              record_events=record_events)
+    gap = float(jnp.max(jnp.abs(
+        jnp.minimum(final.cap_times, n_events + 1).astype(jnp.float32)
+        - jnp.minimum(cap_times, n_events + 1).astype(jnp.float32))))
+    return Sort2AggregateResult(
+        result=final, pi=pi, refine_iters_used=iters_used,
+        converged=converged, consistency_gap=gap)

@@ -1,0 +1,141 @@
+"""Core datatypes for burnout-variable simulation.
+
+The abstraction follows the paper's §3 model:
+
+* a finite event set ``E`` of size ``N`` (auction opportunities), here carried
+  as a dense valuation matrix ``values[n, c]`` = campaign ``c``'s value for
+  event ``n`` (built blockwise by :mod:`repro.data` from embeddings, keyword
+  tables, or an ML scoring model);
+* a campaign set ``C`` with budgets ``b`` and a spend state ``s`` (the burnout
+  variables: ``a_n^c = 1{s_n^c < b^c}`` irreversibly flips to 0);
+* an auction rule ``f(e, a)`` (:mod:`repro.core.auction`) mapping an event and
+  an activation vector to per-campaign spend increments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Sentinel for "never capped": one past the last event index (events are
+# 1-indexed in the paper; cap_time == N+1 means the campaign finishes the day).
+def never_capped(n_events: int) -> int:
+    return n_events + 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AuctionRule:
+    """The platform design ``f``: pricing rule + per-campaign bid multipliers.
+
+    Counterfactual questions are expressed as a *different* ``AuctionRule``
+    (and/or different budgets) replayed over the same event log.
+    """
+
+    multipliers: jax.Array          # (C,) bid = multiplier * value
+    reserve: jax.Array              # () reserve price; no sale below it
+    kind: str = dataclasses.field(default="first_price", metadata=dict(static=True))
+    # kind in {"first_price", "second_price"}
+
+    @staticmethod
+    def first_price(num_campaigns: int, reserve: float = 0.0) -> "AuctionRule":
+        return AuctionRule(
+            multipliers=jnp.ones((num_campaigns,), jnp.float32),
+            reserve=jnp.asarray(reserve, jnp.float32),
+            kind="first_price",
+        )
+
+    @staticmethod
+    def second_price(num_campaigns: int, reserve: float = 0.0) -> "AuctionRule":
+        return AuctionRule(
+            multipliers=jnp.ones((num_campaigns,), jnp.float32),
+            reserve=jnp.asarray(reserve, jnp.float32),
+            kind="second_price",
+        )
+
+    def with_multiplier(self, c: int, m: float) -> "AuctionRule":
+        return dataclasses.replace(
+            self, multipliers=self.multipliers.at[c].set(jnp.float32(m)))
+
+    def scaled(self, m) -> "AuctionRule":
+        return dataclasses.replace(
+            self, multipliers=self.multipliers * jnp.asarray(m, jnp.float32))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Segments:
+    """A piecewise-constant activation history.
+
+    Events in ``[boundaries[j], boundaries[j+1])`` (0-indexed) are resolved
+    under activation mask ``masks[j]``. This is the datum that makes the whole
+    replay order-free (§5–6 of the paper): once the segments are known, every
+    per-event quantity is a parallel map and every total a parallel reduce.
+    """
+
+    boundaries: jax.Array   # (K+2,) int32, boundaries[0]=0, boundaries[-1]=N
+    masks: jax.Array        # (K+1, C) bool — mask for each segment
+
+    @property
+    def num_segments(self) -> int:
+        return self.masks.shape[0]
+
+    def seg_ids(self, n_events: int) -> jax.Array:
+        """Segment id for each event index (0-based)."""
+        idx = jnp.arange(n_events, dtype=jnp.int32)
+        return jnp.searchsorted(self.boundaries[1:-1], idx, side="right").astype(jnp.int32)
+
+    @staticmethod
+    def trivial(n_events: int, num_campaigns: int) -> "Segments":
+        return Segments(
+            boundaries=jnp.asarray([0, n_events], jnp.int32),
+            masks=jnp.ones((1, num_campaigns), bool),
+        )
+
+    @staticmethod
+    def from_cap_times(cap_times: jax.Array, n_events: int) -> "Segments":
+        """Build segments from per-campaign cap times.
+
+        ``cap_times[c]`` is the 1-based event index after which campaign ``c``
+        is inactive; ``> n_events`` means it never caps. Campaigns capping at
+        the same time share a boundary (the duplicate boundary is kept; the
+        earlier duplicate segment is empty, which is harmless).
+        """
+        c_count = cap_times.shape[0]
+        capped = cap_times <= n_events
+        order = jnp.argsort(jnp.where(capped, cap_times, n_events + 1))
+        sorted_times = jnp.where(capped, cap_times, n_events + 1)[order]
+        # All C potential boundaries; clip never-capped ones to N (empty segs).
+        bnds = jnp.concatenate([
+            jnp.asarray([0], jnp.int32),
+            jnp.minimum(sorted_times, n_events).astype(jnp.int32),
+            jnp.asarray([n_events], jnp.int32),
+        ])
+        # masks[j]: active set for segment j = all campaigns whose cap time
+        # is strictly greater than the segment start (1-based semantics).
+        starts = bnds[:-1]
+        masks = cap_times[None, :] > starts[:, None]
+        return Segments(boundaries=bnds, masks=masks)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Outcome of a (counterfactual) replay."""
+
+    final_spend: jax.Array          # (C,) cumulative spend at N
+    cap_times: jax.Array            # (C,) int32, 1-based; N+1 if never capped
+    winners: Optional[jax.Array]    # (N,) int32 winner per event, -1 = no sale
+    prices: Optional[jax.Array]     # (N,) float32 price paid per event
+    segments: Optional[Segments]    # activation history (parallel methods)
+
+    @property
+    def revenue(self) -> jax.Array:
+        if self.prices is None:
+            return self.final_spend.sum()
+        return self.prices.sum()
+
+    def num_capped(self, n_events: int) -> jax.Array:
+        return (self.cap_times <= n_events).sum()

@@ -1,0 +1,7 @@
+from repro.data.synthetic import SyntheticEnv, make_synthetic_env
+from repro.data.yahoo import YahooLikeEnv, make_yahoo_like_env
+
+__all__ = [
+    "SyntheticEnv", "make_synthetic_env",
+    "YahooLikeEnv", "make_yahoo_like_env",
+]

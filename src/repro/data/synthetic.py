@@ -1,0 +1,107 @@
+"""Fully synthetic auction environment — paper §7.1, Eqs. (11)-(13).
+
+* event embeddings   e_i = (e_base + 3 xi_i) / 4,  xi_i ~ N(0, I_d)
+* campaign embeddings r_c ~ N(0, I_d)
+* valuations         v_c(e_i) = min( exp(r_c . e_i / (2 sqrt(d))) / 10, 1 )
+* budgets            b^c = k * b_base, k = 1..|C|  (linear ramp; the paper
+  picks b_base so that ~50% of campaigns cap out — we expose both the fixed
+  value used in the figures (70 for N=1e6, C=100) and a calibration helper).
+
+The valuation matrix is built blockwise so N ~ 1e6+ does not allocate an
+(N, d)->(N, C) intermediate beyond one block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import AuctionRule
+
+
+@dataclasses.dataclass
+class SyntheticEnv:
+    values: jax.Array          # (N, C) float32
+    budgets: jax.Array         # (C,) float32
+    rule: AuctionRule
+    event_emb: jax.Array       # (N, d)
+    campaign_emb: jax.Array    # (C, d)
+
+    @property
+    def n_events(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def n_campaigns(self) -> int:
+        return self.values.shape[1]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def valuation_block(event_emb: jax.Array, campaign_emb: jax.Array) -> jax.Array:
+    """Eq. (12) for a block of events: (T, d), (C, d) -> (T, C)."""
+    d = event_emb.shape[-1]
+    logits = event_emb @ campaign_emb.T / (2.0 * jnp.sqrt(jnp.float32(d)))
+    return jnp.minimum(jnp.exp(logits) / 10.0, 1.0).astype(jnp.float32)
+
+
+def make_synthetic_env(
+    key: jax.Array,
+    n_events: int = 100_000,
+    n_campaigns: int = 100,
+    emb_dim: int = 10,
+    b_base: float | None = None,
+    target_cap_fraction: float = 0.5,
+    rule: AuctionRule | None = None,
+    block: int = 65_536,
+) -> SyntheticEnv:
+    k_base, k_xi, k_r, k_cal = jax.random.split(key, 4)
+    e_base = jax.random.normal(k_base, (emb_dim,), jnp.float32)
+    campaign_emb = jax.random.normal(k_r, (n_campaigns, emb_dim), jnp.float32)
+
+    blocks = []
+    for lo in range(0, n_events, block):
+        hi = min(lo + block, n_events)
+        xi = jax.random.normal(
+            jax.random.fold_in(k_xi, lo), (hi - lo, emb_dim), jnp.float32)
+        emb = (e_base[None, :] + 3.0 * xi) / 4.0
+        blocks.append((emb, valuation_block(emb, campaign_emb)))
+    event_emb = jnp.concatenate([b[0] for b in blocks])
+    values = jnp.concatenate([b[1] for b in blocks])
+
+    if b_base is None:
+        b_base = calibrate_b_base(values, target_cap_fraction)
+    budgets = (jnp.arange(1, n_campaigns + 1, dtype=jnp.float32)
+               * jnp.float32(b_base))
+    rule = rule or AuctionRule.first_price(n_campaigns)
+    return SyntheticEnv(values=values, budgets=budgets, rule=rule,
+                        event_emb=event_emb, campaign_emb=campaign_emb)
+
+
+def calibrate_b_base(values: jax.Array, target_cap_fraction: float = 0.5,
+                     iters: int = 12) -> float:
+    """Bisect b_base so that ~target fraction of campaigns exhaust b^c = k*b.
+
+    Uses the uncapped total spend as a cheap monotone proxy: campaign c caps
+    iff its (coupled) spend reaches k_c * b_base; we bisect on the fraction of
+    campaigns whose *uncapped* spend exceeds their budget, which bounds the
+    true capped fraction tightly in practice and needs one parallel pass.
+    """
+    from repro.core import auction
+    n_events, n_campaigns = values.shape
+    rule = AuctionRule.first_price(n_campaigns)
+    w, p = auction.resolve(values, jnp.ones((n_campaigns,), bool), rule)
+    uncapped = auction.spend_sums(w, p, n_campaigns)
+    ks = np.arange(1, n_campaigns + 1, dtype=np.float64)
+    u = np.asarray(uncapped, np.float64)
+    lo, hi = 1e-6, float(u.max())
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        frac = float((u >= ks * mid).mean())
+        if frac > target_cap_fraction:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)

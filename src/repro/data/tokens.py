@@ -1,0 +1,68 @@
+"""Synthetic token pipeline for LM substrate training.
+
+A deterministic, shardable stream: each (step, host-shard) derives its batch
+from a folded PRNG key, so restarts reproduce the exact stream (checkpoint
+resume re-generates identical batches) and every data-parallel shard draws
+disjoint tokens. The "corpus" is a Zipf-distributed token model with local
+n-gram structure — enough statistical texture for loss curves to move.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    patch_embeds: int = 0          # vlm stub frontend
+    patch_dim: int = 0
+    frames: int = 0                # audio stub frontend
+    frame_dim: int = 0
+
+    def _probs(self) -> jax.Array:
+        ranks = jnp.arange(1, self.vocab_size + 1, dtype=jnp.float32)
+        p = ranks ** (-self.zipf_a)
+        return p / p.sum()
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k_tok, k_shift, k_patch, k_frame = jax.random.split(key, 4)
+        b, s = self.global_batch, self.seq_len
+        s_text = s - self.patch_embeds
+        toks = jax.random.choice(k_tok, self.vocab_size, (b, s_text + 1),
+                                 p=self._probs()).astype(jnp.int32)
+        # local n-gram structure: with p=0.35, next token repeats prev
+        rep = jax.random.bernoulli(k_shift, 0.35, (b, s_text + 1))
+        toks = jnp.where(rep, jnp.roll(toks, 1, axis=1), toks)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.patch_embeds:
+            out["patch_embeds"] = jax.random.normal(
+                k_patch, (b, self.patch_embeds, self.patch_dim),
+                jnp.bfloat16)
+        if self.frames:
+            out["frames"] = jax.random.normal(
+                k_frame, (b, self.frames, self.frame_dim), jnp.bfloat16)
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def pipeline_for(cfg, seq_len: int, global_batch: int,
+                 seed: int = 0) -> TokenPipeline:
+    return TokenPipeline(
+        vocab_size=cfg.vocab_size, seq_len=seq_len,
+        global_batch=global_batch, seed=seed,
+        patch_embeds=cfg.num_patches, patch_dim=cfg.d_model,
+        frames=cfg.encoder_frames, frame_dim=cfg.d_model)

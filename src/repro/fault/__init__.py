@@ -1,0 +1,6 @@
+from repro.fault.failures import (FailureInjector, StepWatchdog,
+                                  StragglerPolicy, WorkerFailure)
+from repro.fault.elastic import ElasticPlan, plan_remesh, build_mesh
+
+__all__ = ["FailureInjector", "StepWatchdog", "StragglerPolicy",
+           "WorkerFailure", "ElasticPlan", "plan_remesh", "build_mesh"]

@@ -1,0 +1,57 @@
+"""Elastic scaling: remesh + resharded restart after membership changes.
+
+The contract: training state is periodically checkpointed as *logical*
+arrays (repro.checkpoint). On a membership change (failure, preemption,
+scale-up) the driver
+
+1. picks the new mesh from the surviving device count (largest (d, m) grid
+   with the model axis preserved — TP degree is a program invariant, DP/pod
+   shrink or grow);
+2. rebuilds shardings from the same logical rules on the new mesh;
+3. restores the latest checkpoint with the new shardings (restore places
+   logical arrays, so no resharding pass is needed);
+4. resumes from the checkpointed step, rescaling grad-accumulation so the
+   global batch stays constant (microbatches x new_DP = const).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.launch.mesh import make_mesh
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    microbatches: int
+
+
+def plan_remesh(n_devices: int, model_parallel: int,
+                global_batch: int, ref_microbatches: int,
+                ref_data_parallel: int) -> ElasticPlan:
+    """Largest usable mesh with fixed TP degree; grad-accum compensates for
+    lost data parallelism so the global batch is unchanged."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"cannot keep TP={model_parallel} with {n_devices} devices")
+    data_parallel = n_devices // model_parallel
+    # keep global batch: mb * dp = ref_mb * ref_dp
+    total = ref_microbatches * ref_data_parallel
+    microbatches = max(1, total // data_parallel)
+    # data_parallel must divide the global batch
+    while global_batch % data_parallel != 0 and data_parallel > 1:
+        data_parallel -= 1
+        microbatches = max(1, total // data_parallel)
+    return ElasticPlan(mesh_shape=(data_parallel, model_parallel),
+                       axis_names=("data", "model"),
+                       microbatches=microbatches)
+
+
+def build_mesh(plan: ElasticPlan):
+    return make_mesh(plan.mesh_shape, plan.axis_names)

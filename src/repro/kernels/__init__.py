@@ -1,0 +1,3 @@
+"""Pallas TPU kernels. Each subpackage: <name>.py (pl.pallas_call +
+BlockSpec), ops.py (jit wrapper; interpret=True on CPU), ref.py (jnp oracle).
+"""

@@ -1,0 +1,4 @@
+from repro.kernels.auction_resolve.ops import auction_resolve
+from repro.kernels.auction_resolve.ref import auction_resolve_ref, valuations
+
+__all__ = ["auction_resolve", "auction_resolve_ref", "valuations"]

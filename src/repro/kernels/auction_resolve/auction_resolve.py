@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: batched first/second-price auction resolution.
+
+The paper's map-side hotspot, TPU-adapted: one grid step processes a block of
+``block_t`` events; the valuation matrix tile (block_t, C) comes off the MXU
+as (events x d) @ (d x campaigns), the winner selection is a row-wise masked
+argmax on the VPU, and per-campaign spend sums accumulate in a VMEM scratch
+across the (sequential) grid — the kernel-level "combiner" of the MapReduce
+formulation.
+
+VMEM budget per step (fp32): block_t*d (events) + C*d (campaigns) +
+2*block_t*C (valuations + one-hot) + C (sums) — with the default
+block_t=256, C<=1024, d<=256 this stays well under 16 MB and the matmul tiles
+are MXU-aligned (block_t and C padded to multiples of 128 by the caller in
+ops.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -2.0 ** 30    # python float: jnp constants would be captured tracers
+
+
+def _kernel(e_ref, r_ref, mult_ref, act_ref, live_ref, reserve_ref,
+            winners_ref, prices_ref, sums_ref,
+            *, second_price: bool, per_event_mask: bool, inv_2sqrt_d: float):
+    pid = pl.program_id(0)
+
+    e = e_ref[...].astype(jnp.float32)                    # (T, d)
+    r = r_ref[...].astype(jnp.float32)                    # (C, d)
+    logits = jax.lax.dot_general(
+        e, r, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * inv_2sqrt_d  # (T, C)
+    v = jnp.minimum(jnp.exp(logits) / 10.0, 1.0)
+
+    mult = mult_ref[...].astype(jnp.float32)              # (1, C)
+    bids = v * mult
+    reserve = reserve_ref[0, 0]
+    act = act_ref[...] != 0                               # (T, C) or (1, C)
+    if not per_event_mask:
+        act = jnp.broadcast_to(act, bids.shape)
+    live = live_ref[...] != 0                             # (T, 1) real rows
+    eligible = act & (bids > reserve) & live
+    masked = jnp.where(eligible, bids, NEG)
+
+    t, c = masked.shape
+    winners = jnp.argmax(masked, axis=1).astype(jnp.int32)    # (T,)
+    top = jnp.max(masked, axis=1)
+    sale = top > NEG
+    if second_price:
+        cols = jax.lax.broadcasted_iota(jnp.int32, (t, c), 1)
+        masked2 = jnp.where(cols == winners[:, None], NEG, masked)
+        second = jnp.max(masked2, axis=1)
+        prices = jnp.where(sale,
+                           jnp.maximum(jnp.where(second > NEG, second,
+                                                 reserve), reserve), 0.0)
+    else:
+        prices = jnp.where(sale, top, 0.0)
+    winners = jnp.where(sale, winners, -1)
+
+    winners_ref[...] = winners[:, None]
+    prices_ref[...] = prices.astype(jnp.float32)[:, None]
+
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, c), 1)
+    onehot = (cols == winners[:, None]).astype(jnp.float32)
+    block_sums = jnp.sum(onehot * prices[:, None], axis=0,
+                         keepdims=True)                    # (1, C)
+
+    @pl.when(pid == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+
+    sums_ref[...] += block_sums
+
+
+def auction_resolve_pallas(
+    event_emb: jax.Array,        # (N, d)
+    campaign_emb: jax.Array,     # (C, d)
+    multipliers: jax.Array,      # (C,)
+    active: jax.Array,           # (C,) or (N, C) bool/int8
+    live: jax.Array,             # (N,) int8 — 0 marks padded rows
+    reserve: jax.Array,          # ()
+    *,
+    second_price: bool = False,
+    block_t: int = 256,
+    interpret: bool = False,
+    true_d: int | None = None,   # pre-padding embedding dim (scale factor)
+):
+    n, d = event_emb.shape
+    c = campaign_emb.shape[0]
+    assert n % block_t == 0, (n, block_t)
+    per_event = active.ndim == 2
+    act = active.astype(jnp.int8)
+    if not per_event:
+        act = act[None, :]                                 # (1, C)
+
+    grid = (n // block_t,)
+    kernel = functools.partial(
+        _kernel, second_price=second_price, per_event_mask=per_event,
+        inv_2sqrt_d=1.0 / (2.0 * math.sqrt(true_d or d)))
+
+    act_spec = (pl.BlockSpec((block_t, c), lambda i: (i, 0)) if per_event
+                else pl.BlockSpec((1, c), lambda i: (0, 0)))
+    winners, prices, sums = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),   # events
+            pl.BlockSpec((c, d), lambda i: (0, 0)),         # campaigns
+            pl.BlockSpec((1, c), lambda i: (0, 0)),         # multipliers
+            act_spec,                                       # activation
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),   # live rows
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),         # reserve
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),   # winners
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),   # prices
+            pl.BlockSpec((1, c), lambda i: (0, 0)),         # spend sums
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(event_emb, campaign_emb, multipliers[None, :], act,
+      live.astype(jnp.int8)[:, None],
+      jnp.asarray(reserve, jnp.float32).reshape(1, 1))
+    return winners[:, 0], prices[:, 0], sums[0]

@@ -1,0 +1,58 @@
+"""jit'd public wrapper for the auction_resolve kernel.
+
+Pads events to the block size and campaigns/embedding dims to MXU-friendly
+multiples (padded events are masked via the kernel's live-row input; padded
+campaigns are inactive), dispatches to the Pallas kernel (interpret=True on
+CPU — this container's validation mode; compiled on real TPUs), and un-pads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.auction_resolve.auction_resolve import auction_resolve_pallas
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+def _pad_to(x: jax.Array, size: int, axis: int, value=0):
+    pad = (-x.shape[axis]) % size
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("second_price", "block_t",
+                                             "interpret"))
+def auction_resolve(
+    event_emb: jax.Array,        # (N, d)
+    campaign_emb: jax.Array,     # (C, d)
+    multipliers: jax.Array,      # (C,)
+    active: jax.Array,           # (C,) or (N, C)
+    reserve: jax.Array = 0.0,
+    *,
+    second_price: bool = False,
+    block_t: int = 256,
+    interpret: bool = not _ON_TPU,
+):
+    """Returns (winners (N,) int32 [-1 = no sale], prices (N,) f32,
+    per-campaign spend sums (C,) f32)."""
+    n, d = event_emb.shape
+    c = campaign_emb.shape[0]
+    e = _pad_to(_pad_to(event_emb, block_t, 0), 128, 1)
+    r = _pad_to(_pad_to(campaign_emb, 128, 0), 128, 1)
+    mult = _pad_to(multipliers.astype(jnp.float32), 128, 0)
+    live = _pad_to(jnp.ones((n,), jnp.int8), block_t, 0)
+    if active.ndim == 2:
+        act = _pad_to(_pad_to(active.astype(jnp.int8), block_t, 0), 128, 1)
+    else:
+        act = _pad_to(active.astype(jnp.int8), 128, 0)
+    winners, prices, sums = auction_resolve_pallas(
+        e, r, mult, act, live, jnp.asarray(reserve, jnp.float32),
+        second_price=second_price, block_t=block_t, interpret=interpret,
+        true_d=d)
+    return winners[:n], prices[:n], sums[:c]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the auction_resolve kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-2.0 ** 30)
+
+
+def valuations(event_emb: jax.Array, campaign_emb: jax.Array) -> jax.Array:
+    """Paper Eq. (12): (T, d), (C, d) -> (T, C) in [0, 1]."""
+    d = event_emb.shape[-1]
+    logits = (event_emb.astype(jnp.float32)
+              @ campaign_emb.astype(jnp.float32).T) \
+        / (2.0 * jnp.sqrt(jnp.float32(d)))
+    return jnp.minimum(jnp.exp(logits) / 10.0, 1.0)
+
+
+def auction_resolve_ref(
+    event_emb: jax.Array,        # (T, d)
+    campaign_emb: jax.Array,     # (C, d)
+    multipliers: jax.Array,      # (C,)
+    active: jax.Array,           # (C,) or (T, C) bool
+    reserve: jax.Array,          # ()
+    second_price: bool = False,
+):
+    """Returns (winners (T,) int32 [-1 = no sale], prices (T,) f32,
+    spend_sums (C,) f32)."""
+    t, _ = event_emb.shape
+    c = campaign_emb.shape[0]
+    v = valuations(event_emb, campaign_emb)
+    bids = v * multipliers[None, :].astype(jnp.float32)
+    act = active if active.ndim == 2 else jnp.broadcast_to(active[None, :],
+                                                           (t, c))
+    eligible = act & (bids > reserve)
+    masked = jnp.where(eligible, bids, NEG)
+    winners = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    top = jnp.max(masked, axis=1)
+    sale = top > NEG
+    if second_price:
+        masked2 = jnp.where(
+            jnp.arange(c)[None, :] == winners[:, None], NEG, masked)
+        second = jnp.max(masked2, axis=1)
+        prices = jnp.where(sale,
+                           jnp.maximum(jnp.where(second > NEG, second,
+                                                 reserve), reserve), 0.0)
+    else:
+        prices = jnp.where(sale, top, 0.0)
+    winners = jnp.where(sale, winners, -1)
+    onehot = (jnp.arange(c)[None, :] == winners[:, None]).astype(jnp.float32)
+    sums = (onehot * prices[:, None]).sum(axis=0)
+    return winners, prices.astype(jnp.float32), sums

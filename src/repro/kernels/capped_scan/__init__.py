@@ -1,0 +1,4 @@
+from repro.kernels.capped_scan.ops import capped_scan
+from repro.kernels.capped_scan.ref import capped_scan_ref
+
+__all__ = ["capped_scan", "capped_scan_ref"]

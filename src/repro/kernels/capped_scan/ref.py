@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the capped_scan kernel: exact sequential replay of the
+burnout dynamics (Eqs. 1-3) over a precomputed valuation matrix."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-2.0 ** 30)
+
+
+def capped_scan_ref(
+    values: jax.Array,       # (N, C) valuations
+    budgets: jax.Array,      # (C,)
+    multipliers: jax.Array,  # (C,)
+    reserve: jax.Array,      # ()
+):
+    """Returns (winners (N,) int32, prices (N,) f32, final_spend (C,),
+    cap_times (C,) int32 1-based, N+1 = never)."""
+    n, c = values.shape
+    sentinel = jnp.int32(n + 1)
+
+    def step(carry, inp):
+        s, cap = carry
+        v, idx = inp
+        a = s < budgets
+        bids = v * multipliers
+        eligible = a & (bids > reserve)
+        masked = jnp.where(eligible, bids, NEG)
+        w = jnp.argmax(masked).astype(jnp.int32)
+        top = masked[w]
+        sale = top > NEG
+        price = jnp.where(sale, top, 0.0)
+        w = jnp.where(sale, w, -1)
+        s_new = s.at[jnp.maximum(w, 0)].add(jnp.where(sale, price, 0.0))
+        crossed = (s_new >= budgets) & (cap == sentinel)
+        cap = jnp.where(crossed, idx + 1, cap)
+        return (s_new, cap), (w, price)
+
+    init = (jnp.zeros((c,), jnp.float32), jnp.full((c,), sentinel, jnp.int32))
+    (s_fin, cap), (winners, prices) = jax.lax.scan(
+        step, init, (values.astype(jnp.float32),
+                     jnp.arange(n, dtype=jnp.int32)))
+    return winners, prices.astype(jnp.float32), s_fin, cap

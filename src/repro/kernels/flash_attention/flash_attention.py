@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: causal (optionally sliding-window) flash attention fwd.
+
+Layout: heads are folded into batch (BH, S, dh); grid = (BH, n_q_blocks,
+n_kv_blocks) with the kv axis innermost (sequential on TPU), carrying the
+online-softmax state (running max m, normalizer l, accumulator acc) in VMEM
+scratch. Fully-masked kv blocks (beyond the causal frontier / outside the
+window) still occupy grid steps but short-circuit through ``pl.when``.
+
+VMEM per step: bq*dh + bk*dh (tiles) + bq*bk (scores) + bq*(dh+2) scratch;
+defaults bq=bk=256, dh<=256 -> ~1 MB fp32, MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -2.0 ** 30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale: float, bq: int, bk: int, causal: bool,
+            window: Optional[int], n_kv: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    row0 = qi * bq
+    col0 = kj * bk
+    # skip blocks strictly above the causal diagonal / outside the window
+    relevant = True
+    if causal:
+        relevant = col0 <= row0 + bq - 1
+    if window is not None:
+        relevant = jnp.logical_and(relevant, col0 + bk - 1 > row0 - window)
+
+    @pl.when(relevant)
+    def _process():
+        q = q_ref[0].astype(jnp.float32)              # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)              # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)              # (bk, dh)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        scores = jnp.where(mask, scores, NEG)
+
+        m_prev = m_scr[...]                           # (bq, 1)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(scores, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(scores - m_new)                   # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array,        # (BH, S, dh)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, s, dh = q.shape
+    assert s % block_q == 0 and s % block_k == 0
+    n_q = s // block_q
+    n_kv = s // block_k
+    kernel = functools.partial(
+        _kernel, scale=1.0 / (dh ** 0.5), bq=block_q, bk=block_k,
+        causal=causal, window=window, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash_attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-2.0 ** 30)
+
+
+def flash_attention_ref(
+    q: jax.Array,               # (BH, S, dh)
+    k: jax.Array,               # (BH, S, dh)
+    v: jax.Array,               # (BH, S, dh)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    s = q.shape[1]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    scores = jnp.where(mask[None], scores, NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs, v.astype(jnp.float32)
+                      ).astype(q.dtype)

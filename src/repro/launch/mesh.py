@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. Single pod: (16, 16) = 256 chips, axes
+("data", "model"). Multi-pod: (2, 16, 16) = 512 chips with a leading "pod"
+axis that is pure data-parallel — the only cross-pod collective in any of our
+programs is the per-step gradient/residual all-reduce (which
+repro.comm.compression can compress), so scaling beyond 2 pods = growing this
+axis.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests, elastic rescale)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple:
+    """The event/batch axes of a mesh (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")

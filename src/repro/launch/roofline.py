@@ -1,0 +1,195 @@
+"""Roofline-term derivation from compiled XLA artifacts.
+
+This container has no TPU; the *compiled dry-run* is the profile. Per
+(arch x shape x mesh) we derive three times (seconds, per step):
+
+  T_comp = device_FLOPs / PEAK_FLOPS
+  T_mem  = device_bytes  / HBM_BW
+  T_coll = device_wire_bytes / ICI_BW
+
+``compiled.cost_analysis()`` reports FLOPs / bytes for the *per-device* SPMD
+program. Collective wire bytes are parsed from the optimized HLO text
+(``compiled.as_text()``): for each all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute we take the result tensor sizes and convert to
+per-device wire traffic with the standard ring formulas (x(n-1)/n, all-reduce
+x2(n-1)/n) using the replica-group size parsed from the op.
+
+Hardware constants (TPU v5e-like, per task spec): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shaped result:  f32[256,1024]{1,0}   (layout braces optional)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,\s]+)\}")
+# e.g. replica_groups=[32,16]<=[16,32]T(1,0) — iota form: groups x size
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _tensor_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 2   # conservative default when groups are implicit
+
+
+def _result_type(line: str) -> str:
+    # "%name = TYPE op-name(...)" — everything between '=' and the op name
+    lhs = line.split("=", 1)
+    if len(lhs) != 2:
+        return ""
+    rhs = lhs[1]
+    for op in _COLLECTIVES:
+        idx = rhs.find(op)
+        if idx > 0:
+            return rhs[:idx]
+    return ""
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    count: int = 0
+    by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    by_kind_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        kind = None
+        for op in _COLLECTIVES:
+            # match "op(" or "op-start(" to skip e.g. %all-reduce.3 operand refs
+            if f" {op}(" in s or f" {op}-start(" in s:
+                kind = op
+                break
+        if kind is None:
+            continue
+        rtype = _result_type(s.replace(f"{kind}-start", kind))
+        nbytes = _tensor_bytes(rtype)
+        if nbytes == 0:
+            continue
+        n = max(_group_size(s), 2)
+        if kind == "all-reduce":
+            wire = 2.0 * nbytes * (n - 1) / n
+        elif kind == "all-gather":
+            wire = nbytes * (n - 1) / n            # result = gathered
+        elif kind == "reduce-scatter":
+            wire = nbytes * (n - 1)                 # result = shard
+        elif kind == "all-to-all":
+            wire = nbytes * (n - 1) / n
+        else:                                       # collective-permute
+            wire = float(nbytes)
+        stats.wire_bytes += wire
+        stats.count += 1
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + wire
+        stats.by_kind_count[kind] = stats.by_kind_count.get(kind, 0) + 1
+    return stats
+
+
+# HLO while-loops (scan over layer groups) report body cost ONCE; scale by
+# trip count. We extract trip counts conservatively from known scan lengths.
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    collective_detail: Dict[str, float]
+    per_device_memory_bytes: Optional[float] = None
+    model_flops: Optional[float] = None
+    useful_flops_ratio: Optional[float] = None
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(compiled, *, model_flops_per_device: Optional[float] = None,
+             hlo_text: Optional[str] = None,
+             structural: bool = True) -> RooflineTerms:
+    """Derive the three terms. ``structural=True`` uses the trip-count-aware
+    HLO walker (repro.launch.hlo_cost) — XLA's own cost_analysis counts
+    while-loop bodies once, so scanned-layers programs need this."""
+    from repro.launch import hlo_cost
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):           # older jax returns [dict]
+        ca = ca[0]
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    if structural:
+        cost = hlo_cost.analyze(text)
+        flops = cost.flops
+        nbytes = cost.bytes
+        coll = CollectiveStats(wire_bytes=cost.coll_wire_bytes,
+                               count=0, by_kind=dict(cost.coll_by_kind))
+    else:
+        flops = float(ca.get("flops", 0.0))
+        nbytes = float(ca.get("bytes accessed", 0.0))
+        coll = parse_collectives(text)
+    t_c = flops / PEAK_FLOPS
+    t_m = nbytes / HBM_BW
+    t_x = coll.wire_bytes / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(ma.temp_size_in_bytes + ma.argument_size_in_bytes
+                    + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    except Exception:
+        pass
+    ratio = None
+    if model_flops_per_device and flops > 0:
+        ratio = model_flops_per_device / flops
+    return RooflineTerms(
+        flops_per_device=flops, bytes_per_device=nbytes,
+        wire_bytes_per_device=coll.wire_bytes,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck, collective_detail=dict(coll.by_kind),
+        per_device_memory_bytes=mem,
+        model_flops=model_flops_per_device, useful_flops_ratio=ratio)
+
+
+def model_flops_estimate(n_params_active: int, tokens: int) -> float:
+    """The 6*N*D convention (fwd+bwd); callers pass fwd-only tokens/3 for
+    inference shapes."""
+    return 6.0 * float(n_params_active) * float(tokens)

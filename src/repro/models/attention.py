@@ -1,0 +1,239 @@
+"""GQA attention: chunked-causal train/prefill, cached decode.
+
+Design notes (TPU/GSPMD):
+
+* Query heads are tensor-sharded over ``model`` (Megatron); KV heads are few
+  (GQA) and stay replicated over ``model`` — their projections are small and
+  replication avoids non-divisible shardings. ``repeat_kv`` materialises the
+  grouped heads; XLA shards the repeat along the (sharded) head axis.
+* Train/prefill attention is *chunked over query blocks* (``lax.scan``): the
+  (chunk, S) score tile bounds the working set exactly like a flash kernel;
+  a Pallas kernel with the same semantics lives in
+  ``repro.kernels.flash_attention`` for the TPU fast path.
+* Sliding-window layers slice a static (chunk+window) KV strip per query
+  chunk, so local attention is genuinely sub-quadratic, and use *rolling*
+  decode caches of length ``window`` — this is what bounds mixtral/gemma3 KV
+  at 512k.
+* Decode caches are laid out (batch, kv_seq, kv_heads, head_dim) and sharded
+  batch->data, kv_seq->model: GSPMD then executes the softmax/context matmuls
+  as partial reductions + small all-reduces — flash-decoding for free.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import runtime
+from repro.models.layers import cdt, rmsnorm_head, rope
+from repro.models.spec import ParamSpec
+
+NEG = jnp.float32(-2.0 ** 30)
+
+
+def attn_specs(cfg: ArchConfig) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    out = {
+        "wq": ParamSpec((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = ParamSpec((dh,), (None,), init="ones")
+        out["k_norm"] = ParamSpec((dh,), (None,), init="ones")
+    return out
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # (B, S_cache, KV, dh)
+    v: jax.Array       # (B, S_cache, KV, dh)
+
+
+def cache_specs(cfg: ArchConfig, layer: LayerSpec, batch: int,
+                max_len: int, dtype=jnp.bfloat16) -> KVCache:
+    s_cache = min(max_len, layer.window) if layer.window else max_len
+    shape = (batch, s_cache, cfg.n_kv_heads, cfg.d_head)
+    logical = ("batch", "kv_seq", "kv_heads", "head_dim")
+    return KVCache(
+        k=ParamSpec(shape, logical, init="zeros", dtype=dtype),
+        v=ParamSpec(shape, logical, init="zeros", dtype=dtype),
+    )
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return x
+    return jnp.repeat(x, n_rep, axis=2)
+
+
+def _qkv(p, x, cfg: ArchConfig, positions):
+    wq = runtime.gather_weight(cdt(p["wq"], x.dtype),
+                               ("embed", "heads", "head_dim"))
+    wk = runtime.gather_weight(cdt(p["wk"], x.dtype),
+                               ("embed", "kv_heads", "head_dim"))
+    wv = runtime.gather_weight(cdt(p["wv"], x.dtype),
+                               ("embed", "kv_heads", "head_dim"))
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dgk->bsgk", x, wk)
+    v = jnp.einsum("bsd,dgk->bsgk", x, wv)
+    q = runtime.constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = runtime.constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = runtime.constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        q = rmsnorm_head(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_head(p["k_norm"], k, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _pick_chunk(s: int, target: int = 512) -> int:
+    if s <= target:
+        return s
+    c = target
+    while s % c != 0:
+        c //= 2
+    return max(c, 1)
+
+
+def causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    window: Optional[int] = None,
+    causal: bool = True,
+    chunk: int = 512,
+) -> jax.Array:
+    """Chunked (blockwise, exact) attention. q (B,S,H,dh); k/v (B,S,KV,dh)."""
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh)).astype(q.dtype)
+    chunk = _pick_chunk(s, chunk)
+    n_chunks = s // chunk
+
+    # static KV strip length for windowed layers: each query chunk only needs
+    # [chunk_start - window, chunk_end) keys.
+    strip = s if window is None else min(s, window + chunk)
+
+    q_chunks = q.reshape(b, n_chunks, chunk, h, dh).swapaxes(0, 1)
+
+    def one_chunk(ci, q_c):
+        row0 = ci * chunk
+        if strip == s:
+            k_c, v_c, col0 = k, v, 0
+        else:
+            start = jnp.clip(row0 + chunk - strip, 0, s - strip)
+            k_c = jax.lax.dynamic_slice_in_dim(k, start, strip, axis=1)
+            v_c = jax.lax.dynamic_slice_in_dim(v, start, strip, axis=1)
+            col0 = start
+        scores = jnp.einsum("bthk,bshk->bhts", q_c * scale,
+                            k_c).astype(jnp.float32)
+        rows = row0 + jnp.arange(chunk)[:, None]
+        cols = col0 + jnp.arange(strip)[None, :]
+        mask = jnp.ones((chunk, strip), bool)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        scores = jnp.where(mask[None, None, :, :], scores, NEG)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhts,bshk->bthk", probs, v_c)
+
+    # remat: never store the (chunk, S) score/prob tiles for backward —
+    # recompute them (this is exactly flash-attention's recomputation)
+    one_chunk = jax.checkpoint(
+        one_chunk, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_body(_, inp):
+        ci, q_c = inp
+        return None, one_chunk(ci, q_c)
+
+    if n_chunks == 1:
+        out = one_chunk(jnp.int32(0), q_chunks[0])[None]
+    else:
+        _, out = jax.lax.scan(
+            scan_body, None,
+            (jnp.arange(n_chunks, dtype=jnp.int32), q_chunks),
+            unroll=runtime.scan_unroll(n_chunks))
+    return out.swapaxes(0, 1).reshape(b, s, h, dh)
+
+
+def attend_full(p, x, cfg: ArchConfig, layer: LayerSpec, positions,
+                causal: bool = True):
+    """Train/prefill path. Returns (out, (k, v)) — k/v for cache building."""
+    q, k, v = _qkv(p, x, cfg, positions)
+    ctx = causal_attention(q, k, v, window=layer.window, causal=causal)
+    wo = runtime.gather_weight(cdt(p["wo"], x.dtype),
+                               ("heads", "head_dim", "embed"))
+    out = jnp.einsum("bshk,hkd->bsd", ctx, wo)
+    return out, (k, v)
+
+
+def attend_decode(p, x, cfg: ArchConfig, layer: LayerSpec,
+                  cache: KVCache, pos: jax.Array):
+    """One-token decode. x (B,1,d); pos () int32 — position of this token.
+
+    Window layers use a rolling cache (slot = pos % window); RoPE is applied
+    pre-cache so absolute phases are baked into stored keys.
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)
+
+    s_cache = cache.k.shape[1]
+    slot = pos % s_cache
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k.astype(cache.k.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v.astype(cache.v.dtype), slot, axis=1)
+    kv_logical = ("batch", "kv_seq", "kv_heads", "head_dim")
+    k_cache = runtime.constrain(k_cache, kv_logical)
+    v_cache = runtime.constrain(v_cache, kv_logical)
+
+    # absolute position held by each slot j: largest n <= pos with n % S == j
+    j = jnp.arange(s_cache)
+    slot_pos = pos - ((pos - j) % s_cache)
+    valid = slot_pos >= 0
+    if layer.window is not None:
+        valid &= slot_pos > pos - layer.window
+
+    h, kv_heads = cfg.n_heads, cfg.n_kv_heads
+    kk = _repeat_kv(k_cache, h // kv_heads)
+    vv = _repeat_kv(v_cache, h // kv_heads)
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.d_head)).astype(q.dtype)
+    scores = jnp.einsum("bthk,bshk->bhts", q * scale, kk).astype(jnp.float32)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bhts,bshk->bthk", probs, vv)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, cdt(p["wo"], x.dtype))
+    return out, KVCache(k=k_cache, v=v_cache)
+
+
+def prefill_cache(cfg: ArchConfig, layer: LayerSpec, k: jax.Array,
+                  v: jax.Array, max_len: int) -> KVCache:
+    """Build a decode cache from prefill-computed k/v (B, S, KV, dh).
+
+    Windowed layers keep the last ``window`` positions, stored rolling-aligned
+    (slot = position % window) so decode can continue seamlessly."""
+    s = k.shape[1]
+    s_cache = min(max_len, layer.window) if layer.window else max_len
+    if s >= s_cache:
+        k_tail = k[:, s - s_cache:]
+        v_tail = v[:, s - s_cache:]
+        # roll so that absolute position p sits in slot p % s_cache
+        shift = (s - s_cache) % s_cache
+        k_tail = jnp.roll(k_tail, shift, axis=1)
+        v_tail = jnp.roll(v_tail, shift, axis=1)
+    else:
+        pad = s_cache - s
+        padding = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_tail, v_tail = jnp.pad(k, padding), jnp.pad(v, padding)
+    kv_logical = ("batch", "kv_seq", "kv_heads", "head_dim")
+    return KVCache(
+        k=runtime.constrain(k_tail.astype(jnp.bfloat16), kv_logical),
+        v=runtime.constrain(v_tail.astype(jnp.bfloat16), kv_logical))

@@ -1,0 +1,219 @@
+"""Whisper-style encoder-decoder (audio backbone; conv/mel frontend stubbed —
+``input_specs`` feeds precomputed frame embeddings straight to the encoder).
+
+Encoder: bidirectional attention blocks over (B, frames, d).
+Decoder: causal self-attention + cross-attention + MLP per layer.
+Decode caches: rolling self-KV + the (fixed) per-layer cross-KV computed from
+the encoder output at prefill time.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import attention as attn_lib
+from repro.models import runtime
+from repro.models.attention import KVCache
+from repro.models.layers import (COMPUTE_DTYPE, cdt, embed, embedding_specs,
+                                 mlp, mlp_specs, rmsnorm, rmsnorm_specs,
+                                 rope, unembed, unembed_specs)
+from repro.models.spec import ParamSpec, stack_specs, tree_init
+
+_ATTN = LayerSpec(kind="attn")
+
+
+def _xattn_specs(cfg: ArchConfig) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    return {
+        "wq": ParamSpec((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _enc_block_specs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": rmsnorm_specs(cfg.d_model),
+        "attn": attn_lib.attn_specs(cfg),
+        "ln2": rmsnorm_specs(cfg.d_model),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_block_specs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": rmsnorm_specs(cfg.d_model),
+        "self_attn": attn_lib.attn_specs(cfg),
+        "ln_x": rmsnorm_specs(cfg.d_model),
+        "xattn": _xattn_specs(cfg),
+        "ln2": rmsnorm_specs(cfg.d_model),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    v = cfg.padded_vocab
+    return {
+        "embed": embedding_specs(v, cfg.d_model),
+        "enc_groups": stack_specs(_enc_block_specs(cfg), cfg.encoder_layers),
+        "enc_norm": rmsnorm_specs(cfg.d_model),
+        "dec_groups": stack_specs(_dec_block_specs(cfg), cfg.n_layers),
+        "final_norm": rmsnorm_specs(cfg.d_model),
+        "unembed": unembed_specs(v, cfg.d_model),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    return tree_init(param_specs(cfg), key)
+
+
+class DecCache(NamedTuple):
+    self_kv: KVCache                 # rolling decoder self-attention cache
+    cross_k: Any                     # (B, F, KV, dh) fixed after prefill
+    cross_v: Any
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    f = cfg.encoder_frames
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    per_layer = DecCache(
+        self_kv=attn_lib.cache_specs(cfg, _ATTN, batch, max_len),
+        cross_k=ParamSpec((batch, f, kv, dh),
+                          ("batch", "frames", "kv_heads", "head_dim"),
+                          init="zeros", dtype=jnp.bfloat16),
+        cross_v=ParamSpec((batch, f, kv, dh),
+                          ("batch", "frames", "kv_heads", "head_dim"),
+                          init="zeros", dtype=jnp.bfloat16),
+    )
+    # unstacked per layer: decode runs unrolled (see repro.models.lm)
+    return {"dec_groups": {f"g{j}": per_layer
+                           for j in range(cfg.n_layers)}}
+
+
+def encode(params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, d) precomputed embeddings (stub frontend)."""
+    x = frames.astype(COMPUTE_DTYPE)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+
+    def body(x, gp):
+        x = runtime.constrain(x, ("batch", "seq", None))
+        h = rmsnorm(gp["ln1"], x, cfg.norm_eps)
+        out, _ = attn_lib.attend_full(gp["attn"], h, cfg, _ATTN, positions,
+                                      causal=False)
+        x = x + out
+        h2 = rmsnorm(gp["ln2"], x, cfg.norm_eps)
+        return x + mlp(gp["mlp"], h2), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_groups"],
+                        unroll=runtime.scan_unroll(cfg.encoder_layers))
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(p, enc: jax.Array, cfg: ArchConfig):
+    k = jnp.einsum("bfd,dgk->bfgk", enc, cdt(p["wk"], enc.dtype))
+    v = jnp.einsum("bfd,dgk->bfgk", enc, cdt(p["wv"], enc.dtype))
+    return k, v
+
+
+def _cross_attend(p, x, k, v, cfg: ArchConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, cdt(p["wq"], x.dtype))
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    kk = attn_lib._repeat_kv(k, h // kv)
+    vv = attn_lib._repeat_kv(v, h // kv)
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.d_head)).astype(x.dtype)
+    scores = jnp.einsum("bthk,bshk->bhts", q * scale, kk).astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhts,bshk->bthk", probs, vv)
+    return jnp.einsum("bshk,hkd->bsd", ctx, cdt(p["wo"], x.dtype))
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    tokens: jax.Array,                      # (B, S)
+    frames: Optional[jax.Array] = None,     # (B, F, d); None in decode mode
+    *,
+    mode: str = "train",
+    caches=None,
+    pos=None,
+    max_len: int = 0,
+    remat: bool = True,
+):
+    """Returns (logits, new_caches, aux=0)."""
+    assert mode in ("train", "prefill", "decode")
+    aux = jnp.float32(0.0)
+    x = embed(params["embed"], tokens, COMPUTE_DTYPE)
+    b, s, _ = x.shape
+    if mode == "decode":
+        positions = None
+        enc = None
+    else:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+        enc = encode(params, cfg, frames)
+        max_len = max_len or s
+
+    def body(carry, xs):
+        x = carry
+        gp, gcache = xs
+        x = runtime.constrain(x, ("batch", "seq", None))
+        h = rmsnorm(gp["ln1"], x, cfg.norm_eps)
+        if mode == "decode":
+            out, new_self = attn_lib.attend_decode(gp["self_attn"], h, cfg,
+                                                   _ATTN, gcache.self_kv, pos)
+            ck, cv = gcache.cross_k, gcache.cross_v
+        else:
+            out, (k, v) = attn_lib.attend_full(gp["self_attn"], h, cfg, _ATTN,
+                                               positions)
+            new_self = (attn_lib.prefill_cache(cfg, _ATTN, k, v, max_len)
+                        if mode == "prefill" else None)
+            ck, cv = _cross_kv(gp["xattn"], enc, cfg)
+        x = x + out
+        hx = rmsnorm(gp["ln_x"], x, cfg.norm_eps)
+        x = x + _cross_attend(gp["xattn"], hx, ck, cv, cfg)
+        h2 = rmsnorm(gp["ln2"], x, cfg.norm_eps)
+        x = x + mlp(gp["mlp"], h2)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = DecCache(self_kv=new_self,
+                                 cross_k=ck.astype(jnp.bfloat16),
+                                 cross_v=cv.astype(jnp.bfloat16))
+        elif mode == "decode":
+            new_cache = DecCache(self_kv=new_self, cross_k=ck, cross_v=cv)
+        return x, new_cache
+
+    if mode == "train" and remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    unroll = runtime.scan_unroll(cfg.n_layers)
+    if mode == "decode":
+        new_caches = {}
+        for j in range(cfg.n_layers):
+            gp = jax.tree.map(lambda a: a[j], params["dec_groups"])
+            gc = caches["dec_groups"][f"g{j}"]
+            x, nc = body(x, (gp, gc))
+            new_caches[f"g{j}"] = nc
+    else:
+        class _NoneCache(NamedTuple):
+            self_kv: Any
+            cross_k: Any
+            cross_v: Any
+        x, stacked = jax.lax.scan(
+            lambda c, gp: body(c, (gp, _NoneCache(None, None, None))),
+            x, params["dec_groups"], unroll=unroll)
+        new_caches = None
+        if mode == "prefill":
+            new_caches = {f"g{j}": jax.tree.map(lambda a: a[j], stacked)
+                          for j in range(cfg.n_layers)}
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["unembed"], x)
+    logits = runtime.constrain(logits, ("batch", "seq", "vocab"))
+    out_caches = None
+    if mode != "train":
+        out_caches = {"dec_groups": new_caches}
+    return logits, out_caches, aux

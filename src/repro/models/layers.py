@@ -1,0 +1,123 @@
+"""Shared neural net layers (pure-jnp, param dicts per repro.models.spec)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import ParamSpec
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cdt(x: jax.Array, dtype=None) -> jax.Array:
+    """Cast a (fp32 master) param to the compute dtype."""
+    return x.astype(dtype or COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+
+def rmsnorm_specs(dim: int) -> dict:
+    return {"scale": ParamSpec((dim,), (None,), init="ones")}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_head(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """QK-norm: rmsnorm over the last (head) dim with a (dh,) scale."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (half-rotation / NeoX convention)
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh); positions broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                          # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+
+def mlp_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "wi_gate": ParamSpec((d_model, d_ff), ("embed", "ff")),
+        "wi_up": ParamSpec((d_model, d_ff), ("embed", "ff")),
+        "wo": ParamSpec((d_ff, d_model), ("ff", "embed")),
+    }
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    from repro.models import runtime
+    wi_g = runtime.gather_weight(cdt(p["wi_gate"], x.dtype), ("embed", "ff"))
+    wi_u = runtime.gather_weight(cdt(p["wi_up"], x.dtype), ("embed", "ff"))
+    wo = runtime.gather_weight(cdt(p["wo"], x.dtype), ("ff", "embed"))
+    gate = jnp.einsum("bsd,df->bsf", x, wi_g)
+    up = jnp.einsum("bsd,df->bsf", x, wi_u)
+    a = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate, approximate=True)
+    return jnp.einsum("bsf,fd->bsd", a * up, wo)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + (untied) output head
+
+def embedding_specs(vocab: int, d_model: int) -> dict:
+    return {"table": ParamSpec((vocab, d_model), ("vocab", "embed"),
+                               init="embed")}
+
+
+def embed(p: dict, tokens: jax.Array, dtype=COMPUTE_DTYPE) -> jax.Array:
+    return cdt(p["table"], dtype)[tokens]
+
+
+def unembed_specs(vocab: int, d_model: int) -> dict:
+    return {"table": ParamSpec((vocab, d_model), ("vocab", "embed"))}
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    from repro.models import runtime
+    table = runtime.gather_weight(cdt(p["table"], x.dtype),
+                                  ("vocab", "embed"))
+    return jnp.einsum("bsd,vd->bsv", x, table)
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy over (possibly padded, vocab-sharded) logits
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 true_vocab: int) -> tuple[jax.Array, jax.Array]:
+    """Mean CE over labels >= 0; logits (B, S, Vpad) any float dtype.
+
+    Computed in fp32 with pad-vocab masking; the vocab reductions stay sharded
+    (GSPMD turns them into all-reduces when vocab is model-sharded).
+    """
+    vpad = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    if vpad != true_vocab:
+        pad_mask = jnp.arange(vpad) >= true_vocab
+        lf = jnp.where(pad_mask[None, None, :], -1e30, lf)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, mask.sum()

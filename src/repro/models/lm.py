@@ -1,0 +1,283 @@
+"""Decoder-only LM assembly (all assigned archs except whisper).
+
+Layers are organised as ``n_groups`` repetitions of the config's
+heterogeneous ``pattern`` (plus an optional unscanned tail); groups are
+executed with ``lax.scan`` over stacked params so the HLO is O(1) in depth
+(and remat'd per group in training). Three modes share one code path:
+
+* ``train``   — full sequence, no caches, per-group remat;
+* ``prefill`` — full sequence, emits decode caches (KV / SSM / xLSTM states);
+* ``decode``  — one token, consumes + emits caches (donated by the caller).
+
+VLM (internvl2): precomputed patch embeddings (stub frontend) are projected
+and prepended to the token embeddings; the sequence budget ``seq_len`` counts
+patches + text.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models import runtime
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import (COMPUTE_DTYPE, cdt, embed, embedding_specs,
+                                 mlp, mlp_specs, rmsnorm, rmsnorm_specs,
+                                 unembed, unembed_specs)
+from repro.models.spec import ParamSpec, stack_specs, tree_init
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# specs
+
+def block_specs(cfg: ArchConfig, lspec: LayerSpec) -> dict:
+    out: dict = {"ln1": rmsnorm_specs(cfg.d_model)}
+    if lspec.kind == "attn":
+        out["attn"] = attn_lib.attn_specs(cfg)
+    elif lspec.kind == "mamba":
+        out["mamba"] = mamba_lib.mamba_specs(cfg)
+    elif lspec.kind == "mlstm":
+        out["mlstm"] = xlstm_lib.mlstm_specs(cfg)
+        return out                                  # self-contained block
+    elif lspec.kind == "slstm":
+        out["slstm"] = xlstm_lib.slstm_specs(cfg)
+        out["ln_ff"] = rmsnorm_specs(cfg.d_model)
+        return out
+    else:
+        raise ValueError(lspec.kind)
+    out["ln2"] = rmsnorm_specs(cfg.d_model)
+    if lspec.moe:
+        out["moe"] = moe_lib.moe_specs(cfg)
+    else:
+        out["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff)
+    return out
+
+
+def group_specs(cfg: ArchConfig) -> dict:
+    return {f"sub{i}": block_specs(cfg, ls) for i, ls in enumerate(cfg.pattern)}
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    v = cfg.padded_vocab
+    out: dict = {
+        "embed": embedding_specs(v, cfg.d_model),
+        "groups": stack_specs(group_specs(cfg), cfg.n_groups),
+        "final_norm": rmsnorm_specs(cfg.d_model),
+    }
+    if cfg.tail:
+        out["tail"] = {f"tail{i}": block_specs(cfg, ls)
+                       for i, ls in enumerate(cfg.tail)}
+    if not cfg.tie_embeddings:
+        out["unembed"] = unembed_specs(v, cfg.d_model)
+    if cfg.num_patches:
+        out["patch_proj"] = {
+            "w": ParamSpec((cfg.d_model, cfg.d_model), ("embed", None))}
+    return out
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Tree:
+    return tree_init(param_specs(cfg), key)
+
+
+# ---------------------------------------------------------------------------
+# caches
+
+def block_cache_specs(cfg: ArchConfig, lspec: LayerSpec, batch: int,
+                      max_len: int):
+    if lspec.kind == "attn":
+        return attn_lib.cache_specs(cfg, lspec, batch, max_len)
+    if lspec.kind == "mamba":
+        return mamba_lib.state_specs(cfg, batch)
+    if lspec.kind == "mlstm":
+        return xlstm_lib.mlstm_state_specs(cfg, batch)
+    if lspec.kind == "slstm":
+        return xlstm_lib.slstm_state_specs(cfg, batch)
+    raise ValueError(lspec.kind)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """Decode caches are kept *unstacked* (one subtree per group): the decode
+    step loops groups unrolled so every cache update is a single
+    dynamic-update-slice that XLA can alias with the donated input — a
+    scanned (stacked) cache forces a full-stack double buffer in the while
+    loop (~2x cache memory, measured on internvl2 decode_32k)."""
+    g = {f"sub{i}": block_cache_specs(cfg, ls, batch, max_len)
+         for i, ls in enumerate(cfg.pattern)}
+    out = {"groups": {f"g{j}": g for j in range(cfg.n_groups)}}
+    if cfg.tail:
+        out["tail"] = {f"tail{i}": block_cache_specs(cfg, ls, batch, max_len)
+                       for i, ls in enumerate(cfg.tail)}
+    return out
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Tree:
+    return tree_init(cache_specs(cfg, batch, max_len), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# block application
+
+def apply_block(p: dict, x: jax.Array, cfg: ArchConfig, lspec: LayerSpec,
+                mode: str, cache, pos, positions, max_len: int):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    new_cache = None
+    if lspec.kind == "attn":
+        if mode == "decode":
+            out, new_cache = attn_lib.attend_decode(p["attn"], h, cfg, lspec,
+                                                    cache, pos)
+        else:
+            out, (k, v) = attn_lib.attend_full(p["attn"], h, cfg, lspec,
+                                               positions)
+            if mode == "prefill":
+                new_cache = attn_lib.prefill_cache(cfg, lspec, k, v, max_len)
+        x = x + out
+    elif lspec.kind == "mamba":
+        if mode == "decode":
+            out, new_cache = mamba_lib.mamba_step(p["mamba"], h, cfg, cache)
+        else:
+            out, new_cache = mamba_lib.mamba_apply(
+                p["mamba"], h, cfg, return_state=(mode == "prefill"))
+        x = x + out
+    elif lspec.kind == "mlstm":
+        if mode == "decode":
+            out, new_cache = xlstm_lib.mlstm_step(p["mlstm"], h, cfg, cache)
+        else:
+            out, new_cache = xlstm_lib.mlstm_apply(
+                p["mlstm"], h, cfg, return_state=(mode == "prefill"))
+        return x + out, new_cache, aux
+    elif lspec.kind == "slstm":
+        if mode == "decode":
+            out, new_cache = xlstm_lib.slstm_step(p["slstm"], h, cfg, cache)
+        else:
+            out, new_cache = xlstm_lib.slstm_apply(
+                p["slstm"], h, cfg, return_state=(mode == "prefill"))
+        x = x + out
+        hf = rmsnorm(p["ln_ff"], x, cfg.norm_eps)
+        return x + xlstm_lib.slstm_ffn(p["slstm"], hf), new_cache, aux
+    else:
+        raise ValueError(lspec.kind)
+
+    # MLP / MoE sub-layer (attn & mamba blocks)
+    h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if lspec.moe:
+        out2, aux = moe_lib.moe_apply(p["moe"], h2, cfg)
+    else:
+        out2 = mlp(p["mlp"], h2)
+    return x + out2, new_cache, aux
+
+
+def _apply_group(gp: dict, x, cfg: ArchConfig, mode: str, gcache, pos,
+                 positions, max_len: int):
+    new_caches = {}
+    aux_total = jnp.float32(0.0)
+    for i, ls in enumerate(cfg.pattern):
+        sub_cache = None if gcache is None else gcache[f"sub{i}"]
+        x, nc, aux = apply_block(gp[f"sub{i}"], x, cfg, ls, mode, sub_cache,
+                                 pos, positions, max_len)
+        new_caches[f"sub{i}"] = nc
+        aux_total = aux_total + aux
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# full forward
+
+def forward(
+    params: Tree,
+    cfg: ArchConfig,
+    tokens: jax.Array,                  # (B, S_text) int32
+    *,
+    mode: str = "train",                # train | prefill | decode
+    caches: Optional[Tree] = None,      # decode: consumed
+    pos: Optional[jax.Array] = None,    # decode: () int32 position
+    patch_embeds: Optional[jax.Array] = None,   # vlm: (B, P, d)
+    max_len: int = 0,                   # prefill: decode-cache capacity
+    remat: bool = True,
+):
+    """Returns (logits, new_caches, aux). new_caches is None in train mode."""
+    assert mode in ("train", "prefill", "decode")
+    x = embed(params["embed"], tokens, COMPUTE_DTYPE)
+    if cfg.num_patches and patch_embeds is not None:
+        pe = jnp.einsum("bpd,de->bpe", patch_embeds.astype(COMPUTE_DTYPE),
+                        cdt(params["patch_proj"]["w"]))
+        x = jnp.concatenate([pe, x], axis=1)
+    b, s, _ = x.shape
+    if mode == "decode":
+        positions = None
+        assert pos is not None and caches is not None
+    else:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+        max_len = max_len or s
+
+    def group_fn(carry, xs):
+        x, aux_in = carry
+        gp, gcache = xs
+        x = runtime.constrain(x, ("batch", "act_seq", None))
+        x, ncache, aux = _apply_group(gp, x, cfg, mode, gcache, pos,
+                                      positions, max_len)
+        x = runtime.constrain(x, ("batch", "act_seq", None))
+        return (x, aux_in + aux), ncache
+
+    if mode == "train" and remat:
+        group_fn = jax.checkpoint(
+            group_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    unroll = runtime.scan_unroll(cfg.n_groups)
+    if mode == "train":
+        (x, aux), _ = jax.lax.scan(
+            lambda c, gp: group_fn(c, (gp, None)),
+            (x, jnp.float32(0.0)), params["groups"], unroll=unroll)
+        new_group_caches = None
+    elif mode == "prefill":
+        (x, aux), stacked = jax.lax.scan(
+            lambda c, gp: group_fn(c, (gp, None)),
+            (x, jnp.float32(0.0)), params["groups"], unroll=unroll)
+        new_group_caches = {
+            f"g{j}": jax.tree.map(lambda a: a[j], stacked)
+            for j in range(cfg.n_groups)}
+    else:       # decode: unrolled so cache updates alias donated buffers
+        aux = jnp.float32(0.0)
+        new_group_caches = {}
+        for j in range(cfg.n_groups):
+            gp = jax.tree.map(lambda a: a[j], params["groups"])
+            gc = caches["groups"][f"g{j}"]
+            x, ncache, aux_g = _apply_group(gp, x, cfg, mode, gc, pos,
+                                            positions, max_len)
+            new_group_caches[f"g{j}"] = ncache
+            aux = aux + aux_g
+
+    new_caches: Optional[dict] = None
+    if mode != "train":
+        new_caches = {"groups": new_group_caches}
+
+    if cfg.tail:
+        tail_caches = {}
+        for i, ls in enumerate(cfg.tail):
+            tp = params["tail"][f"tail{i}"]
+            tc = (caches["tail"][f"tail{i}"]
+                  if (caches is not None and "tail" in caches) else None)
+            x, nc, a = apply_block(tp, x, cfg, ls, mode, tc, pos, positions,
+                                   max_len)
+            aux = aux + a
+            tail_caches[f"tail{i}"] = nc
+        if new_caches is not None:
+            new_caches["tail"] = tail_caches
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            cdt(params["embed"]["table"], x.dtype))
+    else:
+        logits = unembed(params["unembed"], x)
+    logits = runtime.constrain(logits, ("batch", "seq", "vocab"))
+    return logits, new_caches, aux

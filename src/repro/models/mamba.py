@@ -1,0 +1,171 @@
+"""Mamba (S6) mixer — parallel associative-scan form for train/prefill,
+O(1) recurrent form for decode (this is what makes jamba long_500k-able).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import runtime
+from repro.models.layers import cdt
+from repro.models.spec import ParamSpec
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(cfg.d_model // 16, 1)
+    return d_in, dt_rank, cfg.mamba_d_state, cfg.mamba_d_conv
+
+
+def mamba_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_in, dt_rank, n, k = _dims(cfg)
+    return {
+        "w_in": ParamSpec((d, 2 * d_in), ("embed", "inner")),
+        "conv_w": ParamSpec((k, d_in), ("conv", "inner"), scale=1.0),
+        "conv_b": ParamSpec((d_in,), ("inner",), init="zeros"),
+        "x_proj": ParamSpec((d_in, dt_rank + 2 * n), ("inner", None)),
+        "dt_w": ParamSpec((dt_rank, d_in), (None, "inner")),
+        "dt_bias": ParamSpec((d_in,), ("inner",), init="ones"),
+        "a_log": ParamSpec((d_in, n), ("inner", "state"), init="ones"),
+        "d_skip": ParamSpec((d_in,), ("inner",), init="ones"),
+        "w_out": ParamSpec((d_in, d), ("inner", "embed")),
+    }
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array      # (B, d_in, N)
+    conv: jax.Array     # (B, k-1, d_in) — trailing inputs for the causal conv
+
+
+def state_specs(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    d_in, _, n, k = _dims(cfg)
+    return MambaState(
+        ssm=ParamSpec((batch, d_in, n), ("batch", "inner", "state"),
+                      init="zeros", dtype=dtype),
+        conv=ParamSpec((batch, k - 1, d_in), ("batch", "conv", "inner"),
+                       init="zeros", dtype=dtype),
+    )
+
+
+def _conv1d_causal(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B, S, C), w (k, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b[None, None, :].astype(out.dtype)
+
+
+def _ssm_inputs(p, x_c: jax.Array, cfg: ArchConfig):
+    d_in, dt_rank, n, _ = _dims(cfg)
+    x_dbl = jnp.einsum("bsc,cr->bsr", x_c, cdt(p["x_proj"], x_c.dtype))
+    dt, b_mat, c_mat = jnp.split(x_dbl, [dt_rank, dt_rank + n], axis=-1)
+    dt = jnp.einsum("bsr,rc->bsc", dt, cdt(p["dt_w"], x_c.dtype))
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))               # (d_in, n)
+    a_bar = jnp.exp(dt[..., None] * a[None, None, :, :])       # (B,S,d_in,n)
+    bx = (dt[..., None] * b_mat[:, :, None, :].astype(jnp.float32)
+          * x_c[..., None].astype(jnp.float32))                # (B,S,d_in,n)
+    return a_bar, bx, c_mat
+
+
+def _pick_chunk(s: int, target: int = 1024) -> int:
+    if s <= target:
+        return s
+    c = target
+    while s % c != 0:
+        c //= 2
+    return max(c, 1)
+
+
+def mamba_apply(p: dict, x: jax.Array, cfg: ArchConfig,
+                return_state: bool = False):
+    """Full-sequence form. x (B, S, d).
+
+    Chunked along the sequence: the (B, T, d_in, N) discretised-SSM tensors
+    are only ever materialised for one chunk; the SSM state is carried across
+    chunks via the cumulative decay from the in-chunk associative scan. This
+    bounds the working set at ~chunk/seq of the naive parallel form (the
+    classic Mamba memory blow-up).
+    """
+    b, s, _ = x.shape
+    d_in, _, n, k = _dims(cfg)
+    xz = jnp.einsum("bsd,dc->bsc", x, cdt(p["w_in"], x.dtype))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(_conv1d_causal(x_in, cdt(p["conv_w"], x.dtype),
+                                     p["conv_b"]))
+
+    chunk = _pick_chunk(s)
+    n_chunks = s // chunk
+    xc_chunks = x_c.reshape(b, n_chunks, chunk, d_in).swapaxes(0, 1)
+    z_chunks = z.reshape(b, n_chunks, chunk, d_in).swapaxes(0, 1)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def body(h_in, inp):
+        xc_c, z_c = inp
+        a_bar, bx, c_mat = _ssm_inputs(p, xc_c, cfg)
+        a_cum, h_local = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+        h = h_local + a_cum * h_in[:, None]                    # (B,T,d_in,n)
+        y = jnp.einsum("btcn,btn->btc", h.astype(x.dtype), c_mat)
+        y = y + p["d_skip"].astype(x.dtype)[None, None, :] * xc_c
+        y = y * jax.nn.silu(z_c)
+        return h[:, -1], y
+
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    init = jnp.zeros((b, d_in, n), jnp.float32)
+    if n_chunks == 1:
+        h_last, y = body(init, (xc_chunks[0], z_chunks[0]))
+        y = y[None]
+    else:
+        h_last, y = jax.lax.scan(body, init, (xc_chunks, z_chunks),
+                                 unroll=runtime.scan_unroll(n_chunks))
+    y = y.swapaxes(0, 1).reshape(b, s, d_in)
+    out = jnp.einsum("bsc,cd->bsd", y, cdt(p["w_out"], x.dtype))
+    if not return_state:
+        return out, None
+    state = MambaState(ssm=h_last.astype(jnp.float32),
+                       conv=_conv_tail(x_in, k))
+    return out, state
+
+
+def _conv_tail(x_in: jax.Array, k: int) -> jax.Array:
+    s = x_in.shape[1]
+    if s >= k - 1:
+        return x_in[:, s - (k - 1):].astype(jnp.float32)
+    return jnp.pad(x_in, ((0, 0), (k - 1 - s, 0), (0, 0))).astype(jnp.float32)
+
+
+def mamba_step(p: dict, x: jax.Array, cfg: ArchConfig, state: MambaState):
+    """One-token decode. x (B, 1, d) -> (out (B,1,d), new state)."""
+    d_in, _, n, k = _dims(cfg)
+    xz = jnp.einsum("bsd,dc->bsc", x, cdt(p["w_in"], x.dtype))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    # causal conv over (cached k-1 inputs ++ current)
+    win = jnp.concatenate([state.conv.astype(x.dtype), x_in], axis=1)  # (B,k,C)
+    x_c = jnp.einsum("bkc,kc->bc", win, cdt(p["conv_w"], x.dtype))
+    x_c = jax.nn.silu(x_c + p["conv_b"].astype(x.dtype))[:, None, :]
+    a_bar, bx, c_mat = _ssm_inputs(p, x_c, cfg)
+    h = a_bar[:, 0] * state.ssm + bx[:, 0]                     # (B,d_in,n) fp32
+    y = jnp.einsum("bcn,bn->bc", h.astype(x.dtype), c_mat[:, 0])
+    y = y + p["d_skip"].astype(x.dtype)[None, :] * x_c[:, 0]
+    y = (y * jax.nn.silu(z[:, 0]))[:, None, :]
+    out = jnp.einsum("bsc,cd->bsd", y, cdt(p["w_out"], x.dtype))
+    new_state = MambaState(ssm=h,
+                           conv=jnp.concatenate(
+                               [state.conv[:, 1:],
+                                x_in.astype(jnp.float32)], axis=1))
+    return out, new_state

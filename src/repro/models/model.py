@@ -1,0 +1,112 @@
+"""Unified model facade used by train/serve/dryrun.
+
+One object per arch exposing spec trees (params, caches, batch) and the three
+step bodies (loss / prefill / decode_step). The launch layer turns these into
+pjit-ed programs with shardings; smoke tests call them directly on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec as encdec_lib
+from repro.models import lm as lm_lib
+from repro.models import spec as spec_lib
+from repro.models.layers import softmax_xent
+from repro.models.spec import ParamSpec
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ----- specs ----------------------------------------------------------
+    def param_specs(self) -> Tree:
+        if self.cfg.is_encdec:
+            return encdec_lib.param_specs(self.cfg)
+        return lm_lib.param_specs(self.cfg)
+
+    def init_params(self, key: jax.Array) -> Tree:
+        return spec_lib.tree_init(self.param_specs(), key)
+
+    def cache_specs(self, batch: int, max_len: int) -> Tree:
+        if self.cfg.is_encdec:
+            return encdec_lib.cache_specs(self.cfg, batch, max_len)
+        return lm_lib.cache_specs(self.cfg, batch, max_len)
+
+    def init_cache(self, batch: int, max_len: int) -> Tree:
+        return spec_lib.tree_init(self.cache_specs(batch, max_len),
+                                  jax.random.PRNGKey(0))
+
+    def batch_specs(self, shape: ShapeConfig) -> Dict[str, ParamSpec]:
+        """Abstract input specs per shape kind (shardings added by launch)."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        out: Dict[str, ParamSpec] = {}
+        if shape.kind == "decode":
+            out["tokens"] = ParamSpec((b, 1), ("batch", "seq"),
+                                      dtype=jnp.int32)
+            return out
+        s_text = s - cfg.num_patches if cfg.num_patches else s
+        out["tokens"] = ParamSpec((b, s_text), ("batch", "seq"),
+                                  dtype=jnp.int32)
+        if shape.kind == "train":
+            out["labels"] = ParamSpec((b, s_text), ("batch", "seq"),
+                                      dtype=jnp.int32)
+        if cfg.num_patches:
+            out["patch_embeds"] = ParamSpec(
+                (b, cfg.num_patches, cfg.d_model), ("batch", "seq", "embed"),
+                dtype=jnp.bfloat16)
+        if cfg.is_encdec:
+            out["frames"] = ParamSpec(
+                (b, cfg.encoder_frames, cfg.d_model),
+                ("batch", "frames", "embed"), dtype=jnp.bfloat16)
+        return out
+
+    # ----- step bodies ----------------------------------------------------
+    def _fwd(self, params, batch, mode, caches=None, pos=None, max_len=0,
+             remat=True):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return encdec_lib.forward(
+                params, cfg, batch["tokens"], batch.get("frames"),
+                mode=mode, caches=caches, pos=pos, max_len=max_len,
+                remat=remat)
+        return lm_lib.forward(
+            params, cfg, batch["tokens"], mode=mode, caches=caches, pos=pos,
+            patch_embeds=batch.get("patch_embeds"), max_len=max_len,
+            remat=remat)
+
+    def loss(self, params, batch, aux_weight: float = 0.01,
+             remat: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        logits, _, aux = self._fwd(params, batch, "train", remat=remat)
+        labels = batch["labels"]
+        if cfg.num_patches:     # logits cover [patches ++ text]
+            pad = jnp.full((labels.shape[0], cfg.num_patches), -1, jnp.int32)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        ce, n_tok = softmax_xent(logits, labels, cfg.vocab_size)
+        total = ce + aux_weight * aux
+        return total, {"ce": ce, "aux": aux, "tokens": n_tok}
+
+    def prefill(self, params, batch, max_len: int):
+        logits, caches, _ = self._fwd(params, batch, "prefill",
+                                      max_len=max_len, remat=False)
+        return logits[:, -1:], caches
+
+    def decode_step(self, params, caches, tokens, pos):
+        """One token for the whole batch at absolute position ``pos``."""
+        logits, new_caches, _ = self._fwd(
+            params, {"tokens": tokens}, "decode", caches=caches, pos=pos,
+            remat=False)
+        return logits, new_caches
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,94 @@
+"""Mixture-of-Experts MLP (GShard capacity dispatch, grouped).
+
+Tokens are partitioned into groups of ``moe_group_size``; dispatch/combine
+one-hots are built per group so the (tokens, experts, capacity) intermediates
+stay ~MBs instead of GBs (the group size is a memory/quality lever recorded in
+the roofline hillclimb). Dense einsum dispatch — no data-dependent shapes, so
+it lowers cleanly under pjit; experts can be tensor-sharded over ``ff``
+(mixtral-style, default) or expert-sharded over ``model`` (granite: 40 tiny
+experts — set rules {"expert": "model", "ff": None} for that arch).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import cdt
+from repro.models.spec import ParamSpec
+
+
+def moe_specs(cfg: ArchConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    return {
+        "router": ParamSpec((d, e), ("embed", "expert")),
+        "wi_gate": ParamSpec((e, d, f), ("expert", "embed", "ff")),
+        "wi_up": ParamSpec((e, d, f), ("expert", "embed", "ff")),
+        "wo": ParamSpec((e, f, d), ("expert", "ff", "embed")),
+    }
+
+
+def _capacity(tokens_per_group: int, cfg: ArchConfig) -> int:
+    cap = int(tokens_per_group * cfg.top_k * cfg.capacity_factor
+              / cfg.n_experts)
+    return max(cap, cfg.top_k)
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ArchConfig,
+              act: str = "silu") -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (out (B, S, d), aux load-balancing loss ())."""
+    b, s, d = x.shape
+    t = b * s
+    g_size = min(cfg.moe_group_size, t)
+    pad = (-t) % g_size
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(g_size, cfg)
+
+    xf = x.reshape(t, d)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    valid = jnp.pad(jnp.ones((t,), jnp.float32), (0, pad))
+    g = xf.shape[0] // g_size
+    xg = xf.reshape(g, g_size, d)
+    valid = valid.reshape(g, g_size)
+    logits = jnp.einsum("gtd,de->gte", xg,
+                        cdt(p["router"], x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (g, t, e)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (g, t, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    # (g, t, k, e) one-hot of chosen experts; padded rows select nothing
+    sel = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32) \
+        * valid[..., None, None]
+    # buffer slot per (token, choice): tokens ordered, choices nested
+    flat_sel = sel.reshape(g, g_size * k, e)
+    pos = jnp.cumsum(flat_sel, axis=1) - flat_sel               # exclusive
+    pos = (pos * flat_sel).sum(-1).reshape(g, g_size, k)        # (g, t, k)
+    within_cap = pos < cap
+    slot = jnp.where(within_cap, pos, 0).astype(jnp.int32)
+
+    slot_oh = jax.nn.one_hot(slot, cap, dtype=x.dtype) \
+        * within_cap[..., None].astype(x.dtype)                 # (g, t, k, cap)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", sel.astype(x.dtype), slot_oh)
+    combine = jnp.einsum("gtke,gtkc->gtec",
+                         (sel * gate_vals[..., None]).astype(x.dtype), slot_oh)
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)      # (g, e, cap, d)
+    gate = jnp.einsum("gecd,edf->gecf", expert_in, cdt(p["wi_gate"], x.dtype))
+    up = jnp.einsum("gecd,edf->gecf", expert_in, cdt(p["wi_up"], x.dtype))
+    a = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate, approximate=True)
+    expert_out = jnp.einsum("gecf,efd->gecd", a * up, cdt(p["wo"], x.dtype))
+    out = jnp.einsum("gtec,gecd->gtd", combine, expert_out)
+    out = out.reshape(-1, d)[:t]
+
+    # Switch/GShard load-balance aux: E * sum_e fraction_e * mean_prob_e
+    frac = sel[..., 0, :] if k == 1 else sel.sum(2).clip(0, 1)  # (g, t, e)
+    denom = jnp.maximum(valid.sum(), 1.0)
+    frac = frac.sum(axis=(0, 1)) / denom
+    mean_prob = (probs * valid[..., None]).sum(axis=(0, 1)) / denom
+    aux = (frac * mean_prob).sum() * e
+
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,91 @@
+"""Model runtime context: sharding constraints + scan-unroll policy.
+
+Models are mesh-agnostic; the launch layer installs a context
+(mesh + logical->mesh rules) and the model code pins activation shardings at
+block boundaries via :func:`constrain`. Without a context every call is a
+no-op (CPU smoke tests).
+
+``unroll_scans`` exists because XLA's ``cost_analysis`` counts while-loop
+bodies ONCE (verified empirically): the canonical dry-run compiles the scanned
+program (compact HLO, true memory analysis), and a second roofline pass
+compiles with scans unrolled so FLOPs/bytes/collective counts are exact.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.models import spec as spec_lib
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Mesh
+    rules: Mapping[str, Any]
+    unroll_scans: bool = False
+
+
+def current() -> Optional[ShardingCtx]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, rules: Mapping[str, Any],
+                 unroll_scans: bool = False):
+    prev = current()
+    _STATE.ctx = ShardingCtx(mesh=mesh, rules=rules,
+                             unroll_scans=unroll_scans)
+    try:
+        yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def constrain(x: jax.Array, logical: Tuple[Optional[str], ...]) -> jax.Array:
+    """Pin x's sharding per logical axes under the active context."""
+    ctx = current()
+    if ctx is None or x is None:
+        return x
+    pspec = spec_lib.partition_spec(logical, x.shape, ctx.mesh, ctx.rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, pspec))
+
+
+def scan_unroll(length: int) -> int:
+    """lax.scan unroll amount: full unroll in roofline mode, 1 otherwise."""
+    ctx = current()
+    if ctx is not None and ctx.unroll_scans:
+        return max(length, 1)
+    return 1
+
+
+def gather_weight(w: jax.Array, logical: Tuple[Optional[str], ...]) -> jax.Array:
+    """Hillclimb lever '_gather_weights': pin the *compute-time* weight
+    sharding to model-axes-only (strip FSDP axes).
+
+    With FSDP (weights sharded over 'data') GSPMD sometimes resolves the
+    sharded-contraction ambiguity by partial-summing *activations* and
+    all-reducing them — catastrophically more wire bytes than gathering the
+    (bf16-cast) weight. This constraint forces the ZeRO-3 semantics: cast to
+    bf16 first, all-gather the weight over 'data', compute with full weight.
+    """
+    ctx = current()
+    if ctx is None or not ctx.rules.get("_gather_weights"):
+        return w
+    rules = {k: v for k, v in ctx.rules.items()}
+    for k, v in list(rules.items()):
+        if v is None or k.startswith("_"):
+            continue
+        axes = (v,) if isinstance(v, str) else tuple(v)
+        axes = tuple(a for a in axes if a != "data")
+        rules[k] = (axes[0] if len(axes) == 1 else (axes or None))
+    pspec = spec_lib.partition_spec(logical, w.shape, ctx.mesh, rules)
+    return jax.lax.with_sharding_constraint(
+        w, NamedSharding(ctx.mesh, pspec))

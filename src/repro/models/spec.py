@@ -1,0 +1,198 @@
+"""Parameter specification system.
+
+Single source of truth for every weight: its shape, dtype, initializer and
+*logical axes*. From one spec tree we derive
+
+* real initialized params (smoke tests / real training),
+* abstract ``ShapeDtypeStruct`` trees (dry-run lowering — no allocation),
+* ``PartitionSpec`` trees via logical->mesh axis rules (the sharding system).
+
+Logical axis vocabulary (rules map these to mesh axes or None):
+
+  batch      global batch                      -> ("pod", "data")
+  seq        sequence                          -> None (SP = hillclimb lever)
+  embed      d_model / input features          -> "data"   (FSDP)
+  heads      query heads                       -> "model"  (TP)
+  kv_heads   kv heads (GQA, < TP size)         -> None (replicated; cheap)
+  head_dim   per-head dim                      -> None
+  ff         MLP hidden                        -> "model"  (TP)
+  vocab      vocab rows                        -> "model"  (TP; sharded CE)
+  expert     MoE experts                       -> None (TP on ff) or "model" (EP)
+  layers     stacked layer groups              -> None
+  kv_seq     KV-cache sequence (decode)        -> "model"  (flash-decoding style)
+  conv / state / misc small dims               -> None
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]      # one logical name per dim
+    init: str = "normal"                    # normal|zeros|ones|embed
+    dtype: Any = jnp.float32
+    scale: float = 1.0                      # stddev multiplier for "normal"
+    fan_in: Optional[int] = None            # preserved across stack_specs
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+# ---------------------------------------------------------------------------
+# rules
+
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    # residual-stream sequence dim at layer boundaries; map to "model" for
+    # Megatron-style sequence parallelism (shrinks the remat carry stack by
+    # the TP width at the cost of per-layer all-gather/reduce-scatter)
+    "act_seq": None,
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "expert": None,
+    "layers": None,
+    "kv_seq": "model",
+    "inner": "model",     # mamba/xlstm inner dim
+    "state": None,
+    "conv": None,
+    "frames": None,
+}
+
+
+def resolve_rules(overrides: Optional[Mapping[str, Any]] = None) -> Dict[str, Any]:
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def _mesh_axes_of(rules: Mapping[str, Any], logical: Optional[str],
+                  dim: int, mesh: Mesh) -> Any:
+    if logical is None:
+        return None
+    axes = rules.get(logical, None)
+    if axes is None:
+        return None
+    # drop axes that don't exist in this mesh (e.g. "pod" on single-pod)
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    # only shard if the dim is divisible by the mesh extent (avoids padding
+    # surprises; non-divisible dims fall back to replication)
+    extent = math.prod(mesh.shape[a] for a in axes)
+    if dim % extent != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def partition_spec(spec_logical: Tuple[Optional[str], ...],
+                   shape: Tuple[int, ...],
+                   mesh: Mesh,
+                   rules: Mapping[str, Any]) -> PartitionSpec:
+    used: set = set()
+    out = []
+    for dim, logical in zip(shape, spec_logical):
+        ax = _mesh_axes_of(rules, logical, dim, mesh)
+        # a mesh axis may appear at most once per PartitionSpec
+        if ax is not None:
+            flat = (ax,) if isinstance(ax, str) else tuple(ax)
+            if any(a in used for a in flat):
+                ax = None
+            else:
+                used.update(flat)
+        out.append(ax)
+    return PartitionSpec(*out)
+
+
+# ---------------------------------------------------------------------------
+# tree derivations
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_shapes(specs: Tree, dtype_override=None) -> Tree:
+    """Spec tree -> ShapeDtypeStruct tree (for .lower / eval_shape)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype_override or s.dtype),
+        specs, is_leaf=is_spec)
+
+
+def tree_pspecs(specs: Tree, mesh: Mesh, rules: Mapping[str, Any]) -> Tree:
+    return jax.tree.map(
+        lambda s: partition_spec(s.logical, s.shape, mesh, rules),
+        specs, is_leaf=is_spec)
+
+
+def tree_shardings(specs: Tree, mesh: Mesh, rules: Mapping[str, Any]) -> Tree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, partition_spec(s.logical, s.shape, mesh,
+                                                     rules)),
+        specs, is_leaf=is_spec)
+
+
+def tree_abstract(specs: Tree, mesh: Mesh, rules: Mapping[str, Any]) -> Tree:
+    """ShapeDtypeStructs carrying shardings — the dry-run's param stand-ins."""
+    def mk(s: ParamSpec):
+        sh = NamedSharding(mesh, partition_spec(s.logical, s.shape, mesh, rules))
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+    return jax.tree.map(mk, specs, is_leaf=is_spec)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.fan_in
+    if fan_in is None:
+        fan_in = spec.shape[0] if len(spec.shape) >= 2 else spec.shape[-1]
+    if spec.init == "embed":
+        std = 1.0
+    else:
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+
+
+def tree_init(specs: Tree, key: jax.Array) -> Tree:
+    """Initialize real parameters (deterministic per-leaf key folding)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    out = []
+    for i, leaf in enumerate(leaves):
+        out.append(_init_leaf(leaf, jax.random.fold_in(key, i)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def stack_specs(spec: Tree, n: int) -> Tree:
+    """Add a leading ``layers`` axis of size n to every leaf (scan stacking).
+    Preserves the pre-stack fan_in so initializers stay correctly scaled."""
+    def mk(s: ParamSpec) -> ParamSpec:
+        fan = s.fan_in
+        if fan is None:
+            fan = s.shape[0] if len(s.shape) >= 2 else s.shape[-1]
+        return ParamSpec((n,) + s.shape, ("layers",) + s.logical,
+                         init=s.init, dtype=s.dtype, scale=s.scale,
+                         fan_in=fan)
+    return jax.tree.map(mk, spec, is_leaf=is_spec)
+
+
+def count_params(specs: Tree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(math.prod(s.shape) for s in leaves)

@@ -1,0 +1,337 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory, strictly recurrent).
+
+* mLSTM train/prefill uses the chunked quadratic form (gate-weighted dot
+  products, chunked over query blocks like attention); decode uses the O(1)
+  recurrent form with the stabilized (C, n, m) state — the two are exactly
+  equivalent (the running max m_t telescopes to max_s(F_t - F_s + i_s)).
+* sLSTM is a lax.scan over time with per-head block-diagonal recurrence; its
+  input projections are hoisted out of the scan (one big matmul) so only the
+  recurrent matmul is serial.
+
+Both blocks carry their own projections (the assigned config has d_ff = 0):
+mLSTM up-projects by ``xlstm_proj_factor`` (2.0), sLSTM appends a gated FFN of
+factor ``xlstm_slstm_proj`` (4/3).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import runtime
+from repro.models.layers import cdt, rmsnorm_head
+from repro.models.spec import ParamSpec
+
+NEG = jnp.float32(-2.0 ** 30)
+
+
+def _mlstm_dims(cfg: ArchConfig):
+    d_in = int(cfg.xlstm_proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    dh = d_in // h
+    return d_in, h, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+
+def mlstm_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_in, h, dh = _mlstm_dims(cfg)
+    k = 4  # causal conv width on the q/k path
+    return {
+        "w_up": ParamSpec((d, 2 * d_in), ("embed", "inner")),
+        "conv_w": ParamSpec((k, d_in), ("conv", "inner")),
+        "conv_b": ParamSpec((d_in,), ("inner",), init="zeros"),
+        "w_q": ParamSpec((d_in, d_in), (None, "inner")),
+        "w_k": ParamSpec((d_in, d_in), (None, "inner")),
+        "w_v": ParamSpec((d_in, d_in), (None, "inner")),
+        "w_i": ParamSpec((d_in, h), ("inner", "heads")),
+        "b_i": ParamSpec((h,), ("heads",), init="zeros"),
+        "w_f": ParamSpec((d_in, h), ("inner", "heads")),
+        "b_f": ParamSpec((h,), ("heads",), init="ones"),
+        "out_norm": ParamSpec((dh,), (None,), init="ones"),
+        "w_down": ParamSpec((d_in, d), ("inner", "embed")),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array      # (B, H, dh, dh)
+    n: jax.Array      # (B, H, dh)
+    m: jax.Array      # (B, H)
+    conv: jax.Array   # (B, k-1, d_in)
+
+
+def mlstm_state_specs(cfg: ArchConfig, batch: int) -> MLSTMState:
+    d_in, h, dh = _mlstm_dims(cfg)
+    return MLSTMState(
+        c=ParamSpec((batch, h, dh, dh), ("batch", "heads", "head_dim", None),
+                    init="zeros"),
+        n=ParamSpec((batch, h, dh), ("batch", "heads", "head_dim"),
+                    init="zeros"),
+        m=ParamSpec((batch, h), ("batch", "heads"), init="zeros"),
+        conv=ParamSpec((batch, 3, d_in), ("batch", "conv", "inner"),
+                       init="zeros"),
+    )
+
+
+def _conv1d_causal(x, w, b):
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :], window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b[None, None, :].astype(out.dtype)
+
+
+def _mlstm_qkvif(p, x_m, cfg):
+    """Projections shared by the parallel and recurrent paths."""
+    d_in, h, dh = _mlstm_dims(cfg)
+    x_conv = jax.nn.silu(_conv1d_causal(x_m, cdt(p["conv_w"], x_m.dtype),
+                                        p["conv_b"]))
+    q = jnp.einsum("bsc,ce->bse", x_conv, cdt(p["w_q"], x_m.dtype))
+    k = jnp.einsum("bsc,ce->bse", x_conv, cdt(p["w_k"], x_m.dtype))
+    v = jnp.einsum("bsc,ce->bse", x_m, cdt(p["w_v"], x_m.dtype))
+    b, s, _ = x_m.shape
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, h, dh) / math.sqrt(dh)
+    v = v.reshape(b, s, h, dh)
+    i_pre = (jnp.einsum("bsc,ch->bsh", x_conv, cdt(p["w_i"], x_m.dtype))
+             .astype(jnp.float32) + p["b_i"].astype(jnp.float32))
+    f_pre = (jnp.einsum("bsc,ch->bsh", x_conv, cdt(p["w_f"], x_m.dtype))
+             .astype(jnp.float32) + p["b_f"].astype(jnp.float32))
+    log_f = jax.nn.log_sigmoid(f_pre)        # (B, S, H)
+    return q, k, v, i_pre, log_f, x_conv
+
+
+def _pick_chunk(s, target=256):
+    if s <= target:
+        return s
+    c = target
+    while s % c != 0:
+        c //= 2
+    return max(c, 1)
+
+
+def mlstm_apply(p: dict, x: jax.Array, cfg: ArchConfig,
+                return_state: bool = False):
+    """Full-sequence mLSTM block. x (B, S, d) (pre-normed by caller)."""
+    b, s, d = x.shape
+    d_in, h, dh = _mlstm_dims(cfg)
+    xz = jnp.einsum("bsd,dc->bsc", x, cdt(p["w_up"], x.dtype))
+    x_m, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, i_pre, log_f, _ = _mlstm_qkvif(p, x_m, cfg)
+    f_cum = jnp.cumsum(log_f, axis=1)                       # (B,S,H) fp32
+
+    chunk = _pick_chunk(s)
+    n_chunks = s // chunk
+    qs = q.reshape(b, n_chunks, chunk, h, dh).swapaxes(0, 1)
+
+    def one_chunk(ci, q_c):
+        r0 = ci * chunk
+        f_t = jax.lax.dynamic_slice_in_dim(f_cum, r0, chunk, axis=1)
+        dmat = (f_t[:, :, None, :] - f_cum[:, None, :, :]
+                + i_pre[:, None, :, :])                      # (B,T,S,H)
+        rows = r0 + jnp.arange(chunk)[:, None]
+        cols = jnp.arange(s)[None, :]
+        dmat = jnp.where((cols <= rows)[None, :, :, None], dmat, NEG)
+        m = dmat.max(axis=2)                                 # (B,T,H)
+        wgt = jnp.exp(dmat - m[:, :, None, :])               # (B,T,S,H)
+        scores = jnp.einsum("bthk,bshk->btsh", q_c, k).astype(jnp.float32)
+        wsc = scores * wgt
+        # stabilized normalizer |q.n| floored by exp(-m); the extra 1e-6
+        # floor prevents inf/NaN grads when both underflow (official xLSTM
+        # impl uses the same epsilon)
+        denom = jnp.maximum(jnp.maximum(jnp.abs(wsc.sum(axis=2)),
+                                        jnp.exp(-m)), 1e-6)   # (B,T,H)
+        out = jnp.einsum("btsh,bshk->bthk", wsc.astype(x.dtype),
+                         v) / denom[..., None].astype(x.dtype)
+        return out
+
+    one_chunk = jax.checkpoint(
+        one_chunk, policy=jax.checkpoint_policies.nothing_saveable)
+    if n_chunks == 1:
+        ctx = one_chunk(jnp.int32(0), qs[0])[None]
+    else:
+        _, ctx = jax.lax.scan(
+            lambda _, inp: (None, one_chunk(*inp)), None,
+            (jnp.arange(n_chunks, dtype=jnp.int32), qs),
+            unroll=runtime.scan_unroll(n_chunks))
+    ctx = ctx.swapaxes(0, 1).reshape(b, s, h, dh)
+    ctx = rmsnorm_head(p["out_norm"], ctx, cfg.norm_eps)
+    y = ctx.reshape(b, s, d_in) * jax.nn.silu(z)
+    out = jnp.einsum("bsc,cd->bsd", y, cdt(p["w_down"], x.dtype))
+    if not return_state:
+        return out, None
+    # closed-form final recurrent state (telescoped running max)
+    f_last = f_cum[:, -1]                                    # (B,H)
+    wexp = f_last[:, None, :] - f_cum + i_pre                # (B,S,H)
+    m_fin = wexp.max(axis=1)                                 # (B,H)
+    wgt = jnp.exp(wexp - m_fin[:, None, :]).astype(jnp.float32)
+    c_fin = jnp.einsum("bsh,bshk,bshe->bhke", wgt,
+                       k.astype(jnp.float32), v.astype(jnp.float32))
+    n_fin = jnp.einsum("bsh,bshk->bhk", wgt, k.astype(jnp.float32))
+    x_in_tail = _conv_tail_inputs(x_m)
+    state = MLSTMState(c=c_fin, n=n_fin, m=m_fin, conv=x_in_tail)
+    return out, state
+
+
+def _conv_tail_inputs(x_m: jax.Array, k: int = 4) -> jax.Array:
+    s = x_m.shape[1]
+    if s >= k - 1:
+        return x_m[:, s - (k - 1):].astype(jnp.float32)
+    return jnp.pad(x_m, ((0, 0), (k - 1 - s, 0), (0, 0))).astype(jnp.float32)
+
+
+def mlstm_step(p: dict, x: jax.Array, cfg: ArchConfig, state: MLSTMState):
+    """One-token recurrent mLSTM. x (B, 1, d)."""
+    b, _, d = x.shape
+    d_in, h, dh = _mlstm_dims(cfg)
+    xz = jnp.einsum("bsd,dc->bsc", x, cdt(p["w_up"], x.dtype))
+    x_m, z = jnp.split(xz, 2, axis=-1)
+    win = jnp.concatenate([state.conv.astype(x.dtype), x_m], axis=1)  # (B,4,C)
+    x_conv = jnp.einsum("bkc,kc->bc", win, cdt(p["conv_w"], x.dtype))
+    x_conv = jax.nn.silu(x_conv + p["conv_b"].astype(x.dtype))
+    q = (x_conv @ cdt(p["w_q"], x.dtype)).reshape(b, h, dh)
+    k = (x_conv @ cdt(p["w_k"], x.dtype)).reshape(b, h, dh) / math.sqrt(dh)
+    v = (x_m[:, 0] @ cdt(p["w_v"], x.dtype)).reshape(b, h, dh)
+    i_t = (x_conv @ cdt(p["w_i"], x.dtype)).astype(jnp.float32) \
+        + p["b_i"].astype(jnp.float32)
+    f_t = jax.nn.log_sigmoid(
+        (x_conv @ cdt(p["w_f"], x.dtype)).astype(jnp.float32)
+        + p["b_f"].astype(jnp.float32))                      # (B,H)
+
+    m_new = jnp.maximum(f_t + state.m, i_t)
+    decay = jnp.exp(f_t + state.m - m_new)
+    inject = jnp.exp(i_t - m_new)
+    kv = (k.astype(jnp.float32)[..., :, None]
+          * v.astype(jnp.float32)[..., None, :])             # (B,H,dh,dh)
+    c_new = decay[..., None, None] * state.c + inject[..., None, None] * kv
+    n_new = decay[..., None] * state.n + inject[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhke->bhe", q.astype(jnp.float32), c_new)
+    den = jnp.maximum(jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), n_new)),
+        jnp.exp(-m_new)), 1e-6)
+    ctx = (num / den[..., None]).astype(x.dtype)             # (B,H,dh)
+    ctx = rmsnorm_head(p["out_norm"], ctx, cfg.norm_eps)
+    y = ctx.reshape(b, 1, d_in) * jax.nn.silu(z)
+    out = jnp.einsum("bsc,cd->bsd", y, cdt(p["w_down"], x.dtype))
+    new_state = MLSTMState(
+        c=c_new, n=n_new, m=m_new,
+        conv=jnp.concatenate([state.conv[:, 1:], x_m.astype(jnp.float32)],
+                             axis=1))
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+
+def _slstm_dims(cfg: ArchConfig):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    ff = int(cfg.xlstm_slstm_proj * cfg.d_model)
+    ff = ((ff + 63) // 64) * 64
+    return h, dh, ff
+
+
+def slstm_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    h, dh, ff = _slstm_dims(cfg)
+    gates = {}
+    for g in ("z", "i", "f", "o"):
+        gates[f"w_{g}"] = ParamSpec((d, h, dh), ("embed", "heads", "head_dim"))
+        gates[f"r_{g}"] = ParamSpec((h, dh, dh), ("heads", "head_dim", None),
+                                    scale=0.5)
+        gates[f"b_{g}"] = ParamSpec((h, dh), ("heads", "head_dim"),
+                                    init="ones" if g == "f" else "zeros")
+    gates["out_norm"] = ParamSpec((dh,), (None,), init="ones")
+    gates["ff_up"] = ParamSpec((d, 2 * ff), ("embed", "ff"))
+    gates["ff_down"] = ParamSpec((ff, d), ("ff", "embed"))
+    gates["ff_norm"] = ParamSpec((d,), (None,), init="ones")
+    return gates
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array      # (B, H, dh)
+    n: jax.Array      # (B, H, dh)
+    hid: jax.Array    # (B, H, dh)
+    m: jax.Array      # (B, H, dh)
+
+
+def slstm_state_specs(cfg: ArchConfig, batch: int) -> SLSTMState:
+    h, dh, _ = _slstm_dims(cfg)
+    mk = lambda: ParamSpec((batch, h, dh), ("batch", "heads", "head_dim"),
+                           init="zeros")
+    return SLSTMState(c=mk(), n=mk(), hid=mk(), m=mk())
+
+
+def _slstm_cell(p, state: SLSTMState, wx, dtype):
+    """One recurrence step. wx: dict of (B,H,dh) pre-projected gate inputs."""
+    r = lambda g: jnp.einsum(
+        "bhd,hde->bhe", state.hid.astype(dtype), cdt(p[f"r_{g}"], dtype)
+    ).astype(jnp.float32)
+    z = jnp.tanh(wx["z"] + r("z"))
+    i_log = wx["i"] + r("i")
+    f_log = jax.nn.log_sigmoid(wx["f"] + r("f"))
+    o = jax.nn.sigmoid(wx["o"] + r("o"))
+    m_new = jnp.maximum(f_log + state.m, i_log)
+    i_p = jnp.exp(i_log - m_new)
+    f_p = jnp.exp(f_log + state.m - m_new)
+    c = f_p * state.c + i_p * z
+    n = f_p * state.n + i_p
+    hid = o * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c=c, n=n, hid=hid, m=m_new)
+
+
+def slstm_apply(p: dict, x: jax.Array, cfg: ArchConfig,
+                return_state: bool = False):
+    """Full-sequence sLSTM block + gated FFN. x (B, S, d) (pre-normed)."""
+    b, s, d = x.shape
+    h, dh, ff = _slstm_dims(cfg)
+    wx = {}
+    for g in ("z", "i", "f", "o"):
+        wx[g] = (jnp.einsum("bsd,dhe->bshe", x, cdt(p[f"w_{g}"], x.dtype))
+                 .astype(jnp.float32) + p[f"b_{g}"].astype(jnp.float32))
+    state0 = SLSTMState(
+        c=jnp.zeros((b, h, dh), jnp.float32),
+        n=jnp.zeros((b, h, dh), jnp.float32),
+        hid=jnp.zeros((b, h, dh), jnp.float32),
+        m=jnp.zeros((b, h, dh), jnp.float32))
+
+    def step(state, wx_t):
+        new = _slstm_cell(p, state, wx_t, x.dtype)
+        return new, new.hid
+
+    wx_t = jax.tree.map(lambda a: a.swapaxes(0, 1), wx)      # (S,B,H,dh)
+    state, hids = jax.lax.scan(step, state0, wx_t)
+    hid = hids.swapaxes(0, 1).astype(x.dtype)                # (B,S,H,dh)
+    hid = rmsnorm_head(p["out_norm"], hid, cfg.norm_eps)
+    y = hid.reshape(b, s, d)
+    return y, (state if return_state else None)
+
+
+def slstm_ffn(p: dict, x: jax.Array) -> jax.Array:
+    """The sLSTM block's own gated FFN sub-layer (pre-normed input)."""
+    up = jnp.einsum("bsd,df->bsf", x, cdt(p["ff_up"], x.dtype))
+    g, u = jnp.split(up, 2, axis=-1)
+    return jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g, approximate=True) * u,
+                      cdt(p["ff_down"], x.dtype))
+
+
+def slstm_step(p: dict, x: jax.Array, cfg: ArchConfig, state: SLSTMState):
+    """One-token sLSTM. x (B, 1, d)."""
+    b, _, d = x.shape
+    wx = {}
+    for g in ("z", "i", "f", "o"):
+        wx[g] = (jnp.einsum("bsd,dhe->bshe", x, cdt(p[f"w_{g}"], x.dtype))
+                 [:, 0].astype(jnp.float32) + p[f"b_{g}"].astype(jnp.float32))
+    new = _slstm_cell(p, state, wx, x.dtype)
+    hid = rmsnorm_head(p["out_norm"], new.hid.astype(x.dtype)[:, None],
+                       cfg.norm_eps)
+    y = hid.reshape(b, 1, d)
+    return y, new

@@ -1,0 +1,6 @@
+from repro.serve.engine import (ServeEngine, RequestBatch, ServePlan,
+                                estimate_exit_steps, plan_compactions,
+                                wasted_slot_steps)
+
+__all__ = ["ServeEngine", "RequestBatch", "ServePlan", "estimate_exit_steps",
+           "plan_compactions", "wasted_slot_steps"]

@@ -1,0 +1,161 @@
+"""Serving engine: pjit'd prefill/decode + budget-capped batched serving.
+
+The second half of this module is the beyond-paper bridge described in
+DESIGN.md §Arch-applicability: a decode batch where every request carries a
+token budget and irreversibly exits at EOS/budget — requests are *burnout
+variables* in the paper's exact sense (active, shape the dynamics through
+batch occupancy, deactivate irreversibly). The SORT2AGGREGATE playbook then
+applies verbatim:
+
+* Sort: estimate exit steps per request (budgets are known caps; EOS arrival
+  is estimated with an uncertainty-relaxed survival probability — one shared
+  uniform per step, matching core.vi's comonotone coupling);
+* Refine: one cheap replay of the planned schedule against the estimates;
+* Aggregate: pick static *compaction points* (batch re-packs) between which
+  the batch shape is constant — so each segment is one fixed-shape compiled
+  program, the serving analogue of the paper's piecewise-constant activation
+  segments.
+
+This turns dynamic request exit into O(K) compiled shapes instead of
+per-step raggedness — the same serial->parallel trade the paper makes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.model import Model
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# plain engine
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: Model
+    params: Tree
+    max_len: int
+    temperature: float = 0.0
+    _prefill: Optional[Callable] = None
+    _decode: Optional[Callable] = None
+
+    def __post_init__(self):
+        model, max_len = self.model, self.max_len
+
+        def prefill(params, batch):
+            return model.prefill(params, batch, max_len=max_len)
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    def _sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
+        logits = logits[:, -1, : self.model.cfg.vocab_size]
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, batch: Dict[str, jax.Array], num_steps: int,
+                 key: Optional[jax.Array] = None,
+                 eos_id: int = -1) -> jax.Array:
+        """Greedy/temperature generation. Returns (B, num_steps) tokens."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        logits, caches = self._prefill(self.params, batch)
+        prompt_len = batch["tokens"].shape[1] \
+            + (self.model.cfg.num_patches or 0)
+        outs = []
+        tok = self._sample(logits, key)
+        for i in range(num_steps):
+            outs.append(tok)
+            pos = jnp.int32(prompt_len + i)
+            logits, caches = self._decode(self.params, caches,
+                                          tok[:, None], pos)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)
+        return jnp.stack(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# budget-capped batched serving (burnout-variable scheduling)
+
+@dataclasses.dataclass
+class RequestBatch:
+    prompts: Dict[str, jax.Array]        # model batch for prefill
+    token_budgets: np.ndarray            # (B,) max new tokens per request
+    eos_id: int = -1
+
+
+@dataclasses.dataclass
+class ServePlan:
+    """Piecewise-constant batch schedule: between compaction points the batch
+    is fixed-shape (one compiled program per segment width)."""
+    exit_estimates: np.ndarray           # (B,) estimated exit step
+    compaction_points: List[int]         # sorted decode steps to re-pack at
+    segments: List[Tuple[int, int, int]]  # (start, end, live_count)
+
+
+def estimate_exit_steps(
+    token_budgets: np.ndarray,
+    eos_survival: float = 0.98,
+    key: Optional[np.random.Generator] = None,
+    n_samples: int = 64,
+) -> np.ndarray:
+    """Uncertainty-relaxed exit-step estimate.
+
+    A request exits at min(budget, first EOS). With per-step survival
+    probability ``eos_survival``, the EOS time is geometric; we estimate
+    E[min(budget, G)] with the *shared-uniform* coupling of core.vi (one
+    uniform per step across requests), which preserves the rank statistics
+    that the compaction plan depends on.
+    """
+    rng = key or np.random.default_rng(0)
+    b = token_budgets.shape[0]
+    u = rng.random((n_samples, 1, token_budgets.max()))
+    # shared across requests (axis 1 broadcast): comonotone coupling
+    alive = np.cumprod(u < eos_survival, axis=2)          # (S, 1, T)
+    steps = alive.sum(axis=2)                              # (S, 1)
+    exits = np.minimum(token_budgets[None, :], steps)      # (S, B)
+    return exits.mean(axis=0)
+
+
+def plan_compactions(exit_estimates: np.ndarray, max_segments: int = 4,
+                     total_steps: Optional[int] = None) -> ServePlan:
+    """SORT2AGGREGATE for serving: sort exit estimates, pick K compaction
+    points that minimise wasted slot-steps (batch slots kept alive past their
+    request's exit), aggregate into fixed-shape segments."""
+    b = exit_estimates.shape[0]
+    total = int(total_steps or exit_estimates.max())
+    order = np.sort(exit_estimates.astype(np.int64))
+    # candidate compaction at each distinct exit; greedy pick the K with the
+    # largest saved area (slots freed x remaining steps)
+    savings = []
+    for i, t in enumerate(order[:-1]):
+        freed = i + 1
+        savings.append((int(freed) * int(max(total - t, 0)), int(t)))
+    savings.sort(reverse=True)
+    points = sorted({t for _, t in savings[: max_segments - 1] if t > 0})
+    segments = []
+    start = 0
+    for p in points + [total]:
+        live = int((exit_estimates > start).sum())
+        segments.append((start, int(p), live))
+        start = int(p)
+    return ServePlan(exit_estimates=exit_estimates,
+                     compaction_points=points, segments=segments)
+
+
+def wasted_slot_steps(plan: ServePlan, true_exits: np.ndarray) -> int:
+    """Evaluation metric: slot-steps spent on already-exited requests."""
+    waste = 0
+    for start, end, live in plan.segments:
+        for t in range(start, end):
+            active = int((true_exits > t).sum())
+            waste += max(live - active, 0)
+    return waste

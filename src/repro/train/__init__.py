@@ -1,0 +1,5 @@
+from repro.train.optimizer import AdamW, AdamWState, warmup_cosine, constant_lr
+from repro.train.train_step import TrainState, init_state, make_train_step, state_specs
+
+__all__ = ["AdamW", "AdamWState", "warmup_cosine", "constant_lr",
+           "TrainState", "init_state", "make_train_step", "state_specs"]

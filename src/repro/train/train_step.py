@@ -1,0 +1,92 @@
+"""Training step: loss -> grads -> AdamW, with microbatch accumulation.
+
+The step is a pure function of (TrainState, batch); the launch layer jits it
+with sharded state/batch and donated state. Microbatching (``lax.scan`` over
+batch slices, grads accumulated in fp32) is both a memory lever and the
+compute/communication overlap mechanism: with GSPMD async collectives the
+gradient reductions of microbatch k overlap the forward of k+1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import runtime
+from repro.models.model import Model
+from repro.models.spec import ParamSpec, is_spec
+from repro.train.optimizer import AdamW, AdamWState
+
+Tree = Any
+
+
+class TrainState(NamedTuple):
+    params: Tree
+    opt: AdamWState
+
+
+def state_specs(model: Model) -> TrainState:
+    """Spec tree for the whole train state (params + moments)."""
+    p = model.param_specs()
+    zero_like = jax.tree.map(
+        lambda s: ParamSpec(s.shape, s.logical, init="zeros", dtype=s.dtype),
+        p, is_leaf=is_spec)
+    return TrainState(
+        params=p,
+        opt=AdamWState(
+            step=ParamSpec((), (), init="zeros", dtype=jnp.int32),
+            mu=zero_like,
+            nu=jax.tree.map(lambda s: s, zero_like, is_leaf=is_spec)))
+
+
+def init_state(model: Model, optimizer: AdamW, key: jax.Array) -> TrainState:
+    params = model.init_params(key)
+    return TrainState(params=params, opt=optimizer.init(params))
+
+
+def make_train_step(model: Model, optimizer: AdamW, microbatches: int = 1,
+                    aux_weight: float = 0.01):
+    """Returns step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, aux_weight=aux_weight)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(state: TrainState, batch: Dict[str, jax.Array]):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            def slice_mb(i, x):
+                mb = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def micro(carry, i):
+                acc, loss_acc = carry
+                mb = {k: slice_mb(i, v) for k, v in batch.items()}
+                (loss, _), grads = grad_fn(state.params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zeros, jnp.float32(0.0)),
+                jnp.arange(microbatches),
+                unroll=runtime.scan_unroll(microbatches))
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {}
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, state.opt, state.params)
+        out_metrics = {"loss": loss, **opt_metrics}
+        for k, v in (metrics or {}).items():
+            out_metrics[k] = v
+        return TrainState(params=new_params, opt=new_opt), out_metrics
+
+    return step

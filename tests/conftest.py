@@ -1,0 +1,18 @@
+import os
+import sys
+from pathlib import Path
+
+# src layout without install
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real single CPU device; only launch/dryrun.py forces 512 host devices.
+
+import jax  # noqa: E402
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,79 @@
+"""Oracle behaviour: Eqs. (1)-(3), Algorithm 1, Assumption 3.2 margins."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AuctionRule, capped_sum, sequential_replay,
+                        naive_sampled_replay)
+from repro.data import make_synthetic_env
+
+
+@pytest.fixture(scope="module")
+def env():
+    return make_synthetic_env(jax.random.PRNGKey(0), n_events=4096,
+                              n_campaigns=24, emb_dim=8)
+
+
+def test_capped_sum_algorithm1():
+    xs = jnp.asarray([0.5, 0.25, 0.5, 1.0])
+    assert float(capped_sum(xs, 10.0)) == pytest.approx(2.25)
+    assert float(capped_sum(xs, 1.0)) == pytest.approx(1.0)
+    # order-free: any permutation gives the same result
+    assert float(capped_sum(xs[::-1], 1.7)) == pytest.approx(1.7)
+
+
+def test_oracle_budget_overshoot_bounded(env):
+    """Spend may exceed budget only by one increment (Asm 3.2 margin)."""
+    res = sequential_replay(env.values, env.budgets, env.rule)
+    overshoot = np.asarray(res.final_spend - env.budgets)
+    max_single = float(env.values.max())
+    assert (overshoot <= max_single + 1e-5).all()
+
+
+def test_oracle_winner_consistency(env):
+    res = sequential_replay(env.values, env.budgets, env.rule)
+    w = np.asarray(res.winners)
+    p = np.asarray(res.prices)
+    assert ((w >= -1) & (w < env.n_campaigns)).all()
+    assert (p[w == -1] == 0).all()
+    assert (p[w >= 0] > 0).all()
+    # total spend == sum of prices (conservation)
+    np.testing.assert_allclose(p.sum(), float(res.final_spend.sum()),
+                               rtol=1e-4)
+
+
+def test_oracle_activation_irreversible(env):
+    """Burnout: after cap_time, a campaign never wins again."""
+    res = sequential_replay(env.values, env.budgets, env.rule)
+    w = np.asarray(res.winners)
+    cap = np.asarray(res.cap_times)
+    for c in range(env.n_campaigns):
+        if cap[c] <= env.n_events:
+            wins_after = np.nonzero(w[cap[c]:] == c)[0]
+            assert wins_after.size == 0, (c, cap[c], wins_after[:5])
+
+
+def test_infinite_budget_never_caps(env):
+    res = sequential_replay(env.values,
+                            jnp.full_like(env.budgets, jnp.inf), env.rule)
+    assert (np.asarray(res.cap_times) == env.n_events + 1).all()
+
+
+def test_naive_sampling_degrades(env):
+    """Fig. 1's point: subsample+rescale drifts from the oracle."""
+    ref = sequential_replay(env.values, env.budgets, env.rule)
+    res = naive_sampled_replay(env.values, env.budgets, env.rule,
+                               jax.random.PRNGKey(3), sample_size=256)
+    rel = np.abs(np.asarray(res.final_spend) - np.asarray(ref.final_spend)) \
+        / np.maximum(np.asarray(ref.final_spend), 1e-9)
+    assert rel.mean() > 0.01    # visibly off at 6% sampling
+
+
+def test_second_price_cheaper_than_first(env):
+    first = sequential_replay(env.values, env.budgets, env.rule)
+    second = sequential_replay(
+        env.values, env.budgets,
+        AuctionRule.second_price(env.n_campaigns))
+    # platform revenue under second price <= first price on the same log
+    assert float(second.final_spend.sum()) <= float(first.final_spend.sum()) + 1e-3

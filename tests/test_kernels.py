@@ -1,0 +1,107 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.auction_resolve import auction_resolve, auction_resolve_ref
+from repro.kernels.capped_scan import capped_scan, capped_scan_ref
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+
+
+@pytest.mark.parametrize("n,c,d,sp,per_event", [
+    (512, 40, 10, False, False),
+    (500, 100, 16, True, False),     # ragged N, second price
+    (300, 33, 8, False, True),       # ragged everything, per-event mask
+    (1024, 128, 128, True, True),    # MXU-aligned
+    (256, 7, 4, False, False),       # tiny C
+])
+def test_auction_resolve_matches_ref(n, c, d, sp, per_event):
+    key = jax.random.PRNGKey(n + c)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    e = jax.random.normal(k1, (n, d))
+    r = jax.random.normal(k2, (c, d))
+    mult = jnp.exp(jax.random.normal(k3, (c,)) * 0.1)
+    act = jax.random.bernoulli(k4, 0.8, (n, c) if per_event else (c,))
+    res = jnp.float32(0.02)
+    w1, p1, s1 = auction_resolve(e, r, mult, act, res, second_price=sp)
+    w2, p2, s2 = auction_resolve_ref(e, r, mult, act, res, second_price=sp)
+    assert np.array_equal(np.asarray(w1), np.asarray(w2))
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_auction_resolve_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    e = jax.random.normal(k1, (256, 16), dtype)
+    r = jax.random.normal(k2, (32, 16), dtype)
+    mult = jnp.ones((32,), jnp.float32)
+    act = jnp.ones((32,), bool)
+    w1, p1, s1 = auction_resolve(e, r, mult, act)
+    w2, p2, s2 = auction_resolve_ref(e, r, mult, act, jnp.float32(0.0))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=tol,
+                               atol=tol)
+
+
+@pytest.mark.parametrize("n,c,blk", [
+    (1024, 40, 256), (1000, 33, 128), (2048, 128, 512), (640, 5, 64),
+])
+def test_capped_scan_matches_ref(n, c, blk):
+    key = jax.random.fold_in(jax.random.PRNGKey(0), n)
+    k1, k2 = jax.random.split(key)
+    v = jax.random.uniform(k1, (n, c))
+    budgets = jax.random.uniform(k2, (c,), minval=1.0, maxval=30.0)
+    w1, p1, s1, c1 = capped_scan(v, budgets, block_t=blk)
+    w2, p2, s2, c2 = capped_scan_ref(v, budgets, jnp.ones((c,)),
+                                     jnp.float32(0.0))
+    assert np.array_equal(np.asarray(w1), np.asarray(w2))
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4)
+    assert np.array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_capped_scan_equals_core_oracle():
+    """The kernel is an exact implementation of core.sequential_replay."""
+    from repro.core import sequential_replay
+    from repro.data import make_synthetic_env
+    env = make_synthetic_env(jax.random.PRNGKey(5), n_events=2048,
+                             n_campaigns=24, emb_dim=8)
+    ref = sequential_replay(env.values, env.budgets, env.rule)
+    w, p, s, cap = capped_scan(env.values, env.budgets)
+    assert np.array_equal(np.asarray(w), np.asarray(ref.winners))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(ref.final_spend),
+                               rtol=1e-4)
+    assert np.array_equal(np.asarray(cap), np.asarray(ref.cap_times))
+
+
+@pytest.mark.parametrize("b,s,h,kv,dh,causal,window,dtype", [
+    (2, 256, 4, 2, 64, True, None, jnp.float32),
+    (1, 512, 2, 2, 64, True, 128, jnp.float32),
+    (2, 128, 4, 1, 32, False, None, jnp.bfloat16),
+    (1, 384, 3, 3, 128, True, None, jnp.float32),
+    (1, 64, 2, 2, 16, True, 16, jnp.float32),
+])
+def test_flash_attention_matches_ref(b, s, h, kv, dh, causal, window, dtype):
+    key = jax.random.PRNGKey(s + h)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, s, h, dh), dtype)
+    k = jax.random.normal(k2, (b, s, kv, dh), dtype)
+    v = jax.random.normal(k3, (b, s, kv, dh), dtype)
+    o1 = flash_attention(q, k, v, causal=causal, window=window,
+                         block_q=128, block_k=128)
+    kk = jnp.repeat(k, h // kv, 2)
+    vv = jnp.repeat(v, h // kv, 2)
+    o2 = flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(b * h, s, dh),
+        kk.transpose(0, 2, 1, 3).reshape(b * h, s, dh),
+        vv.transpose(0, 2, 1, 3).reshape(b * h, s, dh),
+        causal=causal, window=window,
+    ).reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), rtol=tol, atol=tol)

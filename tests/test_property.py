@@ -1,0 +1,113 @@
+"""Hypothesis property tests on the system's invariants."""
+import hypothesis
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AuctionRule, Segments, auction, capped_sum,
+                        sequential_replay, spend_sums)
+from repro.comm import (compress_with_feedback, dequantize_int8,
+                        quantize_int8)
+
+settings.register_profile("ci", deadline=None, max_examples=25,
+                          derandomize=True)
+settings.load_profile("ci")
+
+values_strat = hnp.arrays(
+    np.float32, st.tuples(st.integers(4, 64), st.integers(2, 12)),
+    elements=st.floats(0.0, 1.0, width=32))
+
+
+@given(values_strat, st.integers(0, 2**31 - 1))
+def test_spend_sums_permutation_invariant(vals, seed):
+    """The MapReduce 'reduce' is order-free (the paper's core enabling fact)."""
+    c = vals.shape[1]
+    rule = AuctionRule.first_price(c)
+    w, p = auction.resolve(jnp.asarray(vals), jnp.ones((c,), bool), rule)
+    s1 = spend_sums(w, p, c)
+    perm = np.random.default_rng(seed).permutation(vals.shape[0])
+    w2, p2 = auction.resolve(jnp.asarray(vals[perm]), jnp.ones((c,), bool),
+                             rule)
+    s2 = spend_sums(w2, p2, c)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5,
+                               atol=1e-6)
+
+
+@given(values_strat)
+def test_infinite_budgets_match_uncapped_sum(vals):
+    c = vals.shape[1]
+    rule = AuctionRule.first_price(c)
+    res = sequential_replay(jnp.asarray(vals),
+                            jnp.full((c,), jnp.inf), rule)
+    w, p = auction.resolve(jnp.asarray(vals), jnp.ones((c,), bool), rule)
+    np.testing.assert_allclose(np.asarray(res.final_spend),
+                               np.asarray(spend_sums(w, p, c)), rtol=1e-4,
+                               atol=1e-5)
+
+
+@given(values_strat, st.integers(0, 11), st.floats(0.05, 0.5))
+def test_budget_monotonicity(vals, c_idx, base):
+    """Raising one campaign's budget never decreases its own final spend
+    (the lattice/monotonicity property the paper's Step-2 argument needs)."""
+    n, c = vals.shape
+    c_idx = c_idx % c
+    rule = AuctionRule.first_price(c)
+    budgets = jnp.full((c,), base, jnp.float32)
+    lo = sequential_replay(jnp.asarray(vals), budgets, rule)
+    hi = sequential_replay(jnp.asarray(vals),
+                           budgets.at[c_idx].mul(4.0), rule)
+    assert float(hi.final_spend[c_idx]) >= float(lo.final_spend[c_idx]) - 1e-5
+
+
+@given(st.integers(1, 200), st.floats(0.1, 50.0))
+def test_capped_sum_bounds(n, budget):
+    xs = jnp.linspace(0.0, 1.0, n)
+    out = float(capped_sum(xs, budget))
+    assert out <= budget + 1e-6
+    assert out <= float(xs.sum()) + 1e-6
+    assert out == min(budget, float(xs.sum())) or abs(
+        out - min(budget, float(xs.sum()))) < 1e-4
+
+
+@given(hnp.arrays(np.float32, st.integers(1, 2000),
+                  elements=st.floats(-100.0, 100.0, width=32)))
+def test_int8_quantization_error_bound(x):
+    """Per-block error <= max|block| * (1/254 + bf16 scale rounding)."""
+    q, scale = quantize_int8(jnp.asarray(x))
+    recon = np.asarray(dequantize_int8(q, scale, x.shape[0]))
+    blocks = np.pad(x, (0, (-len(x)) % 256)).reshape(-1, 256)
+    # 1/254 from the int8 grid + 2^-8 relative from storing scales in bf16
+    per_block = np.abs(blocks).max(1) * (1 / 254.0 + 2.0 ** -8) + 1e-6
+    bound = np.repeat(per_block, 256)[: len(x)]
+    assert (np.abs(recon - x) <= bound + 1e-5).all()
+
+
+@given(hnp.arrays(np.float32, st.integers(4, 512),
+                  elements=st.floats(-10.0, 10.0, width=32)))
+def test_error_feedback_preserves_mass(x):
+    """grad + error == recon + new_error exactly (feedback conservation)."""
+    err0 = jnp.zeros((x.shape[0],), jnp.float32)
+    q, scale, err1 = compress_with_feedback(jnp.asarray(x), err0)
+    recon = np.asarray(dequantize_int8(q, scale, x.shape[0]))
+    np.testing.assert_allclose(recon + np.asarray(err1), x, rtol=1e-4,
+                               atol=1e-4)
+
+
+@given(st.lists(st.integers(1, 100), min_size=1, max_size=8),
+       st.integers(50, 200))
+def test_segments_from_cap_times_invariants(caps, n):
+    caps = jnp.asarray([min(c, n + 1) for c in caps], jnp.int32)
+    segs = Segments.from_cap_times(caps, n)
+    b = np.asarray(segs.boundaries)
+    assert b[0] == 0 and b[-1] == n
+    assert (np.diff(b) >= 0).all()
+    # activation monotone: each campaign's mask is non-increasing across segs
+    m = np.asarray(segs.masks).astype(int)
+    assert (np.diff(m, axis=0) <= 0).all()
+    # event->segment mapping consistent with boundaries
+    sid = np.asarray(segs.seg_ids(n))
+    for j, s in enumerate(sid):
+        assert b[s] <= j < max(b[s + 1], b[s] + 1) or b[s] == b[s + 1]
