@@ -11,11 +11,11 @@ def main() -> None:
     from benchmarks import (fig1_naive_sampling, fig2_seq_vs_parallel,
                             fig3_vi_convergence, fig4_sort2aggregate,
                             fig56_yahoo_day2, kernels_bench, roofline_table,
-                            scaling)
+                            scaling, sweep_scaling)
     print("name,us_per_call,derived")
     for mod in (fig1_naive_sampling, fig2_seq_vs_parallel,
                 fig3_vi_convergence, fig4_sort2aggregate, fig56_yahoo_day2,
-                scaling, kernels_bench, roofline_table):
+                scaling, sweep_scaling, kernels_bench, roofline_table):
         try:
             mod.main()
         except Exception as e:   # keep the harness going; failures visible

@@ -1,0 +1,64 @@
+"""Scenario-sweep throughput: batched device program vs per-scenario loop.
+
+For S in a doubling schedule, measure scenarios/sec of
+
+* ``loop_host``   — the reference host Algorithm-2 driver called once per
+  scenario (two device round-trips per cap-out round, per scenario);
+* ``loop_device`` — the device-resident driver called once per scenario
+  (no round-trips, but S separate dispatches and no cross-scenario fusion);
+* ``batched``     — one vmapped ``parallel_state_machine`` over all S.
+
+Emits ``sweep_S{S}_{path},us_per_sweep,scn_per_sec`` rows. The batched path
+should win from small S on CPU and the gap should widen with S until the
+device saturates.
+
+    PYTHONPATH=src python -m benchmarks.sweep_scaling
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_call
+from repro.core import CounterfactualEngine, parallel_simulate, sweep_parallel
+from repro.data import make_synthetic_env
+
+
+def main(n_events: int = 16_384, n_campaigns: int = 16,
+         max_scenarios: int = 16) -> None:
+    env = make_synthetic_env(jax.random.PRNGKey(0), n_events=n_events,
+                             n_campaigns=n_campaigns, emb_dim=8)
+    engine = CounterfactualEngine(env.values, env.budgets)
+
+    s_values = []
+    s = 1
+    while s <= max_scenarios:
+        s_values.append(s)
+        s *= 2
+
+    for s_count in s_values:
+        # bid scalings around 1.0; scenario 0 is the base design
+        scales = [1.0 + 0.02 * i for i in range(s_count)]
+        grid = engine.grid(bid_scales=scales)
+
+        def loop(driver):
+            outs = []
+            for i in range(grid.num_scenarios):
+                rule, budgets = grid.scenario(i)
+                outs.append(parallel_simulate(env.values, budgets, rule,
+                                              driver=driver).final_spend)
+            return outs
+
+        _, us_host = time_call(lambda: loop("host"), repeats=1, warmup=1)
+        _, us_dev = time_call(lambda: loop("device"), repeats=1, warmup=1)
+        _, us_bat = time_call(
+            lambda: sweep_parallel(env.values, grid.budgets, grid.rules)
+            .final_spend, repeats=1, warmup=1)
+
+        for name, us in [("loop_host", us_host), ("loop_device", us_dev),
+                         ("batched", us_bat)]:
+            emit(f"sweep_S{s_count}_{name}", us,
+                 f"scn_per_sec={s_count / (us * 1e-6):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import axis_size as compat_axis_size, shard_map
+
 Tree = Any
 BLOCK = 256
 
@@ -67,7 +69,7 @@ def ring_all_reduce_mean(x: jax.Array, axis: str) -> jax.Array:
     the axis size. Used as the reference and as the skeleton for the
     compressed variant.
     """
-    n = jax.lax.axis_size(axis)
+    n = compat_axis_size(axis)
     if n == 1:
         return x
     me = jax.lax.axis_index(axis)
@@ -104,7 +106,7 @@ def compressed_all_reduce_mean(x: jax.Array, axis: str) -> jax.Array:
     fp32(bf16) psum — and one quantization error per contributor rather than
     per hop.
     """
-    n = jax.lax.axis_size(axis)
+    n = compat_axis_size(axis)
     if n == 1:
         return x
     flat = x.reshape(-1).astype(jnp.float32)
@@ -127,8 +129,8 @@ def make_cross_pod_grad_mean(mesh: Mesh, compressed: bool = True):
     def one(g):
         spec = P(*([None] * g.ndim))
 
-        @functools.partial(jax.shard_map, mesh=mesh, in_specs=spec,
-                           out_specs=spec, check_vma=False)
+        @functools.partial(shard_map, mesh=mesh, in_specs=spec,
+                           out_specs=spec)
         def _reduce(gl):
             if compressed:
                 return compressed_all_reduce_mean(gl, "pod")

@@ -1,0 +1,62 @@
+"""Cross-version jax compatibility helpers.
+
+The repo targets the jax that ships in the image (0.4.x today) while using
+the modern spellings where available:
+
+* ``shard_map`` — top-level ``jax.shard_map(..., check_vma=...)`` appeared in
+  jax 0.6; older releases carry it as ``jax.experimental.shard_map.shard_map``
+  with the kwarg named ``check_rep``. We always disable the replication check
+  (our kernels return replicated (C,)-vectors from explicit psums, which the
+  checker cannot always prove).
+* ``AxisType`` — re-exported from :mod:`repro.launch.mesh`'s shim via
+  ``make_mesh`` there; nothing needed here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+try:  # jax >= 0.6
+    _shard_map_impl = jax.shard_map
+    _CHECK_KWARG = "check_vma"
+except AttributeError:  # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _CHECK_KWARG = "check_rep"
+
+
+def axis_size(axis_name):
+    """Size of a mapped mesh axis, from inside shard_map/pmap.
+
+    ``jax.lax.axis_size`` is a 0.5+ addition; a psum of ones is the portable
+    spelling (constant-folded by XLA, so there is no runtime collective).
+    """
+    try:
+        return jax.lax.axis_size(axis_name)
+    except AttributeError:
+        return jax.lax.psum(1, axis_name)
+
+
+def compiled_cost_analysis(compiled):
+    """``Compiled.cost_analysis()`` as a flat dict on every jax version.
+
+    jax 0.4.x returns a one-element list of dicts (per executable);
+    newer jax returns the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return cost
+
+
+def shard_map(fun=None, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with the replication/VMA check disabled, on any jax.
+
+    Usable as a decorator factory exactly like the modern API:
+    ``@functools.partial(shard_map, mesh=mesh, in_specs=..., out_specs=...)``.
+    """
+    if fun is None:
+        return functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs)
+    return _shard_map_impl(fun, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **{_CHECK_KWARG: False})

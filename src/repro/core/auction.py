@@ -26,8 +26,14 @@ NEG_INF = jnp.float32(-jnp.inf)
 
 
 def bids(values: jax.Array, rule: AuctionRule) -> jax.Array:
-    """(T, C) values -> (T, C) bids under the rule's multipliers."""
-    return values * rule.multipliers[None, :].astype(values.dtype)
+    """(T, C) values -> (T, C) bids under the rule's multipliers.
+
+    Broadcasts over leading rule axes, so a scenario-batched rule
+    (multipliers (S, C)) against shared (T, C) values yields (S, T, C) bids;
+    full scenario batching of :func:`resolve` goes through ``vmap`` (see
+    :mod:`repro.core.sweep`), which hits the (C,) fast path per scenario.
+    """
+    return values * rule.multipliers[..., None, :].astype(values.dtype)
 
 
 def resolve(

@@ -11,16 +11,23 @@ different design?" with a choice of estimators:
 
 Design changes are expressed as a new :class:`AuctionRule` and/or new budgets
 — e.g. "raise campaign 7's bid multiplier 20%", "switch to second price",
-"add a reserve".
+"add a reserve". A whole *design space* is a :class:`ScenarioGrid` — the
+cartesian product of bid scalings × reserves × budget scalings — which
+:meth:`CounterfactualEngine.sweep` evaluates in one batched device program
+(:mod:`repro.core.sweep`) and summarises as a revenue/spend/cap-time delta
+table against the base design.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import itertools
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import sweep as sweep_lib
 from repro.core.parallel import parallel_simulate
 from repro.core.sequential import naive_sampled_replay, sequential_replay
 from repro.core.sort2aggregate import sort2aggregate as _sort2aggregate
@@ -40,6 +47,117 @@ class CounterfactualDelta:
     @property
     def revenue_lift(self) -> float:
         return (self.revenue_alt - self.revenue_base) / max(self.revenue_base, 1e-12)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioGrid:
+    """A batch of S candidate designs over a shared event log.
+
+    ``rules`` is a stacked :class:`AuctionRule` (multipliers (S, C), reserve
+    (S,), one shared pricing ``kind``), ``budgets`` is (S, C); ``labels``
+    names each scenario in reports. Scenario 0 is the comparison base for
+    delta tables unless stated otherwise.
+    """
+
+    rules: AuctionRule              # batched
+    budgets: jax.Array              # (S, C)
+    labels: Tuple[str, ...]
+
+    def __post_init__(self):
+        s = self.budgets.shape[0]
+        if self.rules.multipliers.shape[0] != s or len(self.labels) != s:
+            raise ValueError(
+                f"inconsistent grid: {self.rules.multipliers.shape[0]} rules,"
+                f" {s} budget rows, {len(self.labels)} labels")
+
+    @property
+    def num_scenarios(self) -> int:
+        return self.budgets.shape[0]
+
+    def scenario(self, s: int) -> Tuple[AuctionRule, jax.Array]:
+        return sweep_lib.scenario_rule(self.rules, s), self.budgets[s]
+
+    @staticmethod
+    def from_scenarios(scenarios: Sequence[Tuple[AuctionRule, jax.Array]],
+                       labels: Optional[Sequence[str]] = None
+                       ) -> "ScenarioGrid":
+        rules = sweep_lib.stack_rules([r for r, _ in scenarios])
+        budgets = jnp.stack([jnp.asarray(b, jnp.float32)
+                             for _, b in scenarios])
+        labels = tuple(labels) if labels is not None else tuple(
+            f"scenario{i}" for i in range(len(scenarios)))
+        return ScenarioGrid(rules=rules, budgets=budgets, labels=labels)
+
+    @staticmethod
+    def product(base_rule: AuctionRule,
+                base_budgets: jax.Array,
+                bid_scales: Sequence[float] = (1.0,),
+                reserves: Optional[Sequence[float]] = None,
+                budget_scales: Sequence[float] = (1.0,),
+                kind: Optional[str] = None) -> "ScenarioGrid":
+        """Cartesian design grid: bid multipliers × reserves × budget
+        scalings, each applied to the base design. The first combination
+        should be the identity so scenario 0 is the base."""
+        kind = kind or base_rule.kind
+        if reserves is None:
+            reserves = (float(base_rule.reserve),)
+        scenarios, labels = [], []
+        for bid, res, bud in itertools.product(bid_scales, reserves,
+                                               budget_scales):
+            rule = AuctionRule(
+                multipliers=base_rule.multipliers * jnp.float32(bid),
+                reserve=jnp.asarray(res, jnp.float32), kind=kind)
+            scenarios.append((rule, base_budgets * jnp.float32(bud)))
+            labels.append(f"bid×{bid:g} res={res:g} bud×{bud:g}")
+        return ScenarioGrid.from_scenarios(scenarios, labels)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Batched outcome of a scenario sweep + its base-relative delta table."""
+
+    grid: ScenarioGrid
+    results: SimResult              # batched: (S, C) spends / cap times
+    n_events: int
+    base_index: int = 0
+    consistency_gaps: Optional[jax.Array] = None   # (S,), s2a sweeps only
+
+    def delta_table(self) -> List[dict]:
+        """One row per scenario: revenue / total spend / cap-out profile,
+        absolute and as deltas against the base scenario."""
+        spend = np.asarray(self.results.final_spend, np.float64)
+        caps = np.minimum(np.asarray(self.results.cap_times, np.int64),
+                          self.n_events + 1)
+        revenue = np.asarray(self.results.revenue, np.float64)
+        base = self.base_index
+        rows = []
+        for s, label in enumerate(self.grid.labels):
+            rows.append({
+                "scenario": label,
+                "revenue": float(revenue[s]),
+                "revenue_lift": float(
+                    (revenue[s] - revenue[base])
+                    / max(revenue[base], 1e-12)),
+                "spend_total": float(spend[s].sum()),
+                "spend_delta": float(spend[s].sum() - spend[base].sum()),
+                "num_capped": int((caps[s] <= self.n_events).sum()),
+                "mean_cap_shift_events": float(
+                    np.abs(caps[s] - caps[base]).mean()),
+            })
+        return rows
+
+    def format_delta_table(self) -> str:
+        rows = self.delta_table()
+        hdr = (f"{'scenario':<28} {'revenue':>12} {'lift':>8} "
+               f"{'spend':>12} {'Δspend':>10} {'capped':>6} {'Δcap':>8}")
+        lines = [hdr, "-" * len(hdr)]
+        for r in rows:
+            lines.append(
+                f"{r['scenario']:<28} {r['revenue']:>12.1f} "
+                f"{r['revenue_lift']:>+7.1%} {r['spend_total']:>12.1f} "
+                f"{r['spend_delta']:>+10.1f} {r['num_capped']:>6d} "
+                f"{r['mean_cap_shift_events']:>8.1f}")
+        return "\n".join(lines)
 
 
 class CounterfactualEngine:
@@ -85,3 +203,50 @@ class CounterfactualEngine:
             revenue_base=float(base.revenue), revenue_alt=float(alt.revenue),
             spend_base=base.final_spend, spend_alt=alt.final_spend,
             cap_times_base=base.cap_times, cap_times_alt=alt.cap_times)
+
+    def grid(self, **kwargs) -> ScenarioGrid:
+        """A :meth:`ScenarioGrid.product` around this engine's base design."""
+        return ScenarioGrid.product(self.base_rule, self.budgets, **kwargs)
+
+    def sweep(self, grid: ScenarioGrid,
+              method: str = "parallel",
+              base_index: int = 0,
+              warm_start: bool = True,
+              refine_iters: int = 8,
+              record_events: bool = False,
+              key: Optional[jax.Array] = None) -> SweepResult:
+        """Evaluate every scenario in ``grid`` in one batched device program.
+
+        ``method``: ``"parallel"`` (device-resident Algorithm 2, the
+        default), ``"sort2aggregate"`` (vmapped refine+aggregate; with
+        ``warm_start`` the base design's cap times — estimated once via the
+        single-scenario production path — seed every scenario's refinement),
+        or ``"sequential"`` (batched exact oracle, O(N) serial depth —
+        validation only).
+        """
+        gaps = None
+        if method == "parallel":
+            results = sweep_lib.sweep_parallel(self.values, grid.budgets,
+                                               grid.rules)
+        elif method == "sort2aggregate":
+            caps0 = None
+            if warm_start:
+                base_rule, base_budgets = grid.scenario(base_index)
+                base = _sort2aggregate(
+                    self.values, base_budgets, base_rule,
+                    key if key is not None else jax.random.PRNGKey(0),
+                    refine_iters=refine_iters)
+                caps0 = base.result.cap_times
+            results, gaps = sweep_lib.sweep_sort2aggregate(
+                self.values, grid.budgets, grid.rules,
+                cap_times_init=caps0, refine_iters=refine_iters,
+                record_events=record_events)
+        elif method == "sequential":
+            results = sweep_lib.sweep_sequential(
+                self.values, grid.budgets, grid.rules,
+                record_events=record_events)
+        else:
+            raise ValueError(f"unknown sweep method: {method}")
+        return SweepResult(grid=grid, results=results,
+                           n_events=self.n_events, base_index=base_index,
+                           consistency_gaps=gaps)

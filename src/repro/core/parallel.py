@@ -12,19 +12,33 @@ Each loop iteration retires one campaign, so the serial depth is K+1 (number
 of cap-outs), not N. Theorem 5.2 bounds the resulting state error by
 ``(1+gamma)^K (C/N + t + gamma*eps + eps)`` under Assumptions 3.1-3.3.
 
-The loop itself runs on the host (it is the cluster driver in the paper's
-MapReduce framing); every heavy step is jitted and — in the sharded variant
-(``repro.core.sharded``) — distributed over the event axis of the mesh.
+Two drivers implement the same loop:
+
+* ``driver="device"`` (default) — the whole loop is one jitted
+  ``lax.while_loop`` carrying ``(s_hat, active, cap_times, n_hat)`` on device:
+  zero host round-trips, one auction resolve per round (the rate and block
+  reductions reuse it), and it ``vmap``s over a scenario axis (see
+  ``repro.core.sweep``);
+* ``driver="host"`` — the original host loop (the cluster driver in the
+  paper's MapReduce framing), kept as the reference implementation and as the
+  only driver that accepts mesh-sharded ``rate_fn``/``block_fn`` closures
+  (``repro.core.sharded``). Passing either closure selects it automatically.
+
+Both drivers do float32 arithmetic in the same order, so their
+``final_spend``/``cap_times`` agree bit-for-bit (asserted by
+``tests/test_scenario_sweep.py``).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import auction
 from repro.core import segments as seg_lib
 from repro.core.types import AuctionRule, Segments, SimResult, never_capped
 
@@ -46,20 +60,43 @@ def parallel_simulate(
     block_fn: Optional[Callable] = None,
     record_events: bool = False,
     return_trace: bool = False,
+    driver: str = "auto",
 ):
     """Run Algorithm 2. Returns a :class:`SimResult` (+ trace if requested).
 
-    ``rate_fn``/``block_fn`` default to the single-process jitted kernels and
-    can be swapped for mesh-sharded equivalents (see ``core.sharded``) — the
-    driver is agnostic to where the reductions run.
+    ``driver`` selects where the O(K) loop runs: ``"device"`` (jitted
+    ``lax.while_loop``, the default), ``"host"`` (reference), or ``"auto"``
+    (device unless custom ``rate_fn``/``block_fn`` closures force the host).
     """
+    if driver == "auto":
+        driver = "host" if (rate_fn is not None or block_fn is not None) \
+            else "device"
+    if driver == "device":
+        if rate_fn is not None or block_fn is not None:
+            raise ValueError("custom rate_fn/block_fn need driver='host'")
+        return _simulate_device(values, budgets, rule,
+                                record_events=record_events,
+                                return_trace=return_trace)
+    if driver != "host":
+        raise ValueError(f"unknown driver: {driver}")
+    return _simulate_host(values, budgets, rule, rate_fn=rate_fn,
+                          block_fn=block_fn, record_events=record_events,
+                          return_trace=return_trace)
+
+
+# --------------------------------------------------------------------------
+# Host driver (reference; required for mesh-sharded reductions)
+# --------------------------------------------------------------------------
+
+def _simulate_host(values, budgets, rule, *, rate_fn, block_fn,
+                   record_events, return_trace):
     rate_fn = rate_fn or (lambda a, lo: seg_lib.masked_rate(values, a, rule, lo))
     block_fn = block_fn or (
         lambda a, lo, hi: seg_lib.block_spend_sums(values, a, rule, lo, hi))
 
     n_events, n_campaigns = values.shape
-    s_hat = np.zeros((n_campaigns,), np.float64)
-    b = np.asarray(budgets, np.float64)
+    s_hat = np.zeros((n_campaigns,), np.float32)
+    b = np.asarray(budgets, np.float32)
     active = np.ones((n_campaigns,), bool)
     cap_times = np.full((n_campaigns,), never_capped(n_events), np.int64)
     n_hat = 0
@@ -73,17 +110,18 @@ def parallel_simulate(
         trace.num_rounds += 1
         # --- parallel step 1: expected speeds under the current active set
         rates = np.asarray(rate_fn(jnp.asarray(active), jnp.asarray(n_hat)),
-                           np.float64)
+                           np.float32)
         # time-to-live (in events) for each still-active campaign
         with np.errstate(divide="ignore", invalid="ignore"):
-            ttl = np.where(active & (rates > 0), (b - s_hat) / rates, np.inf)
-        ttl = np.where(ttl < 0, 0.0, ttl)   # already past budget -> retire now
+            ttl = np.where(active & (rates > 0), (b - s_hat) / rates,
+                           np.float32(np.inf))
+        ttl = np.where(ttl < 0, np.float32(0.0), ttl)  # past budget -> retire
         c_next = int(np.argmin(ttl))
         if np.isinf(ttl[c_next]):
             # nobody else caps: one final parallel block to N, keep everyone
             blk = np.asarray(
                 block_fn(jnp.asarray(active), jnp.asarray(n_hat),
-                         jnp.asarray(n_events)), np.float64)
+                         jnp.asarray(n_events)), np.float32)
             s_hat += blk
             masks.append(active.copy())
             boundaries.append(n_events)
@@ -93,7 +131,7 @@ def parallel_simulate(
         # --- parallel step 2: exact spends of the block [n_hat, n_next)
         blk = np.asarray(
             block_fn(jnp.asarray(active), jnp.asarray(n_hat),
-                     jnp.asarray(n_next)), np.float64)
+                     jnp.asarray(n_next)), np.float32)
         s_hat += blk
         masks.append(active.copy())
         boundaries.append(n_next)
@@ -121,5 +159,117 @@ def parallel_simulate(
         cap_times=jnp.asarray(cap_times, jnp.int32),
         winners=winners, prices=prices, segments=segs)
     if return_trace:
+        return result, trace
+    return result
+
+
+# --------------------------------------------------------------------------
+# Device-resident driver: the loop is a single jitted lax.while_loop
+# --------------------------------------------------------------------------
+
+@jax.jit
+def parallel_state_machine(
+    values: jax.Array,            # (N, C)
+    budgets: jax.Array,           # (C,)
+    rule: AuctionRule,
+):
+    """The Algorithm-2 loop as one device program.
+
+    Carries ``(s_hat, active, cap_times, n_hat)`` plus a fixed-size round log
+    through a ``lax.while_loop``; each round does ONE auction resolve and
+    derives both reductions (remaining-rate and block-spend) from it, where
+    the host driver pays two. No intermediate ever returns to the host.
+
+    Returns ``(s_hat, cap_times, retired, boundaries, num_rounds, n_hat)``:
+    ``retired[j]`` is the campaign retired after round ``j`` (-1 for the final
+    everyone-survives round), ``boundaries[j+1]`` the block end of round
+    ``j`` — enough to rebuild the exact segment history on the host.
+
+    ``vmap`` over ``(budgets, rule)`` evaluates a scenario batch over one
+    shared event log (the batched condition keeps looping until every
+    scenario has retired its last cap-out).
+    """
+    n_events, n_campaigns = values.shape
+    sentinel = jnp.int32(never_capped(n_events))
+    b = budgets.astype(jnp.float32)
+
+    def cond(st):
+        s_hat, active, cap, n_hat, rnd, retired, bnds = st
+        return (rnd < n_campaigns + 1) & (n_hat < n_events) & active.any()
+
+    def body(st):
+        s_hat, active, cap, n_hat, rnd, retired, bnds = st
+        winners, prices = auction.resolve(values, active, rule)
+        rates = seg_lib.rate_from_events(winners, prices, n_campaigns, n_hat)
+        ttl = jnp.where(active & (rates > 0), (b - s_hat) / rates,
+                        jnp.float32(jnp.inf))
+        ttl = jnp.where(ttl < 0, jnp.float32(0.0), ttl)
+        c_next = jnp.argmin(ttl).astype(jnp.int32)
+        no_cap = jnp.isinf(ttl[c_next])
+        # floor(ttl) clamped to N before the int cast (inf/huge-safe); with
+        # step <= N this equals the host's min(n_hat + floor(ttl), N).
+        step = jnp.minimum(jnp.floor(ttl[c_next]),
+                           jnp.float32(n_events)).astype(jnp.int32)
+        n_next = jnp.where(no_cap, jnp.int32(n_events),
+                           jnp.minimum(n_hat + step, n_events))
+        s_hat = s_hat + seg_lib.block_from_events(
+            winners, prices, n_campaigns, n_hat, n_next)
+        cap = jnp.where(no_cap, cap,
+                        cap.at[c_next].set(jnp.minimum(n_next + 1, sentinel)))
+        active = jnp.where(no_cap, active, active.at[c_next].set(False))
+        retired = retired.at[rnd].set(jnp.where(no_cap, -1, c_next))
+        bnds = bnds.at[rnd + 1].set(n_next)
+        return (s_hat, active, cap, n_next, rnd + 1, retired, bnds)
+
+    init = (
+        jnp.zeros((n_campaigns,), jnp.float32),
+        jnp.ones((n_campaigns,), bool),
+        jnp.full((n_campaigns,), sentinel, jnp.int32),
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.full((n_campaigns + 1,), -1, jnp.int32),
+        jnp.zeros((n_campaigns + 2,), jnp.int32),
+    )
+    s_hat, active, cap, n_hat, rnd, retired, bnds = \
+        jax.lax.while_loop(cond, body, init)
+    return s_hat, cap, retired, bnds, rnd, n_hat
+
+
+def _simulate_device(values, budgets, rule, *, record_events, return_trace):
+    n_events, n_campaigns = values.shape
+    s_hat, cap_times, retired, bnds, num_rounds, n_hat = jax.tree.map(
+        np.asarray, parallel_state_machine(values, budgets, rule))
+    num_rounds = int(num_rounds)
+
+    # Rebuild the host driver's exact segment history from the round log.
+    masks_list, bnd_list = [], [0]
+    mask = np.ones((n_campaigns,), bool)
+    for j in range(num_rounds):
+        masks_list.append(mask.copy())
+        bnd_list.append(int(bnds[j + 1]))
+        if retired[j] >= 0:
+            mask[retired[j]] = False
+    if bnd_list[-1] < n_events:   # active set emptied before the log ran out
+        masks_list.append(mask.copy())
+        bnd_list.append(n_events)
+    segs = Segments(
+        boundaries=jnp.asarray(bnd_list, jnp.int32),
+        masks=jnp.asarray(np.stack(masks_list) if masks_list else
+                          np.ones((1, n_campaigns), bool)),
+    )
+    winners = prices = None
+    if record_events:
+        replay = seg_lib.aggregate(values, segs, budgets, rule)
+        winners, prices = replay.winners, replay.prices
+    result = SimResult(
+        final_spend=jnp.asarray(s_hat, jnp.float32),
+        cap_times=jnp.asarray(cap_times, jnp.int32),
+        winners=winners, prices=prices, segments=segs)
+    if return_trace:
+        capping = [j for j in range(num_rounds) if retired[j] >= 0]
+        trace = ParallelSimTrace(
+            capped_order=[int(retired[j]) for j in capping],
+            boundaries=[0] + [bnd_list[j + 1] for j in capping],
+            num_rounds=num_rounds)
         return result, trace
     return result

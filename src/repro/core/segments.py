@@ -98,6 +98,28 @@ def first_crossing_times(
     return jnp.minimum(cap, sentinel)
 
 
+def rate_from_events(
+    winners: jax.Array, prices: jax.Array, num_campaigns: int,
+    start: jax.Array,
+) -> jax.Array:
+    """Mean per-campaign spend speed of resolved events with index >= start."""
+    n_events = winners.shape[0]
+    weight = (jnp.arange(n_events) >= start).astype(prices.dtype)
+    sums = auction.spend_sums(winners, prices, num_campaigns, weights=weight)
+    denom = jnp.maximum(n_events - start, 1).astype(sums.dtype)
+    return sums / denom
+
+
+def block_from_events(
+    winners: jax.Array, prices: jax.Array, num_campaigns: int,
+    lo: jax.Array, hi: jax.Array,
+) -> jax.Array:
+    """Per-campaign spend of resolved events in the half-open block [lo, hi)."""
+    idx = jnp.arange(winners.shape[0])
+    weight = ((idx >= lo) & (idx < hi)).astype(prices.dtype)
+    return auction.spend_sums(winners, prices, num_campaigns, weights=weight)
+
+
 @jax.jit
 def masked_rate(
     values: jax.Array,        # (N, C)
@@ -113,10 +135,7 @@ def masked_rate(
     """
     n_events, n_campaigns = values.shape
     winners, prices = auction.resolve(values, active, rule)
-    weight = (jnp.arange(n_events) >= start).astype(prices.dtype)
-    sums = auction.spend_sums(winners, prices, n_campaigns, weights=weight)
-    denom = jnp.maximum(n_events - start, 1).astype(sums.dtype)
-    return sums / denom
+    return rate_from_events(winners, prices, n_campaigns, start)
 
 
 @jax.jit
@@ -129,6 +148,4 @@ def block_spend_sums(
     """Per-campaign spend over events [lo, hi) under a fixed mask (order-free)."""
     n_events, n_campaigns = values.shape
     winners, prices = auction.resolve(values, active, rule)
-    idx = jnp.arange(n_events)
-    weight = ((idx >= lo) & (idx < hi)).astype(prices.dtype)
-    return auction.spend_sums(winners, prices, n_campaigns, weights=weight)
+    return block_from_events(winners, prices, n_campaigns, lo, hi)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import axis_size as compat_axis_size, shard_map
 from repro.core import auction
 from repro.core.types import AuctionRule, Segments, SimResult, never_capped
 
@@ -46,7 +47,7 @@ def _global_offset(event_axes: Sequence[str], local_n: int) -> jax.Array:
     """Global index of this shard's first event (row-major over event axes)."""
     idx = jnp.int32(0)
     for ax in event_axes:
-        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        idx = idx * compat_axis_size(ax) + jax.lax.axis_index(ax)
     return idx * local_n
 
 
@@ -62,9 +63,8 @@ def make_sharded_kernels(mesh: Mesh, rule: AuctionRule,
     spec_vals = P(axes, None)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(spec_vals, P(), P()), out_specs=(P(), P()),
-        check_vma=False)
+        shard_map, mesh=mesh,
+        in_specs=(spec_vals, P(), P()), out_specs=(P(), P()))
     def _rate_kernel(values_local, active, lo):
         local_n, n_campaigns = values_local.shape
         offset = _global_offset(axes, local_n)
@@ -79,9 +79,8 @@ def make_sharded_kernels(mesh: Mesh, rule: AuctionRule,
         return total, cnt
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(spec_vals, P(), P(), P()), out_specs=P(),
-        check_vma=False)
+        shard_map, mesh=mesh,
+        in_specs=(spec_vals, P(), P(), P()), out_specs=P())
     def _block_kernel(values_local, active, lo, hi):
         local_n, n_campaigns = values_local.shape
         offset = _global_offset(axes, local_n)
@@ -125,9 +124,8 @@ def sharded_aggregate(
     boundaries, masks = segments.boundaries, segments.masks
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(P(axes, None), P(), P(), P()), out_specs=(P(), P()),
-        check_vma=False)
+        shard_map, mesh=mesh,
+        in_specs=(P(axes, None), P(), P(), P()), out_specs=(P(), P()))
     def _agg(values_local, bnds, msks, b):
         local_n = values_local.shape[0]
         offset = _global_offset(axes, local_n)
@@ -210,16 +208,15 @@ def estimate_pi_sharded(
                else pi0.astype(jnp.float32))
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(P(axes, None), P(), P()), out_specs=P(),
-        check_vma=False)
+        shard_map, mesh=mesh,
+        in_specs=(P(axes, None), P(), P()), out_specs=P())
     def _vi(values_local, pi0_in, key_in):
         local_n = values_local.shape[0]
         offset = _global_offset(axes, local_n)
         dev_key = jax.random.fold_in(key_in, offset)
         ndev = 1
         for ax in axes:
-            ndev *= jax.lax.axis_size(ax)
+            ndev *= compat_axis_size(ax)
         global_batch = jnp.float32(local_batch * ndev)
 
         def body(carry, k):

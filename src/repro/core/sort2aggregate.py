@@ -21,6 +21,7 @@ crossing; we report that gap and iterate on it.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -83,6 +84,46 @@ def refine_segments(
         seen.add(state)
         caps = new_caps
     return jnp.asarray(best_caps, jnp.int32), it + 1, converged
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("refine_iters", "record_events"))
+def refine_fixed_device(
+    values: jax.Array,
+    budgets: jax.Array,
+    rule: AuctionRule,
+    cap_times0: jax.Array,
+    *,
+    refine_iters: int = 8,
+    record_events: bool = False,
+):
+    """Step 2 + Step 3 as one device program: a fixed number of fixed-point
+    iterations on the cap times (no host-side cycle detection — ties damp out
+    or the residual gap reports them) followed by the aggregate pass.
+
+    This is the ``vmap``-able spine of the batched scenario sweep
+    (:mod:`repro.core.sweep`); the host :func:`refine_segments` remains the
+    adaptive reference (early exit, cycle damping, best-state tracking).
+    Returns ``(SimResult, consistency_gap)``.
+    """
+    n_events = values.shape[0]
+    sentinel = jnp.int32(n_events + 1)
+
+    def body(caps, _):
+        segs = Segments.from_cap_times(caps, n_events)
+        rep = seg_lib.aggregate(values, segs, budgets, rule,
+                                record_events=False)
+        return jnp.minimum(rep.cap_times, sentinel), None
+
+    caps = jnp.minimum(jnp.asarray(cap_times0, jnp.int32), sentinel)
+    if refine_iters > 0:
+        caps, _ = jax.lax.scan(body, caps, None, length=refine_iters)
+    segs = Segments.from_cap_times(caps, n_events)
+    final = seg_lib.aggregate(values, segs, budgets, rule,
+                              record_events=record_events)
+    gap = jnp.max(jnp.abs(jnp.minimum(final.cap_times, sentinel) - caps)
+                  .astype(jnp.float32))
+    return final, gap
 
 
 def sort2aggregate(

@@ -123,7 +123,13 @@ class Segments:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SimResult:
-    """Outcome of a (counterfactual) replay."""
+    """Outcome of a (counterfactual) replay.
+
+    Scenario sweeps (:mod:`repro.core.sweep`) return the *batched* form with
+    a leading (S,) scenario axis on every field; ``revenue``/``num_capped``
+    reduce over the trailing axis so they yield (S,) there and a scalar here,
+    and :meth:`scenario` slices one scenario back out.
+    """
 
     final_spend: jax.Array          # (C,) cumulative spend at N
     cap_times: jax.Array            # (C,) int32, 1-based; N+1 if never capped
@@ -134,8 +140,25 @@ class SimResult:
     @property
     def revenue(self) -> jax.Array:
         if self.prices is None:
-            return self.final_spend.sum()
-        return self.prices.sum()
+            return self.final_spend.sum(-1)
+        return self.prices.sum(-1)
 
     def num_capped(self, n_events: int) -> jax.Array:
-        return (self.cap_times <= n_events).sum()
+        return (self.cap_times <= n_events).sum(-1)
+
+    @property
+    def batch_size(self) -> Optional[int]:
+        """Number of scenarios if batched, else None."""
+        return self.final_spend.shape[0] if self.final_spend.ndim == 2 \
+            else None
+
+    def scenario(self, s: int) -> "SimResult":
+        """Slice scenario ``s`` out of a batched result."""
+        if self.batch_size is None:
+            raise ValueError("not a batched SimResult")
+        take = lambda x: None if x is None else jax.tree.map(
+            lambda leaf: leaf[s], x)
+        return SimResult(
+            final_spend=self.final_spend[s], cap_times=self.cap_times[s],
+            winners=take(self.winners), prices=take(self.prices),
+            segments=take(self.segments))

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import axis_size as compat_axis_size, shard_map
 from repro.launch import roofline as rl
 from repro.launch.mesh import make_production_mesh
 
@@ -74,14 +75,14 @@ def cell3(variants=None):
         in-kernel one-hot working set by scanning blocks."""
 
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            shard_map, mesh=mesh,
             in_specs=(P(event_axes, None), P(), P(), P()),
-            out_specs=(P(), P()), check_vma=False)
+            out_specs=(P(), P()))
         def agg(values_local, bnds, msks, budgets):
             local_n = values_local.shape[0]
             ax0 = jax.lax.axis_index("data")
             ax1 = jax.lax.axis_index("model")
-            offset = (ax0 * jax.lax.axis_size("model") + ax1) * local_n
+            offset = (ax0 * compat_axis_size("model") + ax1) * local_n
             gidx = offset + jnp.arange(local_n, dtype=jnp.int32)
             seg_ids = jnp.searchsorted(bnds[1:-1], gidx,
                                        side="right").astype(jnp.int32)

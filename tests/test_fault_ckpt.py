@@ -143,14 +143,15 @@ def test_watchdog():
 
 def test_compressed_grad_mean_close_to_exact():
     from repro.comm import compressed_all_reduce_mean
+    from repro.compat import shard_map
+    from repro.launch.mesh import make_mesh
     import functools
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("pod",))
     x = jax.random.normal(jax.random.PRNGKey(0), (1024,))
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=P(),
-                       out_specs=P(), check_vma=False)
+    @functools.partial(shard_map, mesh=mesh, in_specs=P(),
+                       out_specs=P())
     def f(x):
         return compressed_all_reduce_mean(x, "pod")
 

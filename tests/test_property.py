@@ -1,5 +1,7 @@
 """Hypothesis property tests on the system's invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 import hypothesis.extra.numpy as hnp
 

@@ -1,0 +1,223 @@
+"""Golden equivalence for the batched scenario-sweep engine.
+
+Two contracts:
+
+* the device-resident Algorithm-2 driver is the SAME algorithm as the host
+  reference driver — float32 arithmetic in the same order — so
+  ``final_spend``/``cap_times`` must match bit-for-bit, on easy and tie-heavy
+  logs, under both pricing rules;
+* a batched sweep is just S independent replays fused into one program — each
+  scenario must match its own independent ``sequential_replay`` within the
+  Theorem-5.2-style tolerance the seed suite already enforces for the
+  unbatched estimators.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AuctionRule, CounterfactualEngine, ScenarioGrid,
+                        parallel_simulate, sequential_replay,
+                        sweep_parallel, sweep_sequential,
+                        sweep_sort2aggregate, stack_rules)
+from repro.core.metrics import spend_weighted_relative_error
+from repro.data import make_synthetic_env
+
+N_EVENTS = 4096
+N_CAMPAIGNS = 16
+# mean relative spend error allowed vs the exact oracle (cf.
+# test_core_parallel.test_parallel_close_to_oracle's Thm-5.2-style budget)
+ORACLE_TOL = 0.08
+
+
+@pytest.fixture(scope="module")
+def env():
+    return make_synthetic_env(jax.random.PRNGKey(1), n_events=N_EVENTS,
+                              n_campaigns=N_CAMPAIGNS, emb_dim=8)
+
+
+def _configs(env):
+    """(label, rule, budgets): both price rules plus a tie-heavy budget set
+    (equal budgets -> many campaigns predicted to cap in the same round)."""
+    ties = jnp.full((N_CAMPAIGNS,), float(env.budgets[N_CAMPAIGNS // 2]))
+    return [
+        ("first", AuctionRule.first_price(N_CAMPAIGNS), env.budgets),
+        ("second", AuctionRule.second_price(N_CAMPAIGNS, reserve=0.05),
+         env.budgets),
+        ("first_ties", AuctionRule.first_price(N_CAMPAIGNS), ties),
+        ("second_ties", AuctionRule.second_price(N_CAMPAIGNS), ties),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# (a) device driver == host driver, exactly
+# ---------------------------------------------------------------------------
+
+def test_device_driver_matches_host_bit_for_bit(env):
+    for label, rule, budgets in _configs(env):
+        host = parallel_simulate(env.values, budgets, rule, driver="host")
+        dev = parallel_simulate(env.values, budgets, rule, driver="device")
+        np.testing.assert_array_equal(
+            np.asarray(host.final_spend), np.asarray(dev.final_spend),
+            err_msg=f"final_spend diverged for {label}")
+        np.testing.assert_array_equal(
+            np.asarray(host.cap_times), np.asarray(dev.cap_times),
+            err_msg=f"cap_times diverged for {label}")
+
+
+def test_device_driver_reproduces_segments_and_trace(env):
+    host, h_tr = parallel_simulate(env.values, env.budgets, env.rule,
+                                   driver="host", return_trace=True)
+    dev, d_tr = parallel_simulate(env.values, env.budgets, env.rule,
+                                  driver="device", return_trace=True)
+    assert h_tr.num_rounds == d_tr.num_rounds
+    assert h_tr.capped_order == d_tr.capped_order
+    assert h_tr.boundaries == d_tr.boundaries
+    np.testing.assert_array_equal(np.asarray(host.segments.boundaries),
+                                  np.asarray(dev.segments.boundaries))
+    np.testing.assert_array_equal(np.asarray(host.segments.masks),
+                                  np.asarray(dev.segments.masks))
+
+
+def test_device_driver_infinite_budgets_single_round(env):
+    inf_b = jnp.full_like(env.budgets, jnp.inf)
+    res, trace = parallel_simulate(env.values, inf_b, env.rule,
+                                   driver="device", return_trace=True)
+    assert trace.num_rounds == 1
+    assert int(res.num_capped(env.n_events)) == 0
+
+
+def test_device_driver_rejects_custom_reductions(env):
+    with pytest.raises(ValueError):
+        parallel_simulate(env.values, env.budgets, env.rule,
+                          driver="device", rate_fn=lambda a, lo: a)
+
+
+# ---------------------------------------------------------------------------
+# (b) batched sweeps == independent per-scenario replays
+# ---------------------------------------------------------------------------
+
+def _grid(env, kind):
+    base = (AuctionRule.first_price(N_CAMPAIGNS) if kind == "first_price"
+            else AuctionRule.second_price(N_CAMPAIGNS))
+    return ScenarioGrid.product(
+        base, env.budgets,
+        bid_scales=[1.0, 0.9, 1.1, 1.3],
+        reserves=[0.0, 0.05],
+    )
+
+
+@pytest.mark.parametrize("kind", ["first_price", "second_price"])
+def test_sweep_parallel_matches_per_scenario_oracle(env, kind):
+    grid = _grid(env, kind)
+    assert grid.num_scenarios >= 8
+    sw = sweep_parallel(env.values, grid.budgets, grid.rules)
+    assert sw.final_spend.shape == (grid.num_scenarios, N_CAMPAIGNS)
+    for s in range(grid.num_scenarios):
+        rule, budgets = grid.scenario(s)
+        ref = sequential_replay(env.values, budgets, rule,
+                                record_events=False)
+        rel = np.abs(np.asarray(sw.final_spend[s])
+                     - np.asarray(ref.final_spend)) \
+            / np.maximum(np.asarray(ref.final_spend), 1e-9)
+        assert rel.mean() < ORACLE_TOL, (grid.labels[s], rel.mean())
+
+
+def test_sweep_parallel_equals_unbatched_device_driver(env):
+    """vmapping the state machine must not change any scenario's outcome."""
+    grid = _grid(env, "first_price")
+    sw = sweep_parallel(env.values, grid.budgets, grid.rules)
+    for s in range(grid.num_scenarios):
+        rule, budgets = grid.scenario(s)
+        solo = parallel_simulate(env.values, budgets, rule, driver="device")
+        np.testing.assert_array_equal(np.asarray(sw.final_spend[s]),
+                                      np.asarray(solo.final_spend),
+                                      err_msg=grid.labels[s])
+        np.testing.assert_array_equal(np.asarray(sw.cap_times[s]),
+                                      np.asarray(solo.cap_times),
+                                      err_msg=grid.labels[s])
+
+
+def test_sweep_sequential_is_the_batched_oracle(env):
+    grid = _grid(env, "second_price")
+    sw = sweep_sequential(env.values, grid.budgets, grid.rules)
+    for s in (0, 3, grid.num_scenarios - 1):
+        rule, budgets = grid.scenario(s)
+        ref = sequential_replay(env.values, budgets, rule,
+                                record_events=False)
+        np.testing.assert_allclose(np.asarray(sw.final_spend[s]),
+                                   np.asarray(ref.final_spend),
+                                   rtol=1e-5, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(sw.cap_times[s]),
+                                      np.asarray(ref.cap_times))
+
+
+def test_sweep_sort2aggregate_close_to_oracle_with_ties(env):
+    """Warm-started s2a sweep over a tie-heavy grid (equal budgets + budget
+    scalings -> shared cap rounds) stays within tolerance per scenario."""
+    base = AuctionRule.first_price(N_CAMPAIGNS)
+    ties = jnp.full((N_CAMPAIGNS,), float(env.budgets[N_CAMPAIGNS // 2]))
+    grid = ScenarioGrid.product(base, ties,
+                                bid_scales=[1.0, 0.9, 1.1, 1.2],
+                                budget_scales=[1.0, 0.8])
+    assert grid.num_scenarios >= 8
+    warm = sequential_replay(env.values, ties, base,
+                             record_events=False).cap_times
+    sw, gaps = sweep_sort2aggregate(env.values, grid.budgets, grid.rules,
+                                    cap_times_init=warm, refine_iters=8)
+    assert gaps.shape == (grid.num_scenarios,)
+    for s in range(grid.num_scenarios):
+        rule, budgets = grid.scenario(s)
+        ref = sequential_replay(env.values, budgets, rule,
+                                record_events=False)
+        err = float(spend_weighted_relative_error(sw.final_spend[s],
+                                                  ref.final_spend))
+        assert err < ORACLE_TOL, (grid.labels[s], err, float(gaps[s]))
+
+
+# ---------------------------------------------------------------------------
+# engine-level API
+# ---------------------------------------------------------------------------
+
+def test_engine_sweep_and_delta_table(env):
+    engine = CounterfactualEngine(env.values, env.budgets)
+    grid = engine.grid(bid_scales=[1.0, 1.1], reserves=[0.0, 0.02],
+                       budget_scales=[1.0, 0.5])
+    sweep = engine.sweep(grid, method="parallel")
+    rows = sweep.delta_table()
+    assert len(rows) == grid.num_scenarios == 8
+    assert rows[0]["revenue_lift"] == 0.0          # base vs itself
+    assert rows[0]["spend_delta"] == 0.0
+    # halving budgets must not increase spend
+    by_label = {r["scenario"]: r for r in rows}
+    for bid, res in [(1.0, 0.0), (1.1, 0.02)]:
+        full = by_label[f"bid×{bid:g} res={res:g} bud×1"]
+        half = by_label[f"bid×{bid:g} res={res:g} bud×0.5"]
+        assert half["spend_total"] <= full["spend_total"] + 1e-3
+    assert len(sweep.format_delta_table().splitlines()) == \
+        grid.num_scenarios + 2
+
+
+def test_engine_sweep_sort2aggregate_warm_start(env):
+    engine = CounterfactualEngine(env.values, env.budgets)
+    grid = engine.grid(bid_scales=[1.0, 1.15])
+    sweep = engine.sweep(grid, method="sort2aggregate")
+    assert sweep.consistency_gaps is not None
+    base = sweep.results.scenario(0)
+    ref = sequential_replay(env.values, env.budgets, engine.base_rule,
+                            record_events=False)
+    err = float(spend_weighted_relative_error(base.final_spend,
+                                              ref.final_spend))
+    assert err < ORACLE_TOL
+
+
+def test_stack_rules_rejects_mixed_kinds():
+    with pytest.raises(ValueError):
+        stack_rules([AuctionRule.first_price(4),
+                     AuctionRule.second_price(4)])
+
+
+def test_sweep_rejects_unbatched_inputs(env):
+    with pytest.raises(ValueError):
+        sweep_parallel(env.values, env.budgets,
+                       AuctionRule.first_price(N_CAMPAIGNS))
