@@ -1,0 +1,106 @@
+"""Scenario-batched resolve kernel throughput, tracked as BENCH_sweep.json.
+
+Two layers, each for S in a configurable schedule (default {1, 8, 32}):
+
+* ``resolve`` — one scenario-batched resolve of the full (N, C) valuation
+  matrix: the ``sweep_resolve`` Pallas kernel (tile fetched to VMEM once,
+  resolved S times) vs the vmapped jnp resolve (matrix streamed once per
+  scenario). This is the per-round cost inside the Algorithm-2 sweep loop.
+* ``sweep`` — end-to-end ``sweep_parallel``: the batched state machine with
+  ``resolve="pallas"`` vs the vmapped jnp state machine.
+
+Besides the usual CSV rows on stdout, writes a JSON perf record (default
+``BENCH_sweep.json``) with scenarios/sec per (S, path) so the trajectory is
+comparable across commits; CI uploads it as an artifact. On CPU the kernel
+runs in Pallas interpret mode — numbers there track correctness cost, not
+TPU speed.
+
+    PYTHONPATH=src python -m benchmarks.sweep_kernel
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core import AuctionRule, ScenarioGrid, auction, sweep_parallel
+from repro.data import make_synthetic_env
+from repro.kernels.auction_resolve import ON_TPU, sweep_resolve
+
+
+def _grid(env, s_count: int) -> ScenarioGrid:
+    base = AuctionRule.first_price(env.budgets.shape[0])
+    scales = [1.0 + 0.02 * i for i in range(s_count)]
+    return ScenarioGrid.product(base, env.budgets, bid_scales=scales)
+
+
+def main(n_events: int = 2048, n_campaigns: int = 32,
+         s_values=(1, 8, 32), block_t: int = 256,
+         out: str = "BENCH_sweep.json") -> None:
+    env = make_synthetic_env(jax.random.PRNGKey(0), n_events=n_events,
+                             n_campaigns=n_campaigns, emb_dim=8)
+    records = []
+
+    def record(s_count, layer, path, us):
+        scn_per_sec = s_count / (us * 1e-6)
+        emit(f"{layer}_S{s_count}_{path}", us,
+             f"scn_per_sec={scn_per_sec:.2f}")
+        records.append({"S": s_count, "layer": layer, "path": path,
+                        "us_per_call": round(us, 1),
+                        "scenarios_per_sec": round(scn_per_sec, 2)})
+
+    for s_count in s_values:
+        grid = _grid(env, s_count)
+        act = jnp.ones((s_count, n_campaigns), bool)
+
+        _, us = time_call(lambda: sweep_resolve(
+            env.values, grid.rules.multipliers, act, grid.rules.reserve,
+            block_t=block_t)[2], repeats=2, warmup=1)
+        record(s_count, "resolve", "pallas", us)
+
+        _, us = time_call(lambda: jax.vmap(
+            lambda a, r: auction.resolve(env.values, a, r),
+            in_axes=(0, 0))(act, grid.rules)[1], repeats=2, warmup=1)
+        record(s_count, "resolve", "vmap_jnp", us)
+
+        _, us = time_call(lambda: sweep_parallel(
+            env.values, grid.budgets, grid.rules,
+            resolve="pallas").final_spend, repeats=1, warmup=1)
+        record(s_count, "sweep", "pallas", us)
+
+        _, us = time_call(lambda: sweep_parallel(
+            env.values, grid.budgets, grid.rules,
+            resolve="jnp").final_spend, repeats=1, warmup=1)
+        record(s_count, "sweep", "vmap_jnp", us)
+
+    report = {
+        "benchmark": "sweep_kernel",
+        "n_events": n_events,
+        "n_campaigns": n_campaigns,
+        "block_t": block_t,
+        "backend": jax.default_backend(),
+        "pallas_interpret": not ON_TPU,
+        "jax_version": jax.__version__,
+        "machine": platform.machine(),
+        "results": records,
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n-events", type=int, default=2048)
+    ap.add_argument("--n-campaigns", type=int, default=32)
+    ap.add_argument("--s-values", type=int, nargs="+", default=[1, 8, 32])
+    ap.add_argument("--block-t", type=int, default=256)
+    ap.add_argument("--out", default="BENCH_sweep.json")
+    args = ap.parse_args()
+    main(n_events=args.n_events, n_campaigns=args.n_campaigns,
+         s_values=tuple(args.s_values), block_t=args.block_t, out=args.out)

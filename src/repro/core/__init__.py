@@ -9,8 +9,8 @@ from repro.core.sort2aggregate import (sort2aggregate, refine_segments,
                                        refine_fixed_device,
                                        Sort2AggregateResult)
 from repro.core.sweep import (sweep_sequential, sweep_parallel,
-                              sweep_sort2aggregate, stack_rules,
-                              scenario_rule)
+                              sweep_sort2aggregate, sweep_state_machine,
+                              stack_rules, scenario_rule)
 from repro.core.counterfactual import (CounterfactualEngine,
                                        CounterfactualDelta, ScenarioGrid,
                                        SweepResult)
@@ -25,6 +25,7 @@ __all__ = [
     "sort2aggregate", "refine_segments", "refine_fixed_device",
     "Sort2AggregateResult",
     "sweep_sequential", "sweep_parallel", "sweep_sort2aggregate",
+    "sweep_state_machine",
     "stack_rules", "scenario_rule",
     "CounterfactualEngine", "CounterfactualDelta", "ScenarioGrid",
     "SweepResult",

@@ -16,6 +16,13 @@ cartesian product of bid scalings × reserves × budget scalings — which
 :meth:`CounterfactualEngine.sweep` evaluates in one batched device program
 (:mod:`repro.core.sweep`) and summarises as a revenue/spend/cap-time delta
 table against the base design.
+
+Axis order for everything batched is **(scenario, …)**: a grid's ``rules``
+stack multipliers as (S, C) and reserves as (S,), ``budgets`` is (S, C), and
+the swept :class:`~repro.core.types.SimResult` carries (S, C) spends / cap
+times. Scenario ``base_index`` (0 by default, the identity combination of
+:meth:`ScenarioGrid.product`) is the logged base design every delta in
+:meth:`SweepResult.delta_table` is measured against.
 """
 from __future__ import annotations
 
@@ -124,7 +131,26 @@ class SweepResult:
 
     def delta_table(self) -> List[dict]:
         """One row per scenario: revenue / total spend / cap-out profile,
-        absolute and as deltas against the base scenario."""
+        absolute and as deltas against the base scenario.
+
+        Column semantics (base = scenario ``base_index``):
+
+        * ``revenue`` — platform revenue, i.e. the sum of clearing prices
+          over the day (= total spend when per-event prices are not
+          recorded);
+        * ``revenue_lift`` — ``(revenue - revenue_base) / revenue_base``,
+          the relative revenue delta vs the base design (0 for the base
+          row);
+        * ``spend_total`` / ``spend_delta`` — summed per-campaign spend and
+          its absolute delta vs the base (a budget-capped quantity:
+          scaling budgets down can only lower it);
+        * ``num_capped`` — campaigns whose budget burned out within the day
+          (``cap_time <= N``);
+        * ``mean_cap_shift_events`` — mean absolute shift of per-campaign
+          cap times vs the base, in events: how much the scenario reorders
+          *when* burnouts happen, which revenue alone does not show
+          (never-capped campaigns enter as ``N+1``).
+        """
         spend = np.asarray(self.results.final_spend, np.float64)
         caps = np.minimum(np.asarray(self.results.cap_times, np.int64),
                           self.n_events + 1)
@@ -214,6 +240,7 @@ class CounterfactualEngine:
               warm_start: bool = True,
               refine_iters: int = 8,
               record_events: bool = False,
+              resolve: str = "auto",
               key: Optional[jax.Array] = None) -> SweepResult:
         """Evaluate every scenario in ``grid`` in one batched device program.
 
@@ -223,11 +250,16 @@ class CounterfactualEngine:
         single-scenario production path — seed every scenario's refinement),
         or ``"sequential"`` (batched exact oracle, O(N) serial depth —
         validation only).
+
+        ``resolve`` (``"parallel"`` only) picks the per-round resolve
+        back-end: ``"pallas"`` for the scenario-batched tile-reusing kernel,
+        ``"jnp"`` for the vmapped state machine, ``"auto"`` for pallas on
+        TPU / jnp elsewhere (see :mod:`repro.core.sweep`).
         """
         gaps = None
         if method == "parallel":
             results = sweep_lib.sweep_parallel(self.values, grid.budgets,
-                                               grid.rules)
+                                               grid.rules, resolve=resolve)
         elif method == "sort2aggregate":
             caps0 = None
             if warm_start:

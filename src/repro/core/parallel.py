@@ -41,6 +41,7 @@ import numpy as np
 from repro.core import auction
 from repro.core import segments as seg_lib
 from repro.core.types import AuctionRule, Segments, SimResult, never_capped
+from repro.kernels.auction_resolve import ops as resolve_ops
 
 
 @dataclasses.dataclass
@@ -61,12 +62,16 @@ def parallel_simulate(
     record_events: bool = False,
     return_trace: bool = False,
     driver: str = "auto",
+    resolve: str = "jnp",
 ):
     """Run Algorithm 2. Returns a :class:`SimResult` (+ trace if requested).
 
     ``driver`` selects where the O(K) loop runs: ``"device"`` (jitted
     ``lax.while_loop``, the default), ``"host"`` (reference), or ``"auto"``
     (device unless custom ``rate_fn``/``block_fn`` closures force the host).
+    ``resolve`` selects the device driver's per-round auction resolve:
+    ``"jnp"`` (default), ``"pallas"`` (the S=1 case of the sweep kernel;
+    interpret mode off TPU), or ``"auto"`` (pallas on TPU, jnp elsewhere).
     """
     if driver == "auto":
         driver = "host" if (rate_fn is not None or block_fn is not None) \
@@ -74,7 +79,7 @@ def parallel_simulate(
     if driver == "device":
         if rate_fn is not None or block_fn is not None:
             raise ValueError("custom rate_fn/block_fn need driver='host'")
-        return _simulate_device(values, budgets, rule,
+        return _simulate_device(values, budgets, rule, resolve=resolve,
                                 record_events=record_events,
                                 return_trace=return_trace)
     if driver != "host":
@@ -167,11 +172,48 @@ def _simulate_host(values, budgets, rule, *, rate_fn, block_fn,
 # Device-resident driver: the loop is a single jitted lax.while_loop
 # --------------------------------------------------------------------------
 
-@jax.jit
+def lane_round(winners, prices, b, s_hat, active, cap, n_hat, rnd, retired,
+               bnds, *, n_events, n_campaigns, sentinel):
+    """One Algorithm-2 round for a single lane, given the round's resolved
+    (winners, prices): predict the next cap-out from the remaining-rate,
+    replay the block up to it, retire the campaign, log the round.
+
+    This single definition IS the bit-for-bit contract between the unbatched
+    device driver (:func:`parallel_state_machine`) and the scenario-batched
+    sweep loop (:func:`repro.core.sweep.sweep_state_machine`, which ``vmap``s
+    it per lane) — both call it, so their arithmetic cannot drift apart.
+    """
+    rates = seg_lib.rate_from_events(winners, prices, n_campaigns, n_hat)
+    ttl = jnp.where(active & (rates > 0), (b - s_hat) / rates,
+                    jnp.float32(jnp.inf))
+    ttl = jnp.where(ttl < 0, jnp.float32(0.0), ttl)  # past budget -> retire
+    c_next = jnp.argmin(ttl).astype(jnp.int32)
+    no_cap = jnp.isinf(ttl[c_next])
+    # floor(ttl) clamped to N before the int cast (inf/huge-safe); with
+    # step <= N this equals the host's min(n_hat + floor(ttl), N).
+    step = jnp.minimum(jnp.floor(ttl[c_next]),
+                       jnp.float32(n_events)).astype(jnp.int32)
+    n_next = jnp.where(no_cap, jnp.int32(n_events),
+                       jnp.minimum(n_hat + step, n_events))
+    s_hat = s_hat + seg_lib.block_from_events(
+        winners, prices, n_campaigns, n_hat, n_next)
+    cap = jnp.where(no_cap, cap,
+                    cap.at[c_next].set(jnp.minimum(n_next + 1, sentinel)))
+    active = jnp.where(no_cap, active, active.at[c_next].set(False))
+    retired = retired.at[rnd].set(jnp.where(no_cap, -1, c_next))
+    bnds = bnds.at[rnd + 1].set(n_next)
+    return (s_hat, active, cap, n_next, rnd + 1, retired, bnds)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("resolve", "block_t", "interpret"))
 def parallel_state_machine(
     values: jax.Array,            # (N, C)
     budgets: jax.Array,           # (C,)
     rule: AuctionRule,
+    resolve: str = "jnp",
+    block_t: int = 256,
+    interpret: Optional[bool] = None,
 ):
     """The Algorithm-2 loop as one device program.
 
@@ -187,11 +229,33 @@ def parallel_state_machine(
 
     ``vmap`` over ``(budgets, rule)`` evaluates a scenario batch over one
     shared event log (the batched condition keeps looping until every
-    scenario has retired its last cap-out).
+    scenario has retired its last cap-out) — but prefer
+    :func:`repro.core.sweep.sweep_state_machine`, which additionally batches
+    the per-round resolve into one kernel call.
+
+    ``resolve="pallas"`` swaps the per-round resolve for the S=1 case of the
+    ``sweep_resolve`` Pallas kernel (winners/prices bit-identical to the jnp
+    resolve; ``interpret=None`` means interpret mode off TPU). ``vmap`` only
+    composes with the default ``"jnp"`` back-end.
     """
     n_events, n_campaigns = values.shape
     sentinel = jnp.int32(never_capped(n_events))
     b = budgets.astype(jnp.float32)
+    if resolve == "auto":
+        resolve = "pallas" if resolve_ops.ON_TPU else "jnp"
+    if resolve not in ("jnp", "pallas"):
+        raise ValueError(f"unknown resolve back-end: {resolve}")
+
+    def _resolve(active):
+        if resolve == "jnp":
+            return auction.resolve(values, active, rule)
+        winners, prices, _ = resolve_ops.sweep_resolve(
+            values, rule.multipliers[None, :], active[None, :],
+            jnp.asarray(rule.reserve, jnp.float32)[None],
+            second_price=(rule.kind == "second_price"), block_t=block_t,
+            interpret=(interpret if interpret is not None
+                       else not resolve_ops.ON_TPU))
+        return winners[0], prices[0]
 
     def cond(st):
         s_hat, active, cap, n_hat, rnd, retired, bnds = st
@@ -199,27 +263,10 @@ def parallel_state_machine(
 
     def body(st):
         s_hat, active, cap, n_hat, rnd, retired, bnds = st
-        winners, prices = auction.resolve(values, active, rule)
-        rates = seg_lib.rate_from_events(winners, prices, n_campaigns, n_hat)
-        ttl = jnp.where(active & (rates > 0), (b - s_hat) / rates,
-                        jnp.float32(jnp.inf))
-        ttl = jnp.where(ttl < 0, jnp.float32(0.0), ttl)
-        c_next = jnp.argmin(ttl).astype(jnp.int32)
-        no_cap = jnp.isinf(ttl[c_next])
-        # floor(ttl) clamped to N before the int cast (inf/huge-safe); with
-        # step <= N this equals the host's min(n_hat + floor(ttl), N).
-        step = jnp.minimum(jnp.floor(ttl[c_next]),
-                           jnp.float32(n_events)).astype(jnp.int32)
-        n_next = jnp.where(no_cap, jnp.int32(n_events),
-                           jnp.minimum(n_hat + step, n_events))
-        s_hat = s_hat + seg_lib.block_from_events(
-            winners, prices, n_campaigns, n_hat, n_next)
-        cap = jnp.where(no_cap, cap,
-                        cap.at[c_next].set(jnp.minimum(n_next + 1, sentinel)))
-        active = jnp.where(no_cap, active, active.at[c_next].set(False))
-        retired = retired.at[rnd].set(jnp.where(no_cap, -1, c_next))
-        bnds = bnds.at[rnd + 1].set(n_next)
-        return (s_hat, active, cap, n_next, rnd + 1, retired, bnds)
+        winners, prices = _resolve(active)
+        return lane_round(winners, prices, b, s_hat, active, cap, n_hat,
+                          rnd, retired, bnds, n_events=n_events,
+                          n_campaigns=n_campaigns, sentinel=sentinel)
 
     init = (
         jnp.zeros((n_campaigns,), jnp.float32),
@@ -235,10 +282,12 @@ def parallel_state_machine(
     return s_hat, cap, retired, bnds, rnd, n_hat
 
 
-def _simulate_device(values, budgets, rule, *, record_events, return_trace):
+def _simulate_device(values, budgets, rule, *, record_events, return_trace,
+                     resolve="jnp"):
     n_events, n_campaigns = values.shape
     s_hat, cap_times, retired, bnds, num_rounds, n_hat = jax.tree.map(
-        np.asarray, parallel_state_machine(values, budgets, rule))
+        np.asarray, parallel_state_machine(values, budgets, rule,
+                                           resolve=resolve))
     num_rounds = int(num_rounds)
 
     # Rebuild the host driver's exact segment history from the round log.

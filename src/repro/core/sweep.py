@@ -11,9 +11,30 @@ single device program, amortising the event-log reads that dominate at scale.
 
 Batched inputs are a "stacked" :class:`~repro.core.types.AuctionRule` whose
 ``multipliers`` are (S, C) and ``reserve`` (S,) — the pricing ``kind`` is
-static and therefore shared per sweep — plus (S, C) budgets. The high-level
-grid construction / delta-table API lives in
+static and therefore shared per sweep — plus (S, C) budgets. **Axis order is
+(scenario, event, campaign) throughout**: every batched array in this module
+carries the scenario axis first, the shared event log stays (N, C) with no
+scenario axis, and batched results come back as (S, C) spends / cap times
+(:class:`~repro.core.types.SimResult` with ``batch_size == S``). Scenario 0
+is, by convention, the logged base design. The high-level grid construction /
+delta-table API lives in
 :class:`repro.core.counterfactual.CounterfactualEngine.sweep`.
+
+Two resolve back-ends drive the Algorithm-2 sweep:
+
+* ``resolve="jnp"`` — ``vmap(parallel_state_machine)``: each scenario's
+  while_loop round resolves the full (N, C) matrix independently, so the
+  event log is streamed from HBM once per scenario per round;
+* ``resolve="pallas"`` — :func:`sweep_state_machine`, an explicitly batched
+  while_loop whose rounds issue ONE scenario-batched Pallas resolve
+  (``repro.kernels.auction_resolve.sweep_resolve``): each (block_t, C)
+  valuation tile is fetched into VMEM once and resolved against all S
+  scenarios' (multiplier, reserve, live-mask) variants — S-fold reuse of the
+  dominant HBM read. Winners/prices are bit-identical to the jnp path, so
+  both back-ends produce the same cap times and (bitwise) final spends.
+
+``resolve="auto"`` (the default) picks ``"pallas"`` on TPU and falls back to
+the vmapped jnp path on CPU, where the kernel would run in interpret mode.
 """
 from __future__ import annotations
 
@@ -23,11 +44,13 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import auction
 from repro.core import segments as seg_lib
-from repro.core.parallel import parallel_state_machine
+from repro.core.parallel import lane_round, parallel_state_machine
 from repro.core.sequential import sequential_replay
 from repro.core.sort2aggregate import refine_fixed_device
-from repro.core.types import AuctionRule, Segments, SimResult
+from repro.core.types import AuctionRule, Segments, SimResult, never_capped
+from repro.kernels.auction_resolve import ops as resolve_ops
 
 
 def stack_rules(rules) -> AuctionRule:
@@ -85,24 +108,130 @@ def sweep_sequential(
         in_axes=(0, 0))(budgets, rules)
 
 
-@jax.jit
+@functools.partial(jax.jit,
+                   static_argnames=("resolve", "block_t", "interpret"))
 def sweep_parallel(
     values: jax.Array,            # (N, C)
     budgets: jax.Array,           # (S, C)
     rules: AuctionRule,           # batched
+    resolve: str = "auto",
+    block_t: int = 256,
+    interpret: Optional[bool] = None,
 ) -> SimResult:
     """Algorithm 2 over a scenario batch: one device program, serial depth
     ``max_s K_s``. The batched while_loop runs until the slowest scenario
     retires its last cap-out, and every lane executes every round (finished
     lanes' updates are discarded by select) — total work is S × max_s K_s
     resolves, so heavily skewed grids pay for their slowest member.
+
+    ``resolve`` picks the per-round resolve back-end (see module docstring):
+    ``"jnp"`` vmaps the single-scenario state machine; ``"pallas"`` runs the
+    batched state machine with the tile-reusing kernel (``interpret`` forces /
+    suppresses Pallas interpret mode — default: interpret off TPU only);
+    ``"auto"`` is pallas on TPU, jnp elsewhere.
     """
     _check_batch(values, budgets, rules)
-    s_hat, cap_times, _, _, _, _ = jax.vmap(
-        lambda b, r: parallel_state_machine(values, b, r),
-        in_axes=(0, 0))(budgets, rules)
+    if resolve == "auto":
+        resolve = "pallas" if resolve_ops.ON_TPU else "jnp"
+    if resolve == "jnp":
+        s_hat, cap_times, _, _, _, _ = jax.vmap(
+            lambda b, r: parallel_state_machine(values, b, r),
+            in_axes=(0, 0))(budgets, rules)
+    else:
+        s_hat, cap_times, _, _, _, _ = sweep_state_machine(
+            values, budgets, rules, resolve=resolve, block_t=block_t,
+            interpret=interpret)
     return SimResult(final_spend=s_hat, cap_times=cap_times,
                      winners=None, prices=None, segments=None)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("resolve", "block_t", "interpret"))
+def sweep_state_machine(
+    values: jax.Array,            # (N, C)
+    budgets: jax.Array,           # (S, C)
+    rules: AuctionRule,           # batched
+    resolve: str = "pallas",
+    block_t: int = 256,
+    interpret: Optional[bool] = None,
+):
+    """The Algorithm-2 loop over an explicit scenario batch: ONE resolve of
+    the shared event log per round for ALL scenarios.
+
+    Structurally this is ``vmap(parallel_state_machine)`` unrolled by hand:
+    the while_loop carries batched ``(s_hat, active, cap_times, n_hat)`` plus
+    the per-lane round log, the condition keeps looping while ANY lane is
+    alive, and finished lanes' states are frozen by select — exactly the
+    semantics jax's batching rule gives the vmapped loop, asserted
+    bit-for-bit by ``tests/test_scenario_sweep.py``. The difference is the
+    resolve: instead of S independent (N, C) resolves per round, the
+    ``"pallas"`` back-end issues one ``sweep_resolve`` kernel call that keeps
+    each valuation tile in VMEM across the whole scenario batch
+    (``"jnp"`` keeps the vmapped resolve — useful to test the loop
+    restructure in isolation).
+
+    Returns the batched tuple of ``parallel_state_machine``:
+    ``(s_hat (S, C), cap_times (S, C), retired (S, C+1), boundaries (S, C+2),
+    num_rounds (S,), n_hat (S,))``.
+    """
+    _check_batch(values, budgets, rules)
+    if resolve not in ("pallas", "jnp"):
+        raise ValueError(f"unknown resolve back-end: {resolve}")
+    n_events, n_campaigns = values.shape
+    n_scenarios = budgets.shape[0]
+    sentinel = jnp.int32(never_capped(n_events))
+    b = budgets.astype(jnp.float32)
+    use_interpret = (interpret if interpret is not None
+                     else not resolve_ops.ON_TPU)
+
+    if resolve == "pallas":
+        def resolve_all(active):
+            winners, prices, _ = resolve_ops.sweep_resolve(
+                values, rules.multipliers, active, rules.reserve,
+                second_price=(rules.kind == "second_price"),
+                block_t=block_t, interpret=use_interpret)
+            return winners, prices
+    else:
+        def resolve_all(active):
+            return jax.vmap(lambda a, r: auction.resolve(values, a, r),
+                            in_axes=(0, 0))(active, rules)
+
+    def alive(st):
+        _, active, _, n_hat, rnd, _, _ = st
+        return (rnd < n_campaigns + 1) & (n_hat < n_events) & active.any(-1)
+
+    def cond(st):
+        return jnp.any(alive(st))
+
+    # the per-lane round is the SAME function the unbatched device driver
+    # runs (repro.core.parallel.lane_round), vmapped — the bit-for-bit
+    # contract between the two loops is structural, not kept-in-sync
+    lane_step = functools.partial(lane_round, n_events=n_events,
+                                  n_campaigns=n_campaigns, sentinel=sentinel)
+
+    def body(st):
+        s_hat, active, cap, n_hat, rnd, retired, bnds = st
+        winners, prices = resolve_all(active)
+        new = jax.vmap(lane_step)(winners, prices, b, s_hat, active, cap,
+                                  n_hat, rnd, retired, bnds)
+        keep = alive(st)
+        return jax.tree.map(
+            lambda n, o: jnp.where(
+                keep.reshape(keep.shape + (1,) * (n.ndim - 1)), n, o),
+            new, st)
+
+    init = (
+        jnp.zeros((n_scenarios, n_campaigns), jnp.float32),
+        jnp.ones((n_scenarios, n_campaigns), bool),
+        jnp.full((n_scenarios, n_campaigns), sentinel, jnp.int32),
+        jnp.zeros((n_scenarios,), jnp.int32),
+        jnp.zeros((n_scenarios,), jnp.int32),
+        jnp.full((n_scenarios, n_campaigns + 1), -1, jnp.int32),
+        jnp.zeros((n_scenarios, n_campaigns + 2), jnp.int32),
+    )
+    s_hat, active, cap, n_hat, rnd, retired, bnds = \
+        jax.lax.while_loop(cond, body, init)
+    return s_hat, cap, retired, bnds, rnd, n_hat
 
 
 @functools.partial(jax.jit,

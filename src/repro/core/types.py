@@ -141,7 +141,11 @@ class SimResult:
     def revenue(self) -> jax.Array:
         if self.prices is None:
             return self.final_spend.sum(-1)
-        return self.prices.sum(-1)
+        # Sum every axis except a leading scenario batch: unbatched prices may
+        # themselves be >1-D (multislot replays record (N, slots) prices).
+        axes = tuple(range(1 if self.batch_size is not None else 0,
+                           self.prices.ndim))
+        return self.prices.sum(axes)
 
     def num_capped(self, n_events: int) -> jax.Array:
         return (self.cap_times <= n_events).sum(-1)

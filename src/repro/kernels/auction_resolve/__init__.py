@@ -1,4 +1,9 @@
-from repro.kernels.auction_resolve.ops import auction_resolve
-from repro.kernels.auction_resolve.ref import auction_resolve_ref, valuations
+from repro.kernels.auction_resolve.ops import (ON_TPU, auction_resolve,
+                                               sweep_resolve)
+from repro.kernels.auction_resolve.ref import (auction_resolve_ref,
+                                               resolve_tile_ref,
+                                               sweep_resolve_ref, valuations)
 
-__all__ = ["auction_resolve", "auction_resolve_ref", "valuations"]
+__all__ = ["ON_TPU", "auction_resolve", "auction_resolve_ref",
+           "resolve_tile_ref", "sweep_resolve", "sweep_resolve_ref",
+           "valuations"]

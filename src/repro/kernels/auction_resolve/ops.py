@@ -1,9 +1,16 @@
-"""jit'd public wrapper for the auction_resolve kernel.
+"""jit'd public wrappers for the auction_resolve kernels.
 
-Pads events to the block size and campaigns/embedding dims to MXU-friendly
-multiples (padded events are masked via the kernel's live-row input; padded
-campaigns are inactive), dispatches to the Pallas kernel (interpret=True on
-CPU — this container's validation mode; compiled on real TPUs), and un-pads.
+Each wrapper pads events to the block size and campaigns/embedding dims to
+MXU-friendly multiples (padded events are masked via the kernel's live-row
+input; padded campaigns are inactive), dispatches to the Pallas kernel
+(interpret=True on CPU — this container's validation mode; compiled on real
+TPUs), and un-pads.
+
+* :func:`auction_resolve` — single scenario, valuations computed in-kernel
+  from (event, campaign) embeddings off the MXU;
+* :func:`sweep_resolve` — S scenarios against one shared precomputed
+  valuation matrix, each (block_t, C) tile fetched into VMEM once and reused
+  across the whole scenario batch (the ``repro.core.sweep`` hot path).
 """
 from __future__ import annotations
 
@@ -13,8 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.auction_resolve.auction_resolve import auction_resolve_pallas
+from repro.kernels.auction_resolve.sweep_resolve import sweep_resolve_pallas
 
-_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+_ON_TPU = ON_TPU
 
 
 def _pad_to(x: jax.Array, size: int, axis: int, value=0):
@@ -56,3 +65,38 @@ def auction_resolve(
         second_price=second_price, block_t=block_t, interpret=interpret,
         true_d=d)
     return winners[:n], prices[:n], sums[:c]
+
+
+@functools.partial(jax.jit, static_argnames=("second_price", "block_t",
+                                             "interpret"))
+def sweep_resolve(
+    values: jax.Array,           # (N, C) — shared valuation matrix
+    multipliers: jax.Array,      # (S, C)
+    active: jax.Array,           # (S, C) or (S, N, C)
+    reserves: jax.Array = 0.0,   # (S,) or scalar
+    *,
+    second_price: bool = False,
+    block_t: int = 256,
+    interpret: bool = not ON_TPU,
+):
+    """Resolve S scenarios against one valuation matrix in a single kernel.
+
+    Returns (winners (S, N) int32 [-1 = no sale], prices (S, N) f32,
+    per-campaign spend sums (S, C) f32), bit-identical per scenario to the
+    vmapped ``repro.core.auction.resolve`` path on the same inputs.
+    """
+    n, c = values.shape
+    n_scenarios = multipliers.shape[0]
+    v = _pad_to(_pad_to(values.astype(jnp.float32), block_t, 0), 128, 1)
+    mult = _pad_to(multipliers.astype(jnp.float32), 128, 1)
+    res = jnp.broadcast_to(jnp.asarray(reserves, jnp.float32),
+                           (n_scenarios,))[:, None]
+    live = _pad_to(jnp.ones((n, 1), jnp.int8), block_t, 0)
+    if active.ndim == 3:
+        act = _pad_to(_pad_to(active.astype(jnp.int8), block_t, 1), 128, 2)
+    else:
+        act = _pad_to(active.astype(jnp.int8), 128, 1)
+    winners, prices, sums = sweep_resolve_pallas(
+        v, mult, act, live, res,
+        second_price=second_price, block_t=block_t, interpret=interpret)
+    return winners[:, :n], prices[:, :n], sums[:, :c]

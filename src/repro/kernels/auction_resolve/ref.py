@@ -1,4 +1,11 @@
-"""Pure-jnp oracle for the auction_resolve kernel."""
+"""Pure-jnp oracles for the auction_resolve kernels.
+
+Two levels: :func:`auction_resolve_ref` mirrors the embedding-level
+single-scenario kernel (valuations computed in-oracle); :func:`resolve_tile_ref`
+/ :func:`sweep_resolve_ref` mirror the scenario-batched ``sweep_resolve``
+kernel, which takes the valuation matrix directly (the sweep hot path's
+representation) and resolves S (multiplier, reserve, mask) variants of it.
+"""
 from __future__ import annotations
 
 import jax
@@ -50,3 +57,53 @@ def auction_resolve_ref(
     onehot = (jnp.arange(c)[None, :] == winners[:, None]).astype(jnp.float32)
     sums = (onehot * prices[:, None]).sum(axis=0)
     return winners, prices.astype(jnp.float32), sums
+
+
+def resolve_tile_ref(
+    values: jax.Array,           # (T, C) — precomputed valuations
+    multipliers: jax.Array,      # (C,)
+    active: jax.Array,           # (C,) or (T, C) bool
+    reserve: jax.Array,          # ()
+    second_price: bool = False,
+):
+    """Single-scenario resolve of a valuation tile (winners, prices, sums)."""
+    t, c = values.shape
+    bids = values.astype(jnp.float32) * multipliers[None, :].astype(jnp.float32)
+    act = active if active.ndim == 2 else jnp.broadcast_to(active[None, :],
+                                                           (t, c))
+    eligible = act & (bids > reserve)
+    masked = jnp.where(eligible, bids, NEG)
+    winners = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    top = jnp.max(masked, axis=1)
+    sale = top > NEG
+    if second_price:
+        masked2 = jnp.where(
+            jnp.arange(c)[None, :] == winners[:, None], NEG, masked)
+        second = jnp.max(masked2, axis=1)
+        prices = jnp.where(sale,
+                           jnp.maximum(jnp.where(second > NEG, second,
+                                                 reserve), reserve), 0.0)
+    else:
+        prices = jnp.where(sale, top, 0.0)
+    winners = jnp.where(sale, winners, -1)
+    onehot = (jnp.arange(c)[None, :] == winners[:, None]).astype(jnp.float32)
+    sums = (onehot * prices[:, None]).sum(axis=0)
+    return winners, prices.astype(jnp.float32), sums
+
+
+def sweep_resolve_ref(
+    values: jax.Array,           # (N, C) — shared across scenarios
+    multipliers: jax.Array,      # (S, C)
+    active: jax.Array,           # (S, C) or (S, N, C) bool
+    reserves: jax.Array,         # (S,)
+    second_price: bool = False,
+):
+    """Scenario-batched oracle: S independent tile resolves, vmapped.
+
+    Returns (winners (S, N) int32 [-1 = no sale], prices (S, N) f32,
+    spend_sums (S, C) f32)."""
+    return jax.vmap(
+        lambda m, a, r: resolve_tile_ref(values, m, a, r,
+                                         second_price=second_price),
+        in_axes=(0, 0, 0))(multipliers, active,
+                           jnp.asarray(reserves, jnp.float32))

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: scenario-batched auction resolution (the sweep hot path).
+
+The scenario-sweep drivers (``repro.core.sweep``) spend their time resolving
+the same (N, C) valuation matrix under S design variants — per-scenario bid
+multipliers, reserves, and live/activation masks. The vmapped jnp path streams
+the full valuation matrix from HBM once *per scenario*; this kernel inverts
+the loop: the grid is ``(num_blocks, num_scenarios)`` with the scenario axis
+innermost, and the values BlockSpec maps every inner step to the SAME
+(block_t, C) tile, so Pallas fetches the tile into VMEM once per block and
+resolves all S scenarios against it before moving on — S-fold reuse of the
+dominant HBM read (and of the (N, d) @ (d, C) matmul that produced the tile,
+which would otherwise be recomputed per scenario by the embedding-level
+single-scenario kernel in ``auction_resolve.py``).
+
+Per (block, scenario) step the VPU does the row-wise masked argmax (top-2 for
+second price) and the per-campaign one-hot spend reduction; per-scenario spend
+sums accumulate across the sequential grid in the (S, C) output block, which
+has a constant index map and therefore stays resident in VMEM for the whole
+grid — the kernel-level "combiner" of the MapReduce formulation.
+
+VMEM budget per step (fp32): block_t*C (values tile) + block_t*C (masked
+bids) + S*C (sums) + O(block_t + C) vectors — with the defaults block_t=256,
+C<=1024, S<=64 this stays well under 16 MB; the caller (ops.py) pads block_t
+and C to multiples of 128 so every tile is VPU-lane aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -2.0 ** 30    # python float: jnp constants would be captured tracers
+
+
+def _kernel(v_ref, mult_ref, act_ref, live_ref, reserve_ref,
+            winners_ref, prices_ref, sums_ref,
+            *, second_price: bool, per_event_mask: bool):
+    blk = pl.program_id(0)
+    scn = pl.program_id(1)
+
+    v = v_ref[...].astype(jnp.float32)                    # (T, C) shared tile
+    mult = mult_ref[...].astype(jnp.float32)              # (1, C) scenario s
+    bids = v * mult
+    reserve = reserve_ref[0, 0]
+    act = (act_ref[0] if per_event_mask else act_ref[...]) != 0
+    live = live_ref[...] != 0                             # (T, 1) real rows
+    eligible = act & (bids > reserve) & live
+    masked = jnp.where(eligible, bids, NEG)
+
+    t, c = masked.shape
+    winners = jnp.argmax(masked, axis=1).astype(jnp.int32)    # (T,)
+    top = jnp.max(masked, axis=1)
+    sale = top > NEG
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, c), 1)
+    if second_price:
+        masked2 = jnp.where(cols == winners[:, None], NEG, masked)
+        second = jnp.max(masked2, axis=1)
+        prices = jnp.where(sale,
+                           jnp.maximum(jnp.where(second > NEG, second,
+                                                 reserve), reserve), 0.0)
+    else:
+        prices = jnp.where(sale, top, 0.0)
+    winners = jnp.where(sale, winners, -1)
+
+    winners_ref[...] = winners[None, :]
+    prices_ref[...] = prices.astype(jnp.float32)[None, :]
+
+    onehot = (cols == winners[:, None]).astype(jnp.float32)
+    block_sums = jnp.sum(onehot * prices[:, None], axis=0,
+                         keepdims=True)                    # (1, C)
+
+    @pl.when((blk == 0) & (scn == 0))
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+
+    sums_ref[pl.ds(scn, 1), :] += block_sums
+
+
+def sweep_resolve_pallas(
+    values: jax.Array,           # (N, C) — shared valuation tile source
+    multipliers: jax.Array,      # (S, C)
+    active: jax.Array,           # (S, C) or (S, N, C) int8
+    live: jax.Array,             # (N, 1) int8 — 0 marks padded rows
+    reserves: jax.Array,         # (S, 1)
+    *,
+    second_price: bool = False,
+    block_t: int = 256,
+    interpret: bool = False,
+):
+    n, c = values.shape
+    s = multipliers.shape[0]
+    assert n % block_t == 0, (n, block_t)
+    per_event = active.ndim == 3
+
+    grid = (n // block_t, s)     # scenario axis innermost: tile reused S times
+    kernel = functools.partial(_kernel, second_price=second_price,
+                               per_event_mask=per_event)
+
+    act_spec = (pl.BlockSpec((1, block_t, c), lambda i, j: (j, i, 0))
+                if per_event
+                else pl.BlockSpec((1, c), lambda i, j: (j, 0)))
+    winners, prices, sums = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, c), lambda i, j: (i, 0)),  # values tile
+            pl.BlockSpec((1, c), lambda i, j: (j, 0)),        # multipliers
+            act_spec,                                         # activation
+            pl.BlockSpec((block_t, 1), lambda i, j: (i, 0)),  # live rows
+            pl.BlockSpec((1, 1), lambda i, j: (j, 0)),        # reserves
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t), lambda i, j: (j, i)),  # winners
+            pl.BlockSpec((1, block_t), lambda i, j: (j, i)),  # prices
+            pl.BlockSpec((s, c), lambda i, j: (0, 0)),        # spend sums
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, n), jnp.int32),
+            jax.ShapeDtypeStruct((s, n), jnp.float32),
+            jax.ShapeDtypeStruct((s, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(values, multipliers, active, live, reserves)
+    return winners, prices, sums

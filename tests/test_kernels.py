@@ -4,7 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.auction_resolve import auction_resolve, auction_resolve_ref
+from repro.kernels.auction_resolve import (auction_resolve,
+                                           auction_resolve_ref,
+                                           sweep_resolve, sweep_resolve_ref)
 from repro.kernels.capped_scan import capped_scan, capped_scan_ref
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 
@@ -46,6 +48,76 @@ def test_auction_resolve_dtypes(dtype):
     tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=tol,
                                atol=tol)
+
+
+@pytest.mark.parametrize("s,n,c,sp,per_event,blk", [
+    (1, 512, 40, False, False, 256),
+    (8, 500, 33, True, False, 128),      # ragged N and C, second price
+    (4, 300, 17, True, True, 128),       # ragged everything, per-event mask
+    (8, 1000, 100, False, True, 256),    # per-event mask, first price
+    (32, 256, 128, False, False, 128),   # wide scenario batch, aligned C
+    (3, 384, 7, True, False, 128),       # tiny C
+])
+def test_sweep_resolve_matches_ref(s, n, c, sp, per_event, blk):
+    """Interpret-mode parity of the scenario-batched kernel vs its oracle."""
+    key = jax.random.PRNGKey(s * 1000 + n + c)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    v = jax.random.uniform(k1, (n, c))
+    mult = jnp.exp(jax.random.normal(k2, (s, c)) * 0.1)
+    act = jax.random.bernoulli(k3, 0.8, (s, n, c) if per_event else (s, c))
+    res = jax.random.uniform(k4, (s,), maxval=0.1)
+    w1, p1, s1 = sweep_resolve(v, mult, act, res, second_price=sp,
+                               block_t=blk, interpret=True)
+    w2, p2, s2 = sweep_resolve_ref(v, mult, act, res, second_price=sp)
+    assert np.array_equal(np.asarray(w1), np.asarray(w2))
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", ["first_price", "second_price"])
+def test_sweep_resolve_bitwise_vs_core_resolve(kind):
+    """The contract the sweep state machine relies on: winners exact, prices
+    bit-identical to the vmapped ``repro.core.auction.resolve`` path."""
+    from repro.core import AuctionRule, auction
+    key = jax.random.PRNGKey(11)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s, n, c = 6, 1000, 33
+    v = jax.random.uniform(k1, (n, c))
+    mult = jnp.exp(jax.random.normal(k2, (s, c)) * 0.1)
+    act = jax.random.bernoulli(k3, 0.7, (s, c))
+    res = jax.random.uniform(k4, (s,), maxval=0.1)
+    rules = AuctionRule(multipliers=mult, reserve=res, kind=kind)
+    w_ref, p_ref = jax.vmap(
+        lambda a, r: auction.resolve(v, a, r), in_axes=(0, 0))(act, rules)
+    w, p, _ = sweep_resolve(v, mult, act, res,
+                            second_price=(kind == "second_price"),
+                            block_t=128, interpret=True)
+    assert np.array_equal(np.asarray(w), np.asarray(w_ref))
+    assert np.array_equal(np.asarray(p), np.asarray(p_ref))
+
+
+def test_sweep_resolve_single_scenario_matches_tilewise():
+    """S=1 batched resolve == per-scenario slice of an S=4 batch (the tile
+    loop must not leak state across scenarios)."""
+    key = jax.random.PRNGKey(7)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n, c = 640, 24
+    v = jax.random.uniform(k1, (n, c))
+    mult = jnp.exp(jax.random.normal(k2, (4, c)) * 0.2)
+    act = jax.random.bernoulli(k3, 0.75, (4, c))
+    res = jnp.asarray([0.0, 0.02, 0.05, 0.01])
+    wb, pb, sb = sweep_resolve(v, mult, act, res, second_price=True,
+                               block_t=128, interpret=True)
+    for i in range(4):
+        w1, p1, s1 = sweep_resolve(v, mult[i:i + 1], act[i:i + 1],
+                                   res[i:i + 1], second_price=True,
+                                   block_t=128, interpret=True)
+        assert np.array_equal(np.asarray(wb[i]), np.asarray(w1[0]))
+        np.testing.assert_array_equal(np.asarray(pb[i]), np.asarray(p1[0]))
+        np.testing.assert_allclose(np.asarray(sb[i]), np.asarray(s1[0]),
+                                   rtol=1e-6)
 
 
 @pytest.mark.parametrize("n,c,blk", [

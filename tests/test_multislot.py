@@ -84,3 +84,13 @@ def test_sort2aggregate_playbook_on_multislot(env):
                  - np.asarray(ref.final_spend)) \
         / np.maximum(np.asarray(ref.final_spend), 1e-9)
     assert rel.mean() < 0.05, (rel.mean(), iters, converged)
+
+
+def test_multislot_revenue_is_scalar(env):
+    """SimResult.revenue must reduce (N, S) multislot prices to a scalar
+    (regression: a batched-sweep-aware .sum(-1) once returned (N,))."""
+    rule = MultiSlotRule.first_price(env.n_campaigns, slots=2)
+    res = sequential_replay_multislot(env.values, env.budgets, rule)
+    assert res.prices.ndim == 2
+    rev = float(res.revenue)          # raises if revenue is not 0-D
+    assert rev == pytest.approx(float(np.asarray(res.prices).sum()))
