@@ -9,40 +9,35 @@ Two layers, each for S in a configurable schedule (default {1, 8, 32}):
 * ``sweep`` — end-to-end ``sweep_parallel``: the batched state machine with
   ``resolve="pallas"`` vs the vmapped jnp state machine.
 
-Besides the usual CSV rows on stdout, writes a JSON perf record (default
-``BENCH_sweep.json``) with scenarios/sec per (S, path) so the trajectory is
-comparable across commits; CI uploads it as an artifact. On CPU the kernel
-runs in Pallas interpret mode — numbers there track correctness cost, not
-TPU speed.
+Besides the usual CSV rows on stdout, merges a JSON perf section (default
+``BENCH_sweep.json``, key ``sweep_kernel``, tagged with ``device_count``)
+with scenarios/sec per (S, path) so the trajectory is comparable across
+commits; CI uploads it as an artifact. On CPU the kernel runs in Pallas
+interpret mode — numbers there track correctness cost, not TPU speed.
+``benchmarks/sweep_scaling.py`` writes the multi-device rows of the same
+file.
 
     PYTHONPATH=src python -m benchmarks.sweep_kernel
 """
 from __future__ import annotations
 
-import argparse
-import json
-import platform
-
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import emit, time_call
-from repro.core import AuctionRule, ScenarioGrid, auction, sweep_parallel
-from repro.data import make_synthetic_env
-from repro.kernels.auction_resolve import ON_TPU, sweep_resolve
-
-
-def _grid(env, s_count: int) -> ScenarioGrid:
-    base = AuctionRule.first_price(env.budgets.shape[0])
-    scales = [1.0 + 0.02 * i for i in range(s_count)]
-    return ScenarioGrid.product(base, env.budgets, bid_scales=scales)
+from benchmarks.common import (bench_report, emit, sweep_argparser,
+                               time_call, update_bench_json)
 
 
 def main(n_events: int = 2048, n_campaigns: int = 32,
          s_values=(1, 8, 32), block_t: int = 256,
          out: str = "BENCH_sweep.json") -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import AuctionRule, ScenarioGrid, auction, sweep_parallel
+    from repro.data import make_synthetic_env
+    from repro.kernels.auction_resolve import ON_TPU, sweep_resolve
+
     env = make_synthetic_env(jax.random.PRNGKey(0), n_events=n_events,
                              n_campaigns=n_campaigns, emb_dim=8)
+    base = AuctionRule.first_price(n_campaigns)
     records = []
 
     def record(s_count, layer, path, us):
@@ -54,7 +49,8 @@ def main(n_events: int = 2048, n_campaigns: int = 32,
                         "scenarios_per_sec": round(scn_per_sec, 2)})
 
     for s_count in s_values:
-        grid = _grid(env, s_count)
+        scales = [1.0 + 0.02 * i for i in range(s_count)]
+        grid = ScenarioGrid.product(base, env.budgets, bid_scales=scales)
         act = jnp.ones((s_count, n_campaigns), bool)
 
         _, us = time_call(lambda: sweep_resolve(
@@ -77,30 +73,15 @@ def main(n_events: int = 2048, n_campaigns: int = 32,
             resolve="jnp").final_spend, repeats=1, warmup=1)
         record(s_count, "sweep", "vmap_jnp", us)
 
-    report = {
-        "benchmark": "sweep_kernel",
-        "n_events": n_events,
-        "n_campaigns": n_campaigns,
-        "block_t": block_t,
-        "backend": jax.default_backend(),
-        "pallas_interpret": not ON_TPU,
-        "jax_version": jax.__version__,
-        "machine": platform.machine(),
-        "results": records,
-    }
-    with open(out, "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
-    print(f"wrote {out}")
+    update_bench_json(out, "sweep_kernel", bench_report(
+        records, n_events=n_events, n_campaigns=n_campaigns,
+        block_t=block_t, pallas_interpret=not ON_TPU))
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--n-events", type=int, default=2048)
-    ap.add_argument("--n-campaigns", type=int, default=32)
-    ap.add_argument("--s-values", type=int, nargs="+", default=[1, 8, 32])
-    ap.add_argument("--block-t", type=int, default=256)
-    ap.add_argument("--out", default="BENCH_sweep.json")
+    ap = sweep_argparser(__doc__.splitlines()[0], n_events=2048,
+                         n_campaigns=32, s_values=(1, 8, 32), block_t=256,
+                         out="BENCH_sweep.json")
     args = ap.parse_args()
     main(n_events=args.n_events, n_campaigns=args.n_campaigns,
          s_values=tuple(args.s_values), block_t=args.block_t, out=args.out)

@@ -1,4 +1,5 @@
-"""Scenario-sweep throughput: batched device program vs per-scenario loop.
+"""Scenario-sweep throughput: batched device program vs per-scenario loop,
+plus the mesh-batched sharded driver.
 
 For S in a doubling schedule, measure scenarios/sec of
 
@@ -6,28 +7,55 @@ For S in a doubling schedule, measure scenarios/sec of
   scenario (two device round-trips per cap-out round, per scenario);
 * ``loop_device`` — the device-resident driver called once per scenario
   (no round-trips, but S separate dispatches and no cross-scenario fusion);
-* ``batched``     — one vmapped ``parallel_state_machine`` over all S.
+* ``batched``     — one vmapped ``parallel_state_machine`` over all S;
+* ``sharded``     — (multi-device runs only) ``driver="sharded"``: the same
+  batched loop under ``shard_map`` with the event axis sharded over every
+  visible device.
 
-Emits ``sweep_S{S}_{path},us_per_sweep,scn_per_sec`` rows. The batched path
-should win from small S on CPU and the gap should widen with S until the
-device saturates.
+Emits ``sweep_S{S}_{path},us_per_sweep,scn_per_sec`` rows and merges a
+``sweep_scaling`` section — tagged with ``device_count`` so the perf
+trajectory distinguishes 1- vs multi-device runs — into BENCH_sweep.json.
+
+Single device:
 
     PYTHONPATH=src python -m benchmarks.sweep_scaling
+
+Multi-device (fake CPU devices; the flag must precede jax init, which the
+``--device-count`` option handles internally — the env var spelling
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` works too):
+
+    PYTHONPATH=src python -m benchmarks.sweep_scaling --device-count 8
 """
 from __future__ import annotations
 
-import jax
-
-from benchmarks.common import emit, time_call
-from repro.core import CounterfactualEngine, parallel_simulate, sweep_parallel
-from repro.data import make_synthetic_env
+from benchmarks.common import (bench_report, emit, force_host_devices,
+                               sweep_argparser, time_call, update_bench_json)
 
 
 def main(n_events: int = 16_384, n_campaigns: int = 16,
-         max_scenarios: int = 16) -> None:
+         max_scenarios: int = 16, out: str = "BENCH_sweep.json") -> None:
+    # deferred so --device-count can still grow the platform (see common.py)
+    import jax
+
+    from repro.core import CounterfactualEngine, parallel_simulate, \
+        sweep_parallel
+    from repro.data import make_synthetic_env
+    from repro.launch.mesh import SweepMeshSpec
+
+    n_devices = len(jax.devices())
     env = make_synthetic_env(jax.random.PRNGKey(0), n_events=n_events,
                              n_campaigns=n_campaigns, emb_dim=8)
     engine = CounterfactualEngine(env.values, env.budgets)
+    spec = SweepMeshSpec.for_devices() if n_devices > 1 else None
+    records = []
+
+    def record(s_count, path, us):
+        scn_per_sec = s_count / (us * 1e-6)
+        emit(f"sweep_S{s_count}_{path}", us,
+             f"scn_per_sec={scn_per_sec:.2f}")
+        records.append({"S": s_count, "path": path,
+                        "us_per_call": round(us, 1),
+                        "scenarios_per_sec": round(scn_per_sec, 2)})
 
     s_values = []
     s = 1
@@ -48,17 +76,37 @@ def main(n_events: int = 16_384, n_campaigns: int = 16,
                                               driver=driver).final_spend)
             return outs
 
-        _, us_host = time_call(lambda: loop("host"), repeats=1, warmup=1)
-        _, us_dev = time_call(lambda: loop("device"), repeats=1, warmup=1)
-        _, us_bat = time_call(
+        _, us = time_call(lambda: loop("host"), repeats=1, warmup=1)
+        record(s_count, "loop_host", us)
+        _, us = time_call(lambda: loop("device"), repeats=1, warmup=1)
+        record(s_count, "loop_device", us)
+        _, us = time_call(
             lambda: sweep_parallel(env.values, grid.budgets, grid.rules)
             .final_spend, repeats=1, warmup=1)
+        record(s_count, "batched", us)
+        if spec is not None:
+            try:
+                _, us = time_call(
+                    lambda: sweep_parallel(env.values, grid.budgets,
+                                           grid.rules, driver="sharded",
+                                           mesh=spec)
+                    .final_spend, repeats=1, warmup=1)
+            except ValueError as e:   # shard/grid alignment contract
+                print(f"# sharded path skipped: {e}")
+                spec = None
+            else:
+                record(s_count, "sharded", us)
 
-        for name, us in [("loop_host", us_host), ("loop_device", us_dev),
-                         ("batched", us_bat)]:
-            emit(f"sweep_S{s_count}_{name}", us,
-                 f"scn_per_sec={s_count / (us * 1e-6):.2f}")
+    update_bench_json(out, "sweep_scaling", bench_report(
+        records, n_events=n_events, n_campaigns=n_campaigns))
 
 
 if __name__ == "__main__":
-    main()
+    ap = sweep_argparser(__doc__.splitlines()[0], n_events=16_384,
+                         n_campaigns=16, out="BENCH_sweep.json",
+                         device_count=True)
+    ap.add_argument("--max-scenarios", type=int, default=16)
+    args = ap.parse_args()
+    force_host_devices(args.device_count)
+    main(n_events=args.n_events, n_campaigns=args.n_campaigns,
+         max_scenarios=args.max_scenarios, out=args.out)

@@ -11,6 +11,9 @@ from repro.core.sort2aggregate import (sort2aggregate, refine_segments,
 from repro.core.sweep import (sweep_sequential, sweep_parallel,
                               sweep_sort2aggregate, sweep_state_machine,
                               stack_rules, scenario_rule)
+from repro.core.sharded import (sweep_sharded, sweep_sort2aggregate_sharded,
+                                sweep_first_crossing_sharded,
+                                make_sharded_sweep_kernels)
 from repro.core.counterfactual import (CounterfactualEngine,
                                        CounterfactualDelta, ScenarioGrid,
                                        SweepResult)
@@ -26,6 +29,8 @@ __all__ = [
     "Sort2AggregateResult",
     "sweep_sequential", "sweep_parallel", "sweep_sort2aggregate",
     "sweep_state_machine",
+    "sweep_sharded", "sweep_sort2aggregate_sharded",
+    "sweep_first_crossing_sharded", "make_sharded_sweep_kernels",
     "stack_rules", "scenario_rule",
     "CounterfactualEngine", "CounterfactualDelta", "ScenarioGrid",
     "SweepResult",

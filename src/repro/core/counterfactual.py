@@ -241,6 +241,8 @@ class CounterfactualEngine:
               refine_iters: int = 8,
               record_events: bool = False,
               resolve: str = "auto",
+              driver: str = "batched",
+              mesh=None,
               key: Optional[jax.Array] = None) -> SweepResult:
         """Evaluate every scenario in ``grid`` in one batched device program.
 
@@ -255,25 +257,80 @@ class CounterfactualEngine:
         back-end: ``"pallas"`` for the scenario-batched tile-reusing kernel,
         ``"jnp"`` for the vmapped state machine, ``"auto"`` for pallas on
         TPU / jnp elsewhere (see :mod:`repro.core.sweep`).
+
+        ``driver="sharded"`` scales the sweep out over the device mesh named
+        by ``mesh`` (a :class:`repro.launch.mesh.SweepMeshSpec`): events
+        sharded, scenarios vmapped or on a second mesh axis. For
+        ``method="parallel"`` the results are bit-for-bit the single-device
+        sweep's; for ``method="sort2aggregate"`` the Algorithm-4 warm start
+        (``estimate_pi_sharded``) and every refine/aggregate pass run on the
+        mesh too. See docs/SCALING.md.
         """
+        if driver not in ("batched", "sharded"):
+            raise ValueError(f"unknown sweep driver: {driver}")
+        if driver == "sharded" and mesh is None:
+            raise ValueError(
+                "driver='sharded' needs mesh=SweepMeshSpec(...); see "
+                "repro.launch.mesh.SweepMeshSpec.for_devices")
         gaps = None
         if method == "parallel":
             results = sweep_lib.sweep_parallel(self.values, grid.budgets,
-                                               grid.rules, resolve=resolve)
+                                               grid.rules, resolve=resolve,
+                                               driver=driver, mesh=mesh)
         elif method == "sort2aggregate":
-            caps0 = None
-            if warm_start:
-                base_rule, base_budgets = grid.scenario(base_index)
-                base = _sort2aggregate(
-                    self.values, base_budgets, base_rule,
-                    key if key is not None else jax.random.PRNGKey(0),
-                    refine_iters=refine_iters)
-                caps0 = base.result.cap_times
-            results, gaps = sweep_lib.sweep_sort2aggregate(
-                self.values, grid.budgets, grid.rules,
-                cap_times_init=caps0, refine_iters=refine_iters,
-                record_events=record_events)
+            if driver == "sharded":
+                import dataclasses as _dc
+
+                from repro.core import sharded as sharded_lib
+                from repro.core import vi as vi_lib
+                if record_events:
+                    raise ValueError(
+                        "record_events is not supported with "
+                        "driver='sharded': per-event winners/prices are an "
+                        "(S, N) gather off the mesh. Use driver='batched', "
+                        "or replay the scenarios of interest via "
+                        "sharded_aggregate.")
+                caps0 = None
+                if warm_start:
+                    # the single-device flow, kept on the mesh end-to-end:
+                    # Algorithm-4 pi for the base design (psum'd residuals),
+                    # refine the base once, seed every scenario from it
+                    base_rule, base_budgets = grid.scenario(base_index)
+                    pi = sharded_lib.estimate_pi_sharded(
+                        mesh.mesh, self.values, base_budgets, base_rule,
+                        key if key is not None else jax.random.PRNGKey(0),
+                        event_axes=mesh.event_axes)
+                    caps_pi = vi_lib.pi_to_cap_times(pi, self.n_events)
+                    base_mesh = _dc.replace(mesh, scenario_axis=None)
+                    base_res, _ = sharded_lib.sweep_sort2aggregate_sharded(
+                        self.values, base_budgets[None, :],
+                        sweep_lib.stack_rules([base_rule]), base_mesh,
+                        cap_times_init=caps_pi, refine_iters=refine_iters)
+                    caps0 = jnp.minimum(base_res.cap_times[0],
+                                        self.n_events + 1)
+                results, gaps = sharded_lib.sweep_sort2aggregate_sharded(
+                    self.values, grid.budgets, grid.rules, mesh,
+                    cap_times_init=caps0, refine_iters=refine_iters)
+            else:
+                caps0 = None
+                if warm_start:
+                    base_rule, base_budgets = grid.scenario(base_index)
+                    base = _sort2aggregate(
+                        self.values, base_budgets, base_rule,
+                        key if key is not None else jax.random.PRNGKey(0),
+                        refine_iters=refine_iters)
+                    caps0 = base.result.cap_times
+                results, gaps = sweep_lib.sweep_sort2aggregate(
+                    self.values, grid.budgets, grid.rules,
+                    cap_times_init=caps0, refine_iters=refine_iters,
+                    record_events=record_events)
         elif method == "sequential":
+            if driver == "sharded":
+                raise ValueError(
+                    "method='sequential' is the O(N)-serial validation "
+                    "oracle and has no sharded driver; use "
+                    "driver='batched', or method='parallel'/"
+                    "'sort2aggregate' to scale out.")
             results = sweep_lib.sweep_sequential(
                 self.values, grid.budgets, grid.rules,
                 record_events=record_events)

@@ -20,9 +20,12 @@ Two drivers implement the same loop:
   reductions reuse it), and it ``vmap``s over a scenario axis (see
   ``repro.core.sweep``);
 * ``driver="host"`` — the original host loop (the cluster driver in the
-  paper's MapReduce framing), kept as the reference implementation and as the
-  only driver that accepts mesh-sharded ``rate_fn``/``block_fn`` closures
-  (``repro.core.sharded``). Passing either closure selects it automatically.
+  paper's MapReduce framing), kept as the reference implementation; it is the
+  driver that accepts *custom* ``rate_fn``/``block_fn`` closures, e.g. the
+  mesh-sharded ones from ``repro.core.sharded.make_sharded_kernels``. Passing
+  either closure selects it automatically. (It is no longer the only
+  mesh-capable path: scenario sweeps scale out device-resident via
+  ``repro.core.sharded.sweep_sharded`` — see docs/SCALING.md.)
 
 Both drivers do float32 arithmetic in the same order, so their
 ``final_spend``/``cap_times`` agree bit-for-bit (asserted by
@@ -172,18 +175,14 @@ def _simulate_host(values, budgets, rule, *, rate_fn, block_fn,
 # Device-resident driver: the loop is a single jitted lax.while_loop
 # --------------------------------------------------------------------------
 
-def lane_round(winners, prices, b, s_hat, active, cap, n_hat, rnd, retired,
-               bnds, *, n_events, n_campaigns, sentinel):
-    """One Algorithm-2 round for a single lane, given the round's resolved
-    (winners, prices): predict the next cap-out from the remaining-rate,
-    replay the block up to it, retire the campaign, log the round.
+def lane_predict(rates, b, s_hat, active, n_hat, *, n_events):
+    """Scalar half 1 of an Algorithm-2 round: from the current remaining-rate
+    estimate, predict which campaign caps out next and where its block ends.
 
-    This single definition IS the bit-for-bit contract between the unbatched
-    device driver (:func:`parallel_state_machine`) and the scenario-batched
-    sweep loop (:func:`repro.core.sweep.sweep_state_machine`, which ``vmap``s
-    it per lane) — both call it, so their arithmetic cannot drift apart.
+    Returns ``(c_next, no_cap, n_next)``; pure per-lane O(C) arithmetic, no
+    event-log access — the sharded driver runs it verbatim between its two
+    cross-device reductions.
     """
-    rates = seg_lib.rate_from_events(winners, prices, n_campaigns, n_hat)
     ttl = jnp.where(active & (rates > 0), (b - s_hat) / rates,
                     jnp.float32(jnp.inf))
     ttl = jnp.where(ttl < 0, jnp.float32(0.0), ttl)  # past budget -> retire
@@ -195,14 +194,45 @@ def lane_round(winners, prices, b, s_hat, active, cap, n_hat, rnd, retired,
                        jnp.float32(n_events)).astype(jnp.int32)
     n_next = jnp.where(no_cap, jnp.int32(n_events),
                        jnp.minimum(n_hat + step, n_events))
-    s_hat = s_hat + seg_lib.block_from_events(
-        winners, prices, n_campaigns, n_hat, n_next)
+    return c_next, no_cap, n_next
+
+
+def lane_commit(blk, c_next, no_cap, n_next, s_hat, active, cap, rnd,
+                retired, bnds, *, sentinel):
+    """Scalar half 2 of an Algorithm-2 round: apply the exact block spends,
+    retire the predicted campaign, log the round. Pure per-lane arithmetic."""
+    s_hat = s_hat + blk
     cap = jnp.where(no_cap, cap,
                     cap.at[c_next].set(jnp.minimum(n_next + 1, sentinel)))
     active = jnp.where(no_cap, active, active.at[c_next].set(False))
     retired = retired.at[rnd].set(jnp.where(no_cap, -1, c_next))
     bnds = bnds.at[rnd + 1].set(n_next)
     return (s_hat, active, cap, n_next, rnd + 1, retired, bnds)
+
+
+def lane_round(winners, prices, b, s_hat, active, cap, n_hat, rnd, retired,
+               bnds, *, n_events, n_campaigns, sentinel):
+    """One Algorithm-2 round for a single lane, given the round's resolved
+    (winners, prices): predict the next cap-out from the remaining-rate,
+    replay the block up to it, retire the campaign, log the round.
+
+    This single definition IS the bit-for-bit contract between the unbatched
+    device driver (:func:`parallel_state_machine`) and the scenario-batched
+    sweep loop (:func:`repro.core.sweep.sweep_state_machine`, which ``vmap``s
+    it per lane) — both call it, so their arithmetic cannot drift apart. The
+    mesh driver (:func:`repro.core.sharded.sweep_sharded`) splits it at the
+    two reductions — :func:`lane_predict` and :func:`lane_commit` carry the
+    scalar logic; the reductions go through the same canonical blocked
+    partials (:func:`repro.core.segments.partial_spend_sums`), psum'd — so
+    the contract extends bit-for-bit across mesh shapes.
+    """
+    rates = seg_lib.rate_from_events(winners, prices, n_campaigns, n_hat)
+    c_next, no_cap, n_next = lane_predict(rates, b, s_hat, active, n_hat,
+                                          n_events=n_events)
+    blk = seg_lib.block_from_events(winners, prices, n_campaigns, n_hat,
+                                    n_next)
+    return lane_commit(blk, c_next, no_cap, n_next, s_hat, active, cap,
+                       rnd, retired, bnds, sentinel=sentinel)
 
 
 @functools.partial(jax.jit,

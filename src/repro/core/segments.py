@@ -98,14 +98,66 @@ def first_crossing_times(
     return jnp.minimum(cap, sentinel)
 
 
+# ---------------------------------------------------------------------------
+# Canonical blocked reduction (mesh-invariant bit-for-bit arithmetic)
+# ---------------------------------------------------------------------------
+#
+# The Algorithm-2 drivers' two per-round reductions (remaining-rate and
+# block-spend) are NOT flat segment sums: they always go through a fixed
+# (REDUCE_BLOCKS, C) grid of per-block partials that is summed in one final
+# same-shaped reduce. Because each canonical block's partial is accumulated
+# in event order regardless of where it is computed, a mesh-sharded driver
+# whose shards align with block boundaries produces the *identical* partials
+# tensor (each block owned by exactly one device; psum only adds exact
+# zeros from the others) and then performs the identical final reduce —
+# making `final_spend`/`cap_times` bit-for-bit equal on ANY aligned mesh
+# shape, not merely "close". See docs/SCALING.md.
+
+REDUCE_BLOCKS = 32
+
+
+def reduce_block_size(n_events: int) -> int:
+    """Events per canonical reduction block (ceil so any N is covered)."""
+    return -(-n_events // REDUCE_BLOCKS)
+
+
+def partial_spend_sums(
+    winners: jax.Array, prices: jax.Array, num_campaigns: int,
+    weights: jax.Array | None = None,
+    *,
+    block_size: int,
+    index_offset=0,
+) -> jax.Array:
+    """(REDUCE_BLOCKS, C) per-canonical-block per-campaign partial spends.
+
+    ``index_offset`` is the *global* event index of ``winners[0]`` — a shard
+    passes its offset so its local events land in the same canonical blocks
+    (and accumulate in the same order) as in a single-device reduction.
+    Blocks outside the local range stay exactly 0.0.
+    """
+    p = prices if weights is None else prices * weights
+    w = jnp.where(winners < 0, num_campaigns, winners)
+    blk = (index_offset + jnp.arange(winners.shape[0])) // block_size
+    ids = blk * (num_campaigns + 1) + w
+    parts = jax.ops.segment_sum(
+        p, ids, num_segments=REDUCE_BLOCKS * (num_campaigns + 1))
+    return parts.reshape(REDUCE_BLOCKS, num_campaigns + 1)[:, :num_campaigns]
+
+
 def rate_from_events(
     winners: jax.Array, prices: jax.Array, num_campaigns: int,
     start: jax.Array,
 ) -> jax.Array:
-    """Mean per-campaign spend speed of resolved events with index >= start."""
+    """Mean per-campaign spend speed of resolved events with index >= start.
+
+    Canonical blocked arithmetic: partials first, one (REDUCE_BLOCKS, C)
+    reduce second — see :data:`REDUCE_BLOCKS`.
+    """
     n_events = winners.shape[0]
     weight = (jnp.arange(n_events) >= start).astype(prices.dtype)
-    sums = auction.spend_sums(winners, prices, num_campaigns, weights=weight)
+    parts = partial_spend_sums(winners, prices, num_campaigns, weight,
+                               block_size=reduce_block_size(n_events))
+    sums = parts.sum(axis=0)
     denom = jnp.maximum(n_events - start, 1).astype(sums.dtype)
     return sums / denom
 
@@ -114,10 +166,16 @@ def block_from_events(
     winners: jax.Array, prices: jax.Array, num_campaigns: int,
     lo: jax.Array, hi: jax.Array,
 ) -> jax.Array:
-    """Per-campaign spend of resolved events in the half-open block [lo, hi)."""
-    idx = jnp.arange(winners.shape[0])
+    """Per-campaign spend of resolved events in the half-open block [lo, hi).
+
+    Same canonical blocked arithmetic as :func:`rate_from_events`.
+    """
+    n_events = winners.shape[0]
+    idx = jnp.arange(n_events)
     weight = ((idx >= lo) & (idx < hi)).astype(prices.dtype)
-    return auction.spend_sums(winners, prices, num_campaigns, weights=weight)
+    parts = partial_spend_sums(winners, prices, num_campaigns, weight,
+                               block_size=reduce_block_size(n_events))
+    return parts.sum(axis=0)
 
 
 @jax.jit

@@ -6,22 +6,43 @@ across pods); campaign state (pi, spends, budgets — all O(|C|)) is replicated.
 Every algorithm below is the single-process version with its reductions
 replaced by ``psum`` over the event axes:
 
-* :func:`sharded_rate_and_block` — map + all-reduce for Algorithm 2;
+* :func:`make_sharded_kernels` — map + all-reduce closures for the
+  single-scenario Algorithm-2 host driver;
+* :func:`sweep_sharded` + :func:`make_sharded_sweep_kernels` — the
+  mesh-batched scenario sweep: the whole batched Algorithm-2 ``while_loop``
+  runs under ``shard_map``, events sharded, scenarios vmapped per device or
+  sharded along a second mesh axis (:class:`repro.launch.mesh.SweepMeshSpec`);
 * :func:`sharded_aggregate` — SORT2AGGREGATE Step 3 (one pass, one psum);
-* :func:`sharded_first_crossing` — two-pass distributed prefix: per-device
-  partial sums are all-gathered (exclusive prefix), then each device scans its
-  local block with the correct starting state;
+* :func:`sharded_first_crossing` / :func:`sweep_first_crossing_sharded` —
+  two-pass distributed prefix: per-device partial sums are all-gathered
+  (exclusive prefix), then each device scans its local block with the correct
+  starting state;
+* :func:`sweep_sort2aggregate_sharded` — the SORT2AGGREGATE scenario sweep
+  (refine + aggregate) with both passes sharded;
 * :func:`estimate_pi_sharded` — Algorithm 4 with the residual averaged across
   all devices each step (global-batch stochastic iteration); pi stays
   replicated because every device applies the identical psum'd update.
 
-All functions assume ``values`` is already placed with its event (leading)
-dimension sharded over ``event_axes`` and campaigns replicated.
+**``event_axes`` ordering contract.** Every function takes the event mesh
+axes as an *ordered* sequence: a device's shard covers the contiguous global
+index range ``[rank * local_n, (rank + 1) * local_n)`` where ``rank`` is the
+row-major rank over ``event_axes`` in the given order (first axis slowest,
+exactly :func:`_global_offset`). ``shard_events`` places ``values`` with that
+layout; passing the same axes in a different order silently permutes the
+event log, so callers must use one ordering end-to-end (``("data",)`` per
+pod, ``("pod", "data")`` across pods).
+
+All functions assume ``values`` is already placed (or placeable by jit) with
+its event (leading) dimension sharded over ``event_axes`` and campaigns
+replicated. The scenario-sweep entry points additionally keep bit-for-bit
+agreement with the single-device drivers on any aligned mesh — see
+docs/SCALING.md for the determinism model and the per-round communication
+cost.
 """
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,10 +50,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import axis_size as compat_axis_size, shard_map
 from repro.core import auction
+from repro.core import segments as seg_lib
+from repro.core.parallel import lane_commit, lane_predict
 from repro.core.types import AuctionRule, Segments, SimResult, never_capped
+from repro.kernels.auction_resolve import ops as resolve_ops
+from repro.launch.mesh import SweepMeshSpec
 
 
 def event_sharding(mesh: Mesh, event_axes: Sequence[str]) -> NamedSharding:
+    """The sharding of a 1-D per-event array: split over ``event_axes`` (in
+    the module's row-major ordering contract), replicated elsewhere."""
     return NamedSharding(mesh, P(tuple(event_axes)))
 
 
@@ -53,51 +80,58 @@ def _global_offset(event_axes: Sequence[str], local_n: int) -> jax.Array:
 
 def make_sharded_kernels(mesh: Mesh, rule: AuctionRule,
                          event_axes: Sequence[str] = ("data",)):
-    """Build (rate_fn, block_fn) closures for the Algorithm-2 driver.
+    """Build (rate_fn, block_fn) closures for the Algorithm-2 host driver.
 
-    Each is a ``shard_map``-ped program: local masked resolve + spend sums,
-    then one float32 all-reduce of a (C,)-vector — the only cross-device
-    traffic per Algorithm-2 round.
+    Each is a ``shard_map``-ped program: local masked resolve, canonical
+    block partials (:func:`repro.core.segments.partial_spend_sums`), then
+    one float32 psum — the only cross-device traffic per Algorithm-2 round.
+    Using the canonical grid makes the psum exact on aligned meshes (shards
+    holding whole blocks), so the host driver fed these closures matches the
+    single-process drivers bit-for-bit, same as :func:`sweep_sharded` — see
+    docs/SCALING.md.
     """
     axes = tuple(event_axes)
     spec_vals = P(axes, None)
+    ndev = 1
+    for ax in axes:
+        ndev *= mesh.shape[ax]
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(spec_vals, P(), P()), out_specs=(P(), P()))
-    def _rate_kernel(values_local, active, lo):
+    def _resolve_partials(values_local, active, weight_of):
         local_n, n_campaigns = values_local.shape
+        n_events = local_n * ndev
         offset = _global_offset(axes, local_n)
         gidx = offset + jnp.arange(local_n, dtype=jnp.int32)
         winners, prices = auction.resolve(values_local, active, rule)
-        w_rate = (gidx >= lo).astype(prices.dtype)
-        local_sum = auction.spend_sums(winners, prices, n_campaigns,
-                                       weights=w_rate)
-        local_cnt = w_rate.sum()
-        total = jax.lax.psum(local_sum, axes)
-        cnt = jax.lax.psum(local_cnt, axes)
-        return total, cnt
+        parts = seg_lib.partial_spend_sums(
+            winners, prices, n_campaigns, weight_of(gidx).astype(prices.dtype),
+            block_size=seg_lib.reduce_block_size(n_events),
+            index_offset=offset)
+        return jax.lax.psum(parts, axes), n_events
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec_vals, P(), P()), out_specs=P())
+    def _rate_kernel(values_local, active, lo):
+        parts, n_events = _resolve_partials(values_local, active,
+                                            lambda g: g >= lo)
+        sums = parts.sum(axis=0)
+        denom = jnp.maximum(n_events - lo, 1).astype(sums.dtype)
+        return sums / denom
 
     @functools.partial(
         shard_map, mesh=mesh,
         in_specs=(spec_vals, P(), P(), P()), out_specs=P())
     def _block_kernel(values_local, active, lo, hi):
-        local_n, n_campaigns = values_local.shape
-        offset = _global_offset(axes, local_n)
-        gidx = offset + jnp.arange(local_n, dtype=jnp.int32)
-        winners, prices = auction.resolve(values_local, active, rule)
-        w_blk = ((gidx >= lo) & (gidx < hi)).astype(prices.dtype)
-        local_sum = auction.spend_sums(winners, prices, n_campaigns,
-                                       weights=w_blk)
-        return jax.lax.psum(local_sum, axes)
+        parts, _ = _resolve_partials(values_local, active,
+                                     lambda g: (g >= lo) & (g < hi))
+        return parts.sum(axis=0)
 
     rate_jit = jax.jit(_rate_kernel)
     block_jit = jax.jit(_block_kernel)
 
     def rate_fn(values):
         def f(active, lo):
-            total, cnt = rate_jit(values, active, jnp.int32(lo))
-            return total / jnp.maximum(cnt, 1.0)
+            return rate_jit(values, active, jnp.int32(lo))
         return f
 
     def block_fn(values):
@@ -112,13 +146,22 @@ def sharded_aggregate(
     mesh: Mesh,
     values: jax.Array,            # sharded (N, C)
     segments: Segments,
-    budgets: jax.Array,
+    budgets: jax.Array,           # (C,) — replicated campaign state
     rule: AuctionRule,
     event_axes: Sequence[str] = ("data",),
 ) -> SimResult:
     """SORT2AGGREGATE Step 3 on the mesh: one parallel pass + one psum, plus
     the distributed first-crossing diagnosis (one all-gather of per-device
-    partials)."""
+    partials).
+
+    ``values`` must be event-sharded over ``event_axes`` (see the module's
+    ordering contract); ``segments``/``budgets``/``rule`` are replicated —
+    every device reconstructs each local event's activation mask from the
+    global boundary table, so no per-event mask array ever crosses the
+    interconnect. The returned ``SimResult`` carries the psum'd (C,) spends
+    and the pmin'd diagnosed cap times; ``winners``/``prices`` stay ``None``
+    (materialising them would be an (N,)-sized gather).
+    """
     axes = tuple(event_axes)
     n_events, n_campaigns = values.shape
     boundaries, masks = segments.boundaries, segments.masks
@@ -200,6 +243,29 @@ def estimate_pi_sharded(
 
     The per-event drift matches the paper's B=1 iteration: the update is
     ``eta * global_batch * (b/N - mean_spend)``.
+
+    Argument semantics:
+
+    * ``values`` — the FULL event-sharded (N, C) log; each device samples its
+      minibatches from its own shard only (indices are local), so the
+      stochastic iteration sees the global distribution through the psum'd
+      residual, not through cross-device shuffling;
+    * ``key`` — one PRNG key, replicated; every device folds in its row-major
+      event-axis rank, so draws are device-distinct but reproducible for a
+      fixed mesh shape (resharding the same log over a different device count
+      changes the sample sequence and hence the returned pi);
+    * ``num_iters`` / ``local_batch`` — iteration count and PER-DEVICE batch;
+      the effective global batch is ``local_batch * num_devices``, and the
+      update is scaled by it, so growing the mesh tightens the residual
+      estimate without retuning ``eta``;
+    * ``eta`` / ``eta_decay`` — step size ``eta / (1 + eta_decay * t)``;
+    * ``pi0`` — optional warm start (defaults to all-ones = nobody capped);
+    * ``coupling`` — ``"shared"`` draws ONE uniform per sampled event
+      (campaign activations comonotone, the paper's default); ``"independent"``
+      draws per-(event, campaign);
+    * ``event_axes`` — ordering contract as per the module docstring.
+
+    Returns the replicated (C,) pi estimate (identical on every device).
     """
     axes = tuple(event_axes)
     n_events, n_campaigns = values.shape
@@ -243,3 +309,423 @@ def estimate_pi_sharded(
         return jax.lax.pmean(pi, axes)
 
     return jax.jit(_vi)(values, pi_init, key)
+
+
+# --------------------------------------------------------------------------
+# Mesh-batched scenario sweep: the batched Algorithm-2 while_loop, sharded
+# --------------------------------------------------------------------------
+
+def _check_sweep_shapes(values, budgets, rules, spec,
+                        require_block_alignment=True):
+    """Static-shape validation + the shard contract.
+
+    ``require_block_alignment`` adds the canonical-reduction-grid alignment
+    needed for :func:`sweep_sharded`'s bit-for-bit guarantee; the
+    SORT2AGGREGATE sweep paths (plain psum'd spends, tolerance-checked) only
+    need evenly divisible shards.
+    """
+    if rules.multipliers.ndim != 2 or budgets.ndim != 2:
+        raise ValueError(
+            "sweep inputs must be batched: multipliers/budgets (S, C), "
+            f"got {rules.multipliers.shape} / {budgets.shape}")
+    n_events, n_campaigns = values.shape
+    n_scenarios = budgets.shape[0]
+    if budgets.shape[1] != n_campaigns or \
+            rules.multipliers.shape != budgets.shape:
+        raise ValueError(
+            f"scenario batch mismatch: values C={n_campaigns}, "
+            f"multipliers {rules.multipliers.shape}, budgets {budgets.shape}")
+    d_ev = spec.event_device_count
+    if n_events % d_ev != 0:
+        raise ValueError(
+            f"ragged shard: N={n_events} events over {d_ev} event-axis "
+            f"devices leaves a remainder of {n_events % d_ev}. Pad the event "
+            "log to a multiple of the event-device count (zero-valuation "
+            "events never win, but they DO count toward rate denominators — "
+            "pad the log upstream where that is accounted for) or use "
+            "driver='batched'.")
+    block = seg_lib.reduce_block_size(n_events)
+    local_n = n_events // d_ev
+    if require_block_alignment and d_ev > 1 and local_n % block != 0:
+        if seg_lib.REDUCE_BLOCKS % d_ev != 0:
+            # no N can align: shards can never hold whole canonical blocks
+            raise ValueError(
+                f"shard/grid misalignment: {d_ev} event-axis devices cannot "
+                f"divide the canonical reduction grid (REDUCE_BLOCKS="
+                f"{seg_lib.REDUCE_BLOCKS}); the event-device count must "
+                "divide REDUCE_BLOCKS for the bit-for-bit contract. Use a "
+                "device count that divides it, raise "
+                "repro.core.segments.REDUCE_BLOCKS (a repo-wide constant — "
+                "it regroups every driver's reductions consistently, so the "
+                "cross-driver bit-for-bit contract is preserved but absolute "
+                "low bits shift), or use driver='batched'.")
+        g = seg_lib.REDUCE_BLOCKS
+        aligned_n = max(1, -(-n_events // g)) * g   # d_ev | g => d_ev | k*g
+        raise ValueError(
+            f"shard/grid misalignment: each shard holds {local_n} events but "
+            f"the canonical reduction grid uses blocks of {block} "
+            f"(REDUCE_BLOCKS={g}); shards must hold whole blocks for the "
+            f"bit-for-bit reduction contract. Pad N to a multiple of {g} "
+            f"(e.g. {aligned_n}), or use driver='batched'.")
+    d_sc = spec.scenario_device_count
+    if n_scenarios % d_sc != 0:
+        raise ValueError(
+            f"ragged scenario shard: S={n_scenarios} scenarios over {d_sc} "
+            f"devices on mesh axis {spec.scenario_axis!r}. Pad the grid with "
+            "repeats of the base design, or drop scenario_axis.")
+
+
+def make_sharded_sweep_kernels(
+    spec: SweepMeshSpec,
+    *,
+    n_events: int,
+    n_campaigns: int,
+    kind: str = "first_price",
+    resolve: str = "auto",
+    block_t: int = 256,
+    interpret: Optional[bool] = None,
+):
+    """Build the three per-round closures of the mesh-batched sweep loop.
+
+    All three run INSIDE the sweep's ``shard_map`` (they use the mesh axis
+    names) and carry batched scenario arrays with the local scenario count as
+    the leading axis:
+
+    * ``resolve_all(values_local, active, rules_local)`` →
+      ``(winners, prices)`` (S_local, local_n) — purely local, no collectives
+      (the auction is per-event); ``resolve`` picks the jnp or the Pallas
+      ``sweep_resolve`` back-end exactly as in :mod:`repro.core.sweep`;
+    * ``rate_all(winners, prices, n_hat)`` → per-scenario remaining-rate
+      (S_local, C): local canonical block partials
+      (:func:`repro.core.segments.partial_spend_sums`), ONE psum over the
+      event axes, then the same final reduce as the single-device driver;
+    * ``block_all(winners, prices, lo, hi)`` → per-scenario block spends
+      (S_local, C), same structure, the round's second (and last) psum.
+
+    The two psums are the loop's only cross-device traffic: each moves a
+    float32 tensor of shape (S_local, REDUCE_BLOCKS, C) — the two (S, C)
+    reductions of the paper's map-reduce round, kept in canonical block
+    partials so the result is bitwise identical to the single-device loop
+    (docs/SCALING.md explains why unique block ownership makes the psum
+    exact).
+    """
+    axes = tuple(spec.event_axes)
+    local_n = n_events // spec.event_device_count
+    block = seg_lib.reduce_block_size(n_events)
+    if resolve == "auto":
+        resolve = "pallas" if resolve_ops.ON_TPU else "jnp"
+    if resolve not in ("pallas", "jnp"):
+        raise ValueError(f"unknown resolve back-end: {resolve}")
+    use_interpret = (interpret if interpret is not None
+                     else not resolve_ops.ON_TPU)
+
+    def resolve_all(values_local, active, rules_local):
+        if resolve == "jnp":
+            return jax.vmap(
+                lambda a, r: auction.resolve(values_local, a, r),
+                in_axes=(0, 0))(active, rules_local)
+        winners, prices, _ = resolve_ops.sweep_resolve(
+            values_local, rules_local.multipliers, active,
+            rules_local.reserve, second_price=(kind == "second_price"),
+            block_t=block_t, interpret=use_interpret)
+        return winners, prices
+
+    def _partials(winners, prices, weight_fn, *args):
+        offset = _global_offset(axes, local_n)
+        gidx = offset + jnp.arange(local_n, dtype=jnp.int32)
+
+        def one(w, p, *a):
+            weight = weight_fn(gidx, *a).astype(p.dtype)
+            return seg_lib.partial_spend_sums(
+                w, p, n_campaigns, weight, block_size=block,
+                index_offset=offset)
+
+        parts = jax.vmap(one)(winners, prices, *args)  # (S_l, G, C)
+        return jax.lax.psum(parts, axes)
+
+    def rate_all(winners, prices, n_hat):
+        parts = _partials(winners, prices, lambda g, nh: g >= nh, n_hat)
+
+        def one(pt, nh):
+            sums = pt.sum(axis=0)
+            denom = jnp.maximum(n_events - nh, 1).astype(sums.dtype)
+            return sums / denom
+
+        return jax.vmap(one)(parts, n_hat)
+
+    def block_all(winners, prices, lo, hi):
+        parts = _partials(winners, prices,
+                          lambda g, l, h: (g >= l) & (g < h), lo, hi)
+        return jax.vmap(lambda pt: pt.sum(axis=0))(parts)
+
+    return resolve_all, rate_all, block_all
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "resolve", "block_t",
+                                             "interpret"))
+def sweep_sharded(
+    values: jax.Array,            # (N, C) — events sharded over the mesh
+    budgets: jax.Array,           # (S, C)
+    rules: AuctionRule,           # batched: multipliers (S, C), reserve (S,)
+    spec: SweepMeshSpec,
+    resolve: str = "auto",
+    block_t: int = 256,
+    interpret: Optional[bool] = None,
+):
+    """The batched Algorithm-2 loop as ONE mesh program: events sharded over
+    ``spec.event_axes``, campaign/scenario state replicated, the scenario
+    axis vmapped per device or sharded over ``spec.scenario_axis``.
+
+    Structurally this is :func:`repro.core.sweep.sweep_state_machine` moved
+    under ``shard_map``: the while_loop carries the identical batched
+    ``(s_hat, active, cap_times, n_hat)`` + round-log state, each round
+    resolves only the LOCAL event shard, and the per-lane scalar logic is the
+    same :func:`repro.core.parallel.lane_predict` /
+    :func:`~repro.core.parallel.lane_commit` pair the single-device loop
+    runs. Per round the only cross-device traffic is the two psum'd
+    canonical block-partial tensors (see :func:`make_sharded_sweep_kernels`),
+    so results are **bit-for-bit identical to the single-device
+    ``sweep_state_machine``** on any mesh satisfying the alignment contract
+    (shards hold whole canonical reduction blocks; checked, with a
+    pad-or-error message, at trace time).
+
+    Returns the same batched tuple as ``sweep_state_machine``:
+    ``(s_hat (S, C), cap_times (S, C), retired (S, C+1), boundaries
+    (S, C+2), num_rounds (S,), n_hat (S,))``, gathered across the scenario
+    axis when one is meshed.
+    """
+    _check_sweep_shapes(values, budgets, rules, spec)
+    n_events, n_campaigns = values.shape
+    sentinel = jnp.int32(never_capped(n_events))
+    mesh, sc = spec.mesh, spec.scenario_axis
+    resolve_all, rate_all, block_all = make_sharded_sweep_kernels(
+        spec, n_events=n_events, n_campaigns=n_campaigns, kind=rules.kind,
+        resolve=resolve, block_t=block_t, interpret=interpret)
+
+    spec_vals = P(tuple(spec.event_axes), None)
+    spec_sc2 = P(sc, None)        # (S, ...) arrays; sc=None -> replicated
+    spec_sc1 = P(sc)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec_vals, spec_sc2, spec_sc2, spec_sc1),
+        out_specs=(spec_sc2, spec_sc2, spec_sc2, spec_sc2, spec_sc1,
+                   spec_sc1))
+    def _driver(values_local, b_local, mult_local, res_local):
+        s_local = b_local.shape[0]
+        rules_local = AuctionRule(multipliers=mult_local, reserve=res_local,
+                                  kind=rules.kind)
+        b = b_local.astype(jnp.float32)
+        lane_pred = functools.partial(lane_predict, n_events=n_events)
+        lane_comm = functools.partial(lane_commit, sentinel=sentinel)
+
+        def alive(core):
+            _, active, _, n_hat, rnd, _, _ = core
+            return (rnd < n_campaigns + 1) & (n_hat < n_events) \
+                & active.any(-1)
+
+        def global_any(flags):
+            # with a meshed scenario axis the loop must run until the LAST
+            # slice retires its last cap-out (same trip count everywhere so
+            # the event-axis psums stay aligned); event-axis devices already
+            # agree (replicated state), so only the scenario axis reduces.
+            local = jnp.any(flags)
+            if sc is None:
+                return local
+            return jax.lax.psum(local.astype(jnp.int32), sc) > 0
+
+        def body(st):
+            core, _ = st
+            s_hat, active, cap, n_hat, rnd, retired, bnds = core
+            winners, prices = resolve_all(values_local, active, rules_local)
+            rates = rate_all(winners, prices, n_hat)
+            c_next, no_cap, n_next = jax.vmap(lane_pred)(
+                rates, b, s_hat, active, n_hat)
+            blk = block_all(winners, prices, n_hat, n_next)
+            new = jax.vmap(lane_comm)(blk, c_next, no_cap, n_next, s_hat,
+                                      active, cap, rnd, retired, bnds)
+            keep = alive(core)
+            merged = jax.tree.map(
+                lambda n, o: jnp.where(
+                    keep.reshape(keep.shape + (1,) * (n.ndim - 1)), n, o),
+                new, core)
+            return merged, global_any(alive(merged))
+
+        init_core = (
+            jnp.zeros((s_local, n_campaigns), jnp.float32),
+            jnp.ones((s_local, n_campaigns), bool),
+            jnp.full((s_local, n_campaigns), sentinel, jnp.int32),
+            jnp.zeros((s_local,), jnp.int32),
+            jnp.zeros((s_local,), jnp.int32),
+            jnp.full((s_local, n_campaigns + 1), -1, jnp.int32),
+            jnp.zeros((s_local, n_campaigns + 2), jnp.int32),
+        )
+        core, _ = jax.lax.while_loop(
+            lambda st: st[1], body, (init_core, global_any(alive(init_core))))
+        s_hat, active, cap, n_hat, rnd, retired, bnds = core
+        return s_hat, cap, retired, bnds, rnd, n_hat
+
+    return _driver(values, budgets, rules.multipliers,
+                   jnp.asarray(rules.reserve, jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Mesh-batched SORT2AGGREGATE sweep (Algorithm-3 with warm starts, sharded)
+# --------------------------------------------------------------------------
+
+def _batched_first_crossing(winners, prices, local_sums, budgets, offset,
+                            axes, n_events, n_campaigns):
+    """Distributed first-crossing for a scenario batch (inside shard_map).
+
+    Same two-pass prefix as :func:`_local_first_crossing`, with the
+    collectives hoisted out of the scenario vmap: ONE all-gather of the
+    (S_local, C) partials builds every device's exclusive prefix, the local
+    cumulative scan runs vmapped, and ONE pmin merges the candidates.
+    """
+    s_local, local_n = winners.shape
+    all_sums = jax.lax.all_gather(local_sums, axes, tiled=False)
+    # (ndev, S_local, C)
+    ndev = all_sums.shape[0]
+    my_rank = offset // local_n
+    before = (jnp.arange(ndev, dtype=jnp.int32) < my_rank
+              ).astype(local_sums.dtype)
+    s0 = (all_sums * before[:, None, None]).sum(axis=0)      # (S_local, C)
+    sentinel = jnp.int32(never_capped(n_events))
+
+    def one(w, p, s0_s, b_s):
+        sm = auction.spend_matrix(w, p, n_campaigns)
+        cum = s0_s[None, :] + jnp.cumsum(sm, axis=0)
+        crossed = cum >= b_s[None, :]
+        any_cross = crossed.any(axis=0)
+        t_first = jnp.argmax(crossed, axis=0)
+        return jnp.where(any_cross,
+                         (offset + t_first + 1).astype(jnp.int32), sentinel)
+
+    cand = jax.vmap(one)(winners, prices, s0, budgets)       # (S_local, C)
+    return jax.lax.pmin(cand, axes)
+
+
+def sweep_first_crossing_sharded(
+    values: jax.Array,            # (N, C) — events sharded
+    cap_times: jax.Array,         # (S, C) assumed cap times (1-based)
+    budgets: jax.Array,           # (S, C)
+    rules: AuctionRule,           # batched
+    spec: SweepMeshSpec,
+) -> jax.Array:
+    """Diagnose each scenario's budget-crossing times under its assumed cap
+    times, on the mesh — the scenario-batched extension of
+    :func:`sharded_first_crossing` and the engine of the sharded
+    SORT2AGGREGATE refine step. Returns (S, C) 1-based crossing times
+    (``N+1`` = never crosses)."""
+    _check_sweep_shapes(values, budgets, rules, spec,
+                        require_block_alignment=False)
+    _, caps, _ = _sweep_s2a_program(values, cap_times, budgets, rules, spec,
+                                    refine_iters=0)
+    return caps
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "refine_iters"))
+def _sweep_s2a_program(values, cap_times0, budgets, rules, spec,
+                       refine_iters):
+    """(S, C) spends + diagnosed crossing times after ``refine_iters``
+    fixed-point iterations of the segment history, all on the mesh."""
+    n_events, n_campaigns = values.shape
+    sentinel = jnp.int32(never_capped(n_events))
+    axes = tuple(spec.event_axes)
+    sc = spec.scenario_axis
+    local_n = n_events // spec.event_device_count
+
+    spec_vals = P(axes, None)
+    spec_sc2 = P(sc, None)
+
+    @functools.partial(
+        shard_map, mesh=spec.mesh,
+        in_specs=(spec_vals, spec_sc2, spec_sc2, spec_sc2, P(sc)),
+        out_specs=(spec_sc2, spec_sc2, spec_sc2))
+    def _s2a(values_local, caps0_l, b_l, mult_l, res_l):
+        offset = _global_offset(axes, local_n)
+        gidx = offset + jnp.arange(local_n, dtype=jnp.int32)
+        rules_l = AuctionRule(multipliers=mult_l, reserve=res_l,
+                              kind=rules.kind)
+        b = b_l.astype(jnp.float32)
+
+        def replay(caps):
+            """One sharded aggregate pass under per-scenario cap times.
+
+            The (local_n, C) activation mask is rebuilt locally from the
+            replicated cap times (event n is active for campaign c iff
+            ``n < cap_times[c]`` — the per-event form of the
+            ``Segments.from_cap_times`` masks, since every finite cap time
+            is itself a segment boundary), so only the (S_local, C) spend
+            partials and crossing candidates cross the interconnect.
+            """
+            def one(caps_s, r_s):
+                act = gidx[:, None] < caps_s[None, :]
+                winners, prices = auction.resolve(values_local, act, r_s)
+                return winners, prices, auction.spend_sums(
+                    winners, prices, n_campaigns)
+
+            winners, prices, local_sums = jax.vmap(one)(caps, rules_l)
+            totals = jax.lax.psum(local_sums, axes)
+            caps_diag = _batched_first_crossing(
+                winners, prices, local_sums, b, offset, axes, n_events,
+                n_campaigns)
+            return totals, caps_diag
+
+        caps = jnp.minimum(caps0_l.astype(jnp.int32), sentinel)
+        if refine_iters > 0:
+            def step(c, _):
+                _, diag = replay(c)
+                return jnp.minimum(diag, sentinel), None
+            caps, _ = jax.lax.scan(step, caps, None, length=refine_iters)
+        totals, caps_diag = replay(caps)
+        return totals, caps_diag, caps
+
+    return _s2a(values, cap_times0, budgets, rules.multipliers,
+                jnp.asarray(rules.reserve, jnp.float32))
+
+
+def sweep_sort2aggregate_sharded(
+    values: jax.Array,            # (N, C) — events sharded
+    budgets: jax.Array,           # (S, C)
+    rules: AuctionRule,           # batched
+    spec: SweepMeshSpec,
+    cap_times_init: Optional[jax.Array] = None,   # (S, C) or (C,) warm start
+    refine_iters: int = 8,
+) -> Tuple[SimResult, jax.Array]:
+    """SORT2AGGREGATE over a scenario batch, on the mesh: per-scenario
+    fixed-point refinement of the cap times + one aggregate pass, events
+    sharded throughout (the mesh analogue of
+    :func:`repro.core.sweep.sweep_sort2aggregate`).
+
+    Each refine iteration does one local resolve of the shard under every
+    scenario's activation mask, one (S, C) psum of spend partials, and one
+    all-gather + pmin for the distributed crossing diagnosis. Warm-start
+    with the base design's cap times (on the mesh: ``estimate_pi_sharded``
+    + ``pi_to_cap_times``, which is what
+    ``CounterfactualEngine.sweep(method="sort2aggregate", driver="sharded")``
+    does) or default to the optimistic all-active start.
+
+    Unlike :func:`sweep_sharded`, spends here are plain psum'd partials (the
+    aggregate pass is tolerance-checked against the oracle anyway, not
+    bit-compared), so they can differ from the single-device sweep in the
+    last ulp; crossing times are integer decisions and agree in practice.
+    Returns ``(results, consistency_gaps)`` with ``gaps[s]`` the max
+    |assumed − replayed| cap time of scenario ``s``, in events.
+    """
+    _check_sweep_shapes(values, budgets, rules, spec,
+                        require_block_alignment=False)
+    n_events, n_campaigns = values.shape
+    n_scenarios = budgets.shape[0]
+    if cap_times_init is None:
+        cap_times_init = jnp.full((n_campaigns,), n_events + 1, jnp.int32)
+    caps0 = jnp.broadcast_to(jnp.asarray(cap_times_init, jnp.int32),
+                             (n_scenarios, n_campaigns))
+    totals, caps_diag, caps_assumed = _sweep_s2a_program(
+        values, caps0, budgets, rules, spec, refine_iters=refine_iters)
+    sentinel = jnp.int32(never_capped(n_events))
+    gaps = jnp.max(jnp.abs(jnp.minimum(caps_diag, sentinel) - caps_assumed)
+                   .astype(jnp.float32), axis=-1)
+    result = SimResult(final_spend=totals, cap_times=caps_diag,
+                       winners=None, prices=None, segments=None)
+    return result, gaps

@@ -35,6 +35,12 @@ Two resolve back-ends drive the Algorithm-2 sweep:
 
 ``resolve="auto"`` (the default) picks ``"pallas"`` on TPU and falls back to
 the vmapped jnp path on CPU, where the kernel would run in interpret mode.
+
+Orthogonally, ``driver="sharded"`` moves the batched while_loop onto a device
+mesh (:func:`repro.core.sharded.sweep_sharded`): the event axis is sharded
+across devices, the scenario axis is vmapped per device or mapped to a second
+mesh axis, and each round's two reductions are psum'd — bit-for-bit identical
+to the single-device drivers on any aligned mesh. See docs/SCALING.md.
 """
 from __future__ import annotations
 
@@ -109,7 +115,8 @@ def sweep_sequential(
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("resolve", "block_t", "interpret"))
+                   static_argnames=("resolve", "block_t", "interpret",
+                                    "driver", "mesh"))
 def sweep_parallel(
     values: jax.Array,            # (N, C)
     budgets: jax.Array,           # (S, C)
@@ -117,6 +124,8 @@ def sweep_parallel(
     resolve: str = "auto",
     block_t: int = 256,
     interpret: Optional[bool] = None,
+    driver: str = "batched",
+    mesh=None,                    # SweepMeshSpec, driver="sharded" only
 ) -> SimResult:
     """Algorithm 2 over a scenario batch: one device program, serial depth
     ``max_s K_s``. The batched while_loop runs until the slowest scenario
@@ -124,13 +133,36 @@ def sweep_parallel(
     lanes' updates are discarded by select) — total work is S × max_s K_s
     resolves, so heavily skewed grids pay for their slowest member.
 
+    ``driver`` picks where the batched loop runs:
+
+    * ``"batched"`` (default) — one device, as below;
+    * ``"sharded"`` — the same loop under ``shard_map`` on the mesh named by
+      ``mesh`` (a :class:`repro.launch.mesh.SweepMeshSpec`): events sharded,
+      scenarios vmapped per device or sharded along a second mesh axis.
+      Bit-for-bit identical to ``"batched"`` on any aligned mesh (see
+      :func:`repro.core.sharded.sweep_sharded` and docs/SCALING.md).
+
     ``resolve`` picks the per-round resolve back-end (see module docstring):
     ``"jnp"`` vmaps the single-scenario state machine; ``"pallas"`` runs the
     batched state machine with the tile-reusing kernel (``interpret`` forces /
     suppresses Pallas interpret mode — default: interpret off TPU only);
-    ``"auto"`` is pallas on TPU, jnp elsewhere.
+    ``"auto"`` is pallas on TPU, jnp elsewhere. Both compose with either
+    driver.
     """
     _check_batch(values, budgets, rules)
+    if driver == "sharded":
+        if mesh is None:
+            raise ValueError(
+                "driver='sharded' needs mesh=SweepMeshSpec(...); see "
+                "repro.launch.mesh.SweepMeshSpec.for_devices")
+        from repro.core.sharded import sweep_sharded
+        s_hat, cap_times, _, _, _, _ = sweep_sharded(
+            values, budgets, rules, mesh, resolve=resolve, block_t=block_t,
+            interpret=interpret)
+        return SimResult(final_spend=s_hat, cap_times=cap_times,
+                         winners=None, prices=None, segments=None)
+    if driver != "batched":
+        raise ValueError(f"unknown sweep driver: {driver}")
     if resolve == "auto":
         resolve = "pallas" if resolve_ops.ON_TPU else "jnp"
     if resolve == "jnp":

@@ -1,5 +1,6 @@
 """Launch layer. NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import
 it only in dedicated processes (the dry-run/hillclimb CLIs)."""
-from repro.launch.mesh import make_production_mesh, make_mesh, data_axes
+from repro.launch.mesh import (make_production_mesh, make_mesh, data_axes,
+                               SweepMeshSpec)
 
-__all__ = ["make_production_mesh", "make_mesh", "data_axes"]
+__all__ = ["make_production_mesh", "make_mesh", "data_axes", "SweepMeshSpec"]

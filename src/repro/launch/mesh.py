@@ -1,4 +1,4 @@
-"""Production mesh construction.
+"""Production mesh construction + sweep mesh specs.
 
 A function (not a module-level constant) so importing this module never
 touches jax device state. Single pod: (16, 16) = 256 chips, axes
@@ -7,8 +7,16 @@ axis that is pure data-parallel — the only cross-pod collective in any of our
 programs is the per-step gradient/residual all-reduce (which
 repro.comm.compression can compress), so scaling beyond 2 pods = growing this
 axis.
+
+:class:`SweepMeshSpec` names how a scenario sweep maps onto a mesh: which
+axes shard the event log and which (optional) axis shards the scenario grid —
+the contract consumed by :func:`repro.core.sharded.sweep_sharded`. Axis
+conventions are documented in docs/SCALING.md.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
 
 import jax
 
@@ -42,3 +50,87 @@ def make_mesh(shape, axes):
 def data_axes(mesh) -> tuple:
     """The event/batch axes of a mesh (everything except 'model')."""
     return tuple(a for a in mesh.axis_names if a != "model")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepMeshSpec:
+    """How a scenario sweep maps onto a device mesh.
+
+    * ``event_axes`` — mesh axes that shard the event (leading) dimension of
+      the (N, C) valuation matrix, row-major in the given order (the same
+      ordering contract as ``repro.core.sharded.shard_events``); campaign
+      state stays replicated along them.
+    * ``scenario_axis`` — optional mesh axis that shards the scenario grid:
+      each slice of devices runs S / axis_size scenarios. ``None`` (default)
+      keeps all scenarios vmapped on every event-shard.
+
+    Frozen + hashable, so it can ride through ``jax.jit`` as a static
+    argument. Build one with :meth:`for_devices` (host-platform meshes for
+    tests/CI via ``XLA_FLAGS=--xla_force_host_platform_device_count=…``) or
+    wrap an existing mesh directly.
+    """
+
+    mesh: jax.sharding.Mesh
+    event_axes: Tuple[str, ...] = ("data",)
+    scenario_axis: Optional[str] = None
+
+    def __post_init__(self):
+        names = set(self.mesh.axis_names)
+        missing = [a for a in (*self.event_axes,
+                               *((self.scenario_axis,)
+                                 if self.scenario_axis else ()))
+                   if a not in names]
+        if missing:
+            raise ValueError(
+                f"mesh has axes {self.mesh.axis_names}; spec names "
+                f"unknown axes {missing}")
+        if self.scenario_axis in self.event_axes:
+            raise ValueError(
+                f"scenario_axis {self.scenario_axis!r} cannot also shard "
+                "events")
+
+    @property
+    def event_device_count(self) -> int:
+        size = 1
+        for a in self.event_axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    @property
+    def scenario_device_count(self) -> int:
+        return self.mesh.shape[self.scenario_axis] if self.scenario_axis \
+            else 1
+
+    @staticmethod
+    def for_devices(num_event_devices: Optional[int] = None,
+                    num_scenario_devices: int = 1) -> "SweepMeshSpec":
+        """A sweep mesh over the locally visible devices.
+
+        Defaults to all devices on the event axis; pass
+        ``num_scenario_devices > 1`` to split off a trailing "model" axis for
+        the scenario grid (total devices = event × scenario).
+        """
+        n_total = len(jax.devices())
+        if num_scenario_devices < 1:
+            raise ValueError(
+                f"num_scenario_devices must be >= 1, got "
+                f"{num_scenario_devices}")
+        if num_event_devices is None:
+            if n_total % num_scenario_devices != 0:
+                raise ValueError(
+                    f"{n_total} visible devices do not split into scenario "
+                    f"groups of {num_scenario_devices}; pass "
+                    "num_event_devices explicitly")
+            num_event_devices = n_total // num_scenario_devices
+        if num_event_devices < 1 or \
+                num_event_devices * num_scenario_devices > n_total:
+            raise ValueError(
+                f"asked for {num_event_devices}×{num_scenario_devices} "
+                f"devices but only {n_total} are visible")
+        if num_scenario_devices > 1:
+            mesh = _make_mesh((num_event_devices, num_scenario_devices),
+                              ("data", "model"))
+            return SweepMeshSpec(mesh, event_axes=("data",),
+                                 scenario_axis="model")
+        mesh = _make_mesh((num_event_devices,), ("data",))
+        return SweepMeshSpec(mesh, event_axes=("data",))

@@ -18,11 +18,12 @@ import pytest
 
 from repro.core import (AuctionRule, CounterfactualEngine, ScenarioGrid,
                         parallel_simulate, sequential_replay,
-                        sweep_parallel, sweep_sequential,
+                        sweep_parallel, sweep_sequential, sweep_sharded,
                         sweep_sort2aggregate, sweep_state_machine,
                         stack_rules)
 from repro.core.metrics import spend_weighted_relative_error
 from repro.data import make_synthetic_env
+from repro.launch.mesh import SweepMeshSpec
 
 N_EVENTS = 4096
 N_CAMPAIGNS = 16
@@ -254,6 +255,55 @@ def test_sweep_rejects_unknown_resolve(env):
     with pytest.raises(ValueError):
         sweep_state_machine(env.values, grid.budgets, grid.rules,
                             resolve="cuda")
+
+
+# ---------------------------------------------------------------------------
+# (d) sharded driver: 1×1 mesh == the single-device batched loop, exactly
+# ---------------------------------------------------------------------------
+
+def test_sweep_sharded_1x1_mesh_bit_for_bit(env):
+    """On a trivial mesh the sharded driver IS the batched state machine —
+    every output bitwise equal (the base case of the mesh-invariance
+    contract asserted at 4+ devices in test_sharded_sweep.py /
+    test_sharded_core.py)."""
+    grid = _grid(env, "first_price")
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp")
+    spec = SweepMeshSpec.for_devices(num_event_devices=1)
+    out = sweep_sharded(env.values, grid.budgets, grid.rules, spec)
+    for name, a, b in zip(("final_spend", "cap_times", "retired",
+                           "boundaries", "num_rounds", "n_hat"), out, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_engine_sweep_sharded_auto_smoke(env):
+    """driver="sharded" × resolve="auto" through the engine API: runs on
+    whatever mesh fits the local devices and matches the batched driver."""
+    engine = CounterfactualEngine(env.values, env.budgets)
+    grid = engine.grid(bid_scales=[1.0, 1.1], reserves=[0.0, 0.02])
+    spec = SweepMeshSpec.for_devices()
+    ref = engine.sweep(grid, method="parallel")
+    out = engine.sweep(grid, method="parallel", driver="sharded", mesh=spec,
+                       resolve="auto")
+    np.testing.assert_array_equal(np.asarray(out.results.final_spend),
+                                  np.asarray(ref.results.final_spend))
+    np.testing.assert_array_equal(np.asarray(out.results.cap_times),
+                                  np.asarray(ref.results.cap_times))
+    assert out.delta_table() == ref.delta_table()
+
+
+def test_sweep_sharded_driver_requires_mesh(env):
+    grid = _grid(env, "first_price")
+    with pytest.raises(ValueError, match="needs mesh"):
+        sweep_parallel(env.values, grid.budgets, grid.rules,
+                       driver="sharded")
+
+
+def test_sweep_rejects_unknown_driver(env):
+    grid = _grid(env, "first_price")
+    with pytest.raises(ValueError, match="unknown sweep driver"):
+        sweep_parallel(env.values, grid.budgets, grid.rules, driver="mpi")
 
 
 # ---------------------------------------------------------------------------

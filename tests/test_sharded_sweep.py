@@ -1,0 +1,162 @@
+"""Mesh-batched scenario sweep: in-process multi-device tests.
+
+These run the real multi-device code paths (no subprocess), so they need the
+test process itself to have been started with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m pytest tests/test_sharded_sweep.py
+
+— which is exactly what the dedicated CI step does. Under a default
+single-device run everything here skips; the multi-device contracts are still
+covered in tier-1 via the subprocess test in ``test_sharded_core.py``.
+
+The headline contract: ``sweep_sharded`` is bit-for-bit the single-device
+``sweep_state_machine`` on any aligned mesh — event-sharded, and
+event×scenario-sharded — because the per-round reductions go through the
+canonical block partials of ``repro.core.segments`` (docs/SCALING.md).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AuctionRule, CounterfactualEngine, ScenarioGrid,
+                        sweep_sharded, sweep_state_machine)
+from repro.data import make_synthetic_env
+from repro.launch.mesh import SweepMeshSpec
+
+N_EVENTS = 4096
+N_CAMPAIGNS = 16
+
+needs_4_devices = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4")
+
+
+@pytest.fixture(scope="module")
+def env():
+    return make_synthetic_env(jax.random.PRNGKey(1), n_events=N_EVENTS,
+                              n_campaigns=N_CAMPAIGNS, emb_dim=8)
+
+
+def _grid(env):
+    base = AuctionRule.first_price(N_CAMPAIGNS)
+    return ScenarioGrid.product(base, env.budgets,
+                                bid_scales=[1.0, 0.9, 1.1, 1.3],
+                                reserves=[0.0, 0.05])
+
+
+def _assert_bitwise(out, ref, label):
+    names = ("final_spend", "cap_times", "retired", "boundaries",
+             "num_rounds", "n_hat")
+    for name, a, b in zip(names, out, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{label}: {name}")
+
+
+@needs_4_devices
+def test_event_sharded_sweep_bit_for_bit(env):
+    """4 event-shard devices: every output of the batched loop is bitwise
+    the single-device sweep's."""
+    grid = _grid(env)
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp")
+    spec = SweepMeshSpec.for_devices(num_event_devices=4)
+    out = sweep_sharded(env.values, grid.budgets, grid.rules, spec)
+    _assert_bitwise(out, ref, "event-sharded 4x1")
+
+
+@needs_4_devices
+def test_event_and_scenario_sharded_sweep_bit_for_bit(env):
+    """2×2 mesh, events on "data" and scenarios on "model": still bitwise."""
+    grid = _grid(env)
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp")
+    spec = SweepMeshSpec.for_devices(num_event_devices=2,
+                                     num_scenario_devices=2)
+    assert spec.scenario_axis == "model"
+    out = sweep_sharded(env.values, grid.budgets, grid.rules, spec)
+    _assert_bitwise(out, ref, "event+scenario 2x2")
+
+
+@needs_4_devices
+def test_sharded_pallas_resolve_matches_batched(env):
+    """driver-level resolve back-ends compose: the Pallas kernel (interpret
+    mode on CPU) inside shard_map reproduces the jnp sharded sweep."""
+    grid = _grid(env)
+    spec = SweepMeshSpec.for_devices(num_event_devices=4)
+    ref = sweep_sharded(env.values, grid.budgets, grid.rules, spec,
+                        resolve="jnp")
+    pal = sweep_sharded(env.values, grid.budgets, grid.rules, spec,
+                        resolve="pallas", interpret=True)
+    _assert_bitwise(pal, ref, "pallas vs jnp sharded")
+
+
+@needs_4_devices
+def test_ragged_event_shard_raises(env):
+    """N not divisible by the event-device count: explicit pad-or-error."""
+    grid = _grid(env)
+    spec = SweepMeshSpec.for_devices(num_event_devices=4)
+    with pytest.raises(ValueError, match="ragged shard"):
+        sweep_sharded(env.values[: N_EVENTS - 3], grid.budgets, grid.rules,
+                      spec)   # 4093 events over 4 devices
+
+
+@needs_4_devices
+def test_misaligned_reduction_grid_raises(env):
+    """N divisible by the device count but shards not holding whole canonical
+    reduction blocks: the bit-for-bit contract cannot hold, so error."""
+    grid = _grid(env)
+    spec = SweepMeshSpec.for_devices(num_event_devices=4)
+    with pytest.raises(ValueError, match="misalignment"):
+        sweep_sharded(env.values[: N_EVENTS - 28], grid.budgets, grid.rules,
+                      spec)   # 4068 events: shards of 1017, blocks of 128
+
+
+@needs_4_devices
+def test_ragged_scenario_shard_raises(env):
+    base = AuctionRule.first_price(N_CAMPAIGNS)
+    grid = ScenarioGrid.product(base, env.budgets,
+                                bid_scales=[1.0, 1.1, 1.2])   # S=3
+    spec = SweepMeshSpec.for_devices(num_event_devices=2,
+                                     num_scenario_devices=2)
+    with pytest.raises(ValueError, match="ragged scenario"):
+        sweep_sharded(env.values, grid.budgets, grid.rules, spec)
+
+
+@needs_4_devices
+def test_engine_sweep_sharded_delta_table(env):
+    """CounterfactualEngine.sweep(driver="sharded") reproduces the batched
+    engine sweep end-to-end, delta table included."""
+    engine = CounterfactualEngine(env.values, env.budgets)
+    grid = engine.grid(bid_scales=[1.0, 1.1], budget_scales=[1.0, 0.5])
+    spec = SweepMeshSpec.for_devices(num_event_devices=4)
+    ref = engine.sweep(grid, method="parallel")
+    out = engine.sweep(grid, method="parallel", driver="sharded", mesh=spec)
+    np.testing.assert_array_equal(np.asarray(out.results.final_spend),
+                                  np.asarray(ref.results.final_spend))
+    np.testing.assert_array_equal(np.asarray(out.results.cap_times),
+                                  np.asarray(ref.results.cap_times))
+    assert out.delta_table() == ref.delta_table()
+
+
+@needs_4_devices
+def test_engine_sweep_sort2aggregate_sharded_warm_start(env):
+    """The Algorithm-4 warm-start path on the mesh: sharded VI + sharded base
+    refine + sharded per-scenario refine/aggregate converges to the same
+    fixed point as the single-device s2a sweep (caps equal; spends equal up
+    to psum regrouping — the aggregate pass is NOT under the canonical-grid
+    bitwise contract, see docs/SCALING.md)."""
+    engine = CounterfactualEngine(env.values, env.budgets)
+    grid = engine.grid(bid_scales=[1.0, 1.15])
+    spec = SweepMeshSpec.for_devices(num_event_devices=4)
+    ref = engine.sweep(grid, method="sort2aggregate")
+    out = engine.sweep(grid, method="sort2aggregate", driver="sharded",
+                       mesh=spec)
+    assert out.consistency_gaps is not None
+    np.testing.assert_array_equal(np.asarray(out.results.cap_times),
+                                  np.asarray(ref.results.cap_times))
+    np.testing.assert_allclose(np.asarray(out.results.final_spend),
+                               np.asarray(ref.results.final_spend),
+                               rtol=1e-5, atol=1e-3)
+    assert float(np.max(np.asarray(out.consistency_gaps))) == 0.0
