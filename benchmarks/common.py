@@ -38,6 +38,27 @@ def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1):
     return out, dt * 1e6      # us
 
 
+def time_pair(fn_a: Callable, fn_b: Callable, repeats: int = 15,
+              warmup: int = 2):
+    """Median times (us) of two callables measured INTERLEAVED (a, b, a, b,
+    …): background load drift hits both alike, so the comparison is stable
+    where two sequential :func:`time_call` windows can disagree by 2× on a
+    shared machine. Use for CI-gated A/B comparisons."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a())
+        jax.block_until_ready(fn_b())
+    ta, tb = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb.append(time.perf_counter() - t0)
+    med = lambda ts: sorted(ts)[len(ts) // 2] * 1e6
+    return med(ta), med(tb)
+
+
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")
 

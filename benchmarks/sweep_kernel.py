@@ -1,19 +1,32 @@
 """Scenario-batched resolve kernel throughput, tracked as BENCH_sweep.json.
 
-Two layers, each for S in a configurable schedule (default {1, 8, 32}):
+Three layers, each for S in a configurable schedule (default {1, 8, 32}):
 
 * ``resolve`` — one scenario-batched resolve of the full (N, C) valuation
   matrix: the ``sweep_resolve`` Pallas kernel (tile fetched to VMEM once,
   resolved S times) vs the vmapped jnp resolve (matrix streamed once per
-  scenario). This is the per-round cost inside the Algorithm-2 sweep loop.
+  scenario). This is the per-round resolve cost inside the Algorithm-2 sweep
+  loop.
+* ``round`` — one whole Algorithm-2 round: the FUSED path (resolve + rate
+  partials + cap-out prediction + block partials in ONE dispatch, the jnp
+  oracle of ``kernels/auction_resolve/round_fused.py`` — per-event
+  winners/prices never cross a program boundary) vs the unfused
+  resolve-then-reduce path (a resolve dispatch materialising (S, N)
+  winners/prices, then a reduce dispatch re-reading them). Rows carry the
+  per-scenario Algorithm-2 round counts (and their histogram), since total
+  sweep cost is rounds × round. **CI gate:** on CPU the fused oracle must
+  not be slower than resolve+reduce at the largest S in the schedule — the
+  benchmark exits non-zero if it is.
 * ``sweep`` — end-to-end ``sweep_parallel``: the batched state machine with
   ``resolve="pallas"`` vs the vmapped jnp state machine.
 
 Besides the usual CSV rows on stdout, merges a JSON perf section (default
 ``BENCH_sweep.json``, key ``sweep_kernel``, tagged with ``device_count``)
-with scenarios/sec per (S, path) so the trajectory is comparable across
-commits; CI uploads it as an artifact. On CPU the kernel runs in Pallas
-interpret mode — numbers there track correctness cost, not TPU speed.
+with scenarios/sec per (S, layer, path) so the trajectory is comparable
+across commits; CI uploads it as an artifact. On CPU the Pallas kernels run
+in interpret mode — those numbers track correctness cost, not TPU speed
+(which is why ``resolve="auto"`` routes around them; the ``round`` layer
+times the jnp realizations that actually run on CPU).
 ``benchmarks/sweep_scaling.py`` writes the multi-device rows of the same
 file.
 
@@ -21,8 +34,10 @@ file.
 """
 from __future__ import annotations
 
+import functools
+
 from benchmarks.common import (bench_report, emit, sweep_argparser,
-                               time_call, update_bench_json)
+                               time_call, time_pair, update_bench_json)
 
 
 def main(n_events: int = 2048, n_campaigns: int = 32,
@@ -31,7 +46,10 @@ def main(n_events: int = 2048, n_campaigns: int = 32,
     import jax
     import jax.numpy as jnp
 
-    from repro.core import AuctionRule, ScenarioGrid, auction, sweep_parallel
+    from repro.core import (AuctionRule, ScenarioGrid, auction,
+                            sweep_parallel, sweep_state_machine)
+    from repro.core import segments as seg_lib
+    from repro.core.parallel import lane_predict
     from repro.data import make_synthetic_env
     from repro.kernels.auction_resolve import ON_TPU, sweep_resolve
 
@@ -40,14 +58,47 @@ def main(n_events: int = 2048, n_campaigns: int = 32,
     base = AuctionRule.first_price(n_campaigns)
     records = []
 
-    def record(s_count, layer, path, us):
+    def record(s_count, layer, path, us, **extra):
         scn_per_sec = s_count / (us * 1e-6)
         emit(f"{layer}_S{s_count}_{path}", us,
              f"scn_per_sec={scn_per_sec:.2f}")
         records.append({"S": s_count, "layer": layer, "path": path,
                         "us_per_call": round(us, 1),
-                        "scenarios_per_sec": round(scn_per_sec, 2)})
+                        "scenarios_per_sec": round(scn_per_sec, 2), **extra})
 
+    # --- one Algorithm-2 round, fused vs resolve+reduce (jnp realizations,
+    # i.e. what actually runs on CPU; the Pallas variants are the `resolve`
+    # and `sweep` layers' subject) -----------------------------------------
+    lane_pred = functools.partial(lane_predict, n_events=n_events)
+
+    def _reduce(winners, prices, b, s_hat, act, n_hat):
+        rates = jax.vmap(
+            lambda w, p, nh: seg_lib.rate_from_events(w, p, n_campaigns, nh)
+        )(winners, prices, n_hat)
+        c_next, no_cap, n_next = jax.vmap(lane_pred)(rates, b, s_hat, act,
+                                                     n_hat)
+        blk = jax.vmap(
+            lambda w, p, lo, hi: seg_lib.block_from_events(
+                w, p, n_campaigns, lo, hi))(winners, prices, n_hat, n_next)
+        return blk, c_next, no_cap, n_next
+
+    @jax.jit
+    def resolve_dispatch(act, rules):
+        return jax.vmap(lambda a, r: auction.resolve(env.values, a, r),
+                        in_axes=(0, 0))(act, rules)
+
+    @jax.jit
+    def reduce_dispatch(winners, prices, b, s_hat, act, n_hat):
+        return _reduce(winners, prices, b, s_hat, act, n_hat)
+
+    @jax.jit
+    def fused_round_dispatch(act, rules, b, s_hat, n_hat):
+        winners, prices = jax.vmap(
+            lambda a, r: auction.resolve(env.values, a, r),
+            in_axes=(0, 0))(act, rules)
+        return _reduce(winners, prices, b, s_hat, act, n_hat)
+
+    round_gate = {}
     for s_count in s_values:
         scales = [1.0 + 0.02 * i for i in range(s_count)]
         grid = ScenarioGrid.product(base, env.budgets, bid_scales=scales)
@@ -63,6 +114,35 @@ def main(n_events: int = 2048, n_campaigns: int = 32,
             in_axes=(0, 0))(act, grid.rules)[1], repeats=2, warmup=1)
         record(s_count, "resolve", "vmap_jnp", us)
 
+        # round layer: mid-sweep state (everyone active, frontier at 0)
+        b = grid.budgets.astype(jnp.float32)
+        s_hat = jnp.zeros((s_count, n_campaigns), jnp.float32)
+        n_hat = jnp.zeros((s_count,), jnp.int32)
+        rounds = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                                     resolve="jnp")[4]
+        counts = [int(r) for r in rounds]
+        hist = {}
+        for r in counts:
+            hist[str(r)] = hist.get(str(r), 0) + 1
+
+        def fused():
+            return fused_round_dispatch(act, grid.rules, b, s_hat, n_hat)[0]
+
+        def unfused():
+            winners, prices = resolve_dispatch(act, grid.rules)
+            return reduce_dispatch(winners, prices, b, s_hat, act, n_hat)[0]
+
+        # interleaved pairwise timing: load drift on a shared machine hits
+        # both paths alike, so the medians stay comparable (a sequential
+        # A-then-B measurement here can swing either way by 2x)
+        us_fused, us_unfused = time_pair(fused, unfused, repeats=15,
+                                         warmup=2)
+        record(s_count, "round", "fused_oracle", us_fused,
+               round_counts=counts, round_count_hist=hist)
+        record(s_count, "round", "resolve+reduce", us_unfused,
+               round_counts=counts, round_count_hist=hist)
+        round_gate[s_count] = (us_fused, us_unfused)
+
         _, us = time_call(lambda: sweep_parallel(
             env.values, grid.budgets, grid.rules,
             resolve="pallas").final_spend, repeats=1, warmup=1)
@@ -76,6 +156,24 @@ def main(n_events: int = 2048, n_campaigns: int = 32,
     update_bench_json(out, "sweep_kernel", bench_report(
         records, n_events=n_events, n_campaigns=n_campaigns,
         block_t=block_t, pallas_interpret=not ON_TPU))
+
+    # CI gate: the fused round oracle must beat (or at worst match) the
+    # unfused resolve+reduce dispatch pair at the largest S on CPU — if
+    # fusing ever regresses the round, the sweep hot path regressed. The
+    # 15% headroom keeps a loaded shared runner's scheduler stalls (which
+    # survive even the median-of-15) from failing the build; a genuine
+    # fusion regression shows up far past it (quiet-machine wins measured
+    # at 1.5–2.9×).
+    if not ON_TPU and round_gate:
+        s_gate = max(round_gate)
+        us_fused, us_unfused = round_gate[s_gate]
+        if us_fused > 1.15 * us_unfused:
+            raise SystemExit(
+                f"FUSED ROUND REGRESSION: fused oracle {us_fused:.0f}us > "
+                f"resolve+reduce {us_unfused:.0f}us (+15% headroom) at "
+                f"S={s_gate} on CPU")
+        print(f"round gate ok at S={s_gate}: fused {us_fused:.0f}us vs "
+              f"resolve+reduce {us_unfused:.0f}us")
 
 
 if __name__ == "__main__":

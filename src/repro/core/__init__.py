@@ -2,9 +2,11 @@
 from repro.core.types import AuctionRule, Segments, SimResult, never_capped
 from repro.core.auction import resolve, resolve_row, spend_sums, spend_matrix
 from repro.core.sequential import sequential_replay, naive_sampled_replay, capped_sum
-from repro.core.parallel import parallel_simulate, parallel_state_machine
+from repro.core.parallel import (parallel_simulate, parallel_state_machine,
+                                 pick_resolve, fused_runs_kernel)
 from repro.core.segments import aggregate, masked_rate, block_spend_sums, first_crossing_times
-from repro.core.vi import estimate_pi, pi_to_cap_times, capping_order, PiEstimate
+from repro.core.vi import (estimate_pi, estimate_pi_sweep, pi_to_cap_times,
+                           capping_order, PiEstimate)
 from repro.core.sort2aggregate import (sort2aggregate, refine_segments,
                                        refine_fixed_device,
                                        Sort2AggregateResult)
@@ -22,9 +24,11 @@ __all__ = [
     "AuctionRule", "Segments", "SimResult", "never_capped",
     "resolve", "resolve_row", "spend_sums", "spend_matrix",
     "sequential_replay", "naive_sampled_replay", "capped_sum",
-    "parallel_simulate", "parallel_state_machine",
+    "parallel_simulate", "parallel_state_machine", "pick_resolve",
+    "fused_runs_kernel",
     "aggregate", "masked_rate", "block_spend_sums", "first_crossing_times",
-    "estimate_pi", "pi_to_cap_times", "capping_order", "PiEstimate",
+    "estimate_pi", "estimate_pi_sweep", "pi_to_cap_times", "capping_order",
+    "PiEstimate",
     "sort2aggregate", "refine_segments", "refine_fixed_device",
     "Sort2AggregateResult",
     "sweep_sequential", "sweep_parallel", "sweep_sort2aggregate",

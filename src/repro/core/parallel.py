@@ -46,6 +46,37 @@ from repro.core import segments as seg_lib
 from repro.core.types import AuctionRule, Segments, SimResult, never_capped
 from repro.kernels.auction_resolve import ops as resolve_ops
 
+RESOLVE_BACKENDS = ("jnp", "pallas", "fused")
+
+
+def pick_resolve(resolve: str, on_tpu: Optional[bool] = None) -> str:
+    """Resolve the ``"auto"`` preference to a concrete back-end.
+
+    ``"auto"`` picks the fused round kernel where Pallas compiles (TPU) and
+    the vmapped jnp path everywhere else. It must NEVER land on an
+    interpret-mode Pallas kernel: BENCH_sweep.json's sweep layer shows
+    interpret-mode pallas ~3–5× slower than the vmapped jnp path on CPU
+    (e.g. S=8: ~1.2 s vs ~0.24 s per sweep) — interpret mode is a
+    correctness harness, not a production path (regression-tested in
+    tests/test_scenario_sweep.py).
+    """
+    on_tpu = resolve_ops.ON_TPU if on_tpu is None else on_tpu
+    if resolve == "auto":
+        return "fused" if on_tpu else "jnp"
+    if resolve not in RESOLVE_BACKENDS:
+        raise ValueError(f"unknown resolve back-end: {resolve}")
+    return resolve
+
+
+def fused_runs_kernel(interpret: Optional[bool]) -> bool:
+    """Whether ``resolve="fused"`` dispatches the Pallas round kernel.
+
+    True on TPU (compiled) or when interpret mode is explicitly forced
+    (kernel tests); otherwise the fused round runs its jnp oracle
+    composition (the exact ``lane_round`` stages) — never an *implicit*
+    interpret-mode kernel."""
+    return resolve_ops.ON_TPU or interpret is True
+
 
 @dataclasses.dataclass
 class ParallelSimTrace:
@@ -74,7 +105,9 @@ def parallel_simulate(
     (device unless custom ``rate_fn``/``block_fn`` closures force the host).
     ``resolve`` selects the device driver's per-round auction resolve:
     ``"jnp"`` (default), ``"pallas"`` (the S=1 case of the sweep kernel;
-    interpret mode off TPU), or ``"auto"`` (pallas on TPU, jnp elsewhere).
+    interpret mode off TPU), ``"fused"`` (the S=1 case of the fused round
+    kernel — one launch per round, winners/prices never reach HBM), or
+    ``"auto"`` (fused on TPU, jnp elsewhere — never interpret-mode Pallas).
     """
     if driver == "auto":
         driver = "host" if (rate_fn is not None or block_fn is not None) \
@@ -265,19 +298,21 @@ def parallel_state_machine(
 
     ``resolve="pallas"`` swaps the per-round resolve for the S=1 case of the
     ``sweep_resolve`` Pallas kernel (winners/prices bit-identical to the jnp
-    resolve; ``interpret=None`` means interpret mode off TPU). ``vmap`` only
-    composes with the default ``"jnp"`` back-end.
+    resolve; ``interpret=None`` means interpret mode off TPU);
+    ``resolve="fused"`` runs the whole round as the S=1 case of the
+    ``round_fused`` kernel where Pallas compiles — and IS the ``"jnp"`` body
+    elsewhere (``lane_round`` already fuses resolve and both reductions into
+    one jitted round; the kernel's job is keeping the per-event intermediates
+    out of HBM, which XLA on CPU does anyway). ``vmap`` only composes with
+    the default ``"jnp"`` back-end.
     """
     n_events, n_campaigns = values.shape
     sentinel = jnp.int32(never_capped(n_events))
     b = budgets.astype(jnp.float32)
-    if resolve == "auto":
-        resolve = "pallas" if resolve_ops.ON_TPU else "jnp"
-    if resolve not in ("jnp", "pallas"):
-        raise ValueError(f"unknown resolve back-end: {resolve}")
+    resolve = pick_resolve(resolve)
 
     def _resolve(active):
-        if resolve == "jnp":
+        if resolve != "pallas":    # "jnp", or "fused" falling back to it
             return auction.resolve(values, active, rule)
         winners, prices, _ = resolve_ops.sweep_resolve(
             values, rule.multipliers[None, :], active[None, :],
@@ -291,7 +326,25 @@ def parallel_state_machine(
         s_hat, active, cap, n_hat, rnd, retired, bnds = st
         return (rnd < n_campaigns + 1) & (n_hat < n_events) & active.any()
 
+    def _fused_body(st):
+        # the S=1 slice of the fused round kernel: resolve + canonical
+        # partials + prediction in one launch, then the shared lane_commit
+        s_hat, active, cap, n_hat, rnd, retired, bnds = st
+        _, block_parts, c_next, no_cap, n_next = resolve_ops.round_fused(
+            values, rule.multipliers[None, :], active[None, :],
+            jnp.asarray(rule.reserve, jnp.float32)[None], b[None, :],
+            s_hat[None, :], n_hat[None], jnp.ones((1,), bool),
+            reduce_blocks=seg_lib.REDUCE_BLOCKS,
+            second_price=(rule.kind == "second_price"),
+            interpret=(interpret if interpret is not None
+                       else not resolve_ops.ON_TPU), block_t=block_t)
+        return lane_commit(block_parts.sum(axis=1)[0], c_next[0], no_cap[0],
+                           n_next[0], s_hat, active, cap, rnd, retired,
+                           bnds, sentinel=sentinel)
+
     def body(st):
+        if resolve == "fused" and fused_runs_kernel(interpret):
+            return _fused_body(st)
         s_hat, active, cap, n_hat, rnd, retired, bnds = st
         winners, prices = _resolve(active)
         return lane_round(winners, prices, b, s_hat, active, cap, n_hat,

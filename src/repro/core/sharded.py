@@ -51,7 +51,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import axis_size as compat_axis_size, shard_map
 from repro.core import auction
 from repro.core import segments as seg_lib
-from repro.core.parallel import lane_commit, lane_predict
+from repro.core.parallel import (fused_runs_kernel, lane_commit,
+                                 lane_predict, pick_resolve)
 from repro.core.types import AuctionRule, Segments, SimResult, never_capped
 from repro.kernels.auction_resolve import ops as resolve_ops
 from repro.launch.mesh import SweepMeshSpec
@@ -384,12 +385,14 @@ def make_sharded_sweep_kernels(
     resolve: str = "auto",
     block_t: int = 256,
     interpret: Optional[bool] = None,
+    skip_retired: bool = True,
 ):
-    """Build the three per-round closures of the mesh-batched sweep loop.
+    """Build the per-round closures of the mesh-batched sweep loop.
 
-    All three run INSIDE the sweep's ``shard_map`` (they use the mesh axis
-    names) and carry batched scenario arrays with the local scenario count as
-    the leading axis:
+    Returns ``(resolve_all, rate_all, block_all, fused_partials)``. All run
+    INSIDE the sweep's ``shard_map`` (they use the mesh axis names) and carry
+    batched scenario arrays with the local scenario count as the leading
+    axis:
 
     * ``resolve_all(values_local, active, rules_local)`` →
       ``(winners, prices)`` (S_local, local_n) — purely local, no collectives
@@ -400,27 +403,37 @@ def make_sharded_sweep_kernels(
       (:func:`repro.core.segments.partial_spend_sums`), ONE psum over the
       event axes, then the same final reduce as the single-device driver;
     * ``block_all(winners, prices, lo, hi)`` → per-scenario block spends
-      (S_local, C), same structure, the round's second (and last) psum.
+      (S_local, C), same structure, the round's second (and last) psum;
+    * ``fused_partials(values_local, active, rules_local, lane_alive, lo,
+      hi)`` — the ``resolve="fused"`` round: resolve + canonical partials of
+      events in ``[lo, hi)`` in ONE ``sweep_partials`` kernel pass over the
+      local shard, already psum'd. The fused round never materialises
+      (S, local_n) winners/prices; the mesh driver calls it twice per round
+      (rate window ``[n_hat, N)``, then block window ``[n_hat, n_next)``)
+      with the prediction between the two collectives. ``None`` unless
+      ``resolve="fused"`` AND the kernel actually compiles (TPU, or
+      interpret mode explicitly forced) — elsewhere the driver keeps the
+      resolve-once ``resolve_all``/``rate_all``/``block_all`` structure,
+      which is the fused round's jnp realization (same arithmetic, same
+      bits, one resolve per round).
 
     The two psums are the loop's only cross-device traffic: each moves a
     float32 tensor of shape (S_local, REDUCE_BLOCKS, C) — the two (S, C)
     reductions of the paper's map-reduce round, kept in canonical block
     partials so the result is bitwise identical to the single-device loop
     (docs/SCALING.md explains why unique block ownership makes the psum
-    exact).
+    exact). The fused back-end emits *exactly that tensor* straight from the
+    kernel, so fusing changes the psum operands not at all.
     """
     axes = tuple(spec.event_axes)
     local_n = n_events // spec.event_device_count
     block = seg_lib.reduce_block_size(n_events)
-    if resolve == "auto":
-        resolve = "pallas" if resolve_ops.ON_TPU else "jnp"
-    if resolve not in ("pallas", "jnp"):
-        raise ValueError(f"unknown resolve back-end: {resolve}")
+    resolve = pick_resolve(resolve)
     use_interpret = (interpret if interpret is not None
                      else not resolve_ops.ON_TPU)
 
     def resolve_all(values_local, active, rules_local):
-        if resolve == "jnp":
+        if resolve != "pallas":
             return jax.vmap(
                 lambda a, r: auction.resolve(values_local, a, r),
                 in_axes=(0, 0))(active, rules_local)
@@ -458,11 +471,31 @@ def make_sharded_sweep_kernels(
                           lambda g, l, h: (g >= l) & (g < h), lo, hi)
         return jax.vmap(lambda pt: pt.sum(axis=0))(parts)
 
-    return resolve_all, rate_all, block_all
+    fused_partials = None
+    if resolve == "fused" and fused_runs_kernel(interpret):
+        # one kernel pass per reduction window: resolve + canonical
+        # partials fused, already placed on the GLOBAL grid via the shard
+        # offset. Where the kernel would only interpret (CPU, interpret
+        # unset), the driver takes the standard resolve-once branch
+        # instead — same arithmetic, half the resolve cost.
+        def fused_partials(values_local, active, rules_local, lane_alive,
+                           lo, hi):
+            parts = resolve_ops.sweep_partials(
+                values_local, rules_local.multipliers, active,
+                rules_local.reserve, lo, hi, lane_alive,
+                _global_offset(axes, local_n),
+                n_events_global=n_events,
+                reduce_blocks=seg_lib.REDUCE_BLOCKS,
+                second_price=(kind == "second_price"),
+                skip_retired=skip_retired, block_t=block_t,
+                interpret=use_interpret)
+            return jax.lax.psum(parts, axes)
+
+    return resolve_all, rate_all, block_all, fused_partials
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "resolve", "block_t",
-                                             "interpret"))
+                                             "interpret", "skip_retired"))
 def sweep_sharded(
     values: jax.Array,            # (N, C) — events sharded over the mesh
     budgets: jax.Array,           # (S, C)
@@ -471,6 +504,7 @@ def sweep_sharded(
     resolve: str = "auto",
     block_t: int = 256,
     interpret: Optional[bool] = None,
+    skip_retired: bool = True,
 ):
     """The batched Algorithm-2 loop as ONE mesh program: events sharded over
     ``spec.event_axes``, campaign/scenario state replicated, the scenario
@@ -489,6 +523,14 @@ def sweep_sharded(
     (shards hold whole canonical reduction blocks; checked, with a
     pad-or-error message, at trace time).
 
+    ``resolve="fused"`` swaps the resolve + two-reduction structure for two
+    fused resolve+reduce passes per round (``make_sharded_sweep_kernels``'s
+    ``fused_partials``): the kernel's (S_local, 32, C) output is exactly the
+    psum operand, so per-round communication and bits are unchanged;
+    ``skip_retired`` passes the loop's per-lane alive flags into the kernel
+    so frozen scenarios' grid steps are skipped (pure wall-clock — results
+    identical either way).
+
     Returns the same batched tuple as ``sweep_state_machine``:
     ``(s_hat (S, C), cap_times (S, C), retired (S, C+1), boundaries
     (S, C+2), num_rounds (S,), n_hat (S,))``, gathered across the scenario
@@ -498,9 +540,12 @@ def sweep_sharded(
     n_events, n_campaigns = values.shape
     sentinel = jnp.int32(never_capped(n_events))
     mesh, sc = spec.mesh, spec.scenario_axis
-    resolve_all, rate_all, block_all = make_sharded_sweep_kernels(
-        spec, n_events=n_events, n_campaigns=n_campaigns, kind=rules.kind,
-        resolve=resolve, block_t=block_t, interpret=interpret)
+    resolve = pick_resolve(resolve)
+    resolve_all, rate_all, block_all, fused_partials = \
+        make_sharded_sweep_kernels(
+            spec, n_events=n_events, n_campaigns=n_campaigns,
+            kind=rules.kind, resolve=resolve, block_t=block_t,
+            interpret=interpret, skip_retired=skip_retired)
 
     spec_vals = P(tuple(spec.event_axes), None)
     spec_sc2 = P(sc, None)        # (S, ...) arrays; sc=None -> replicated
@@ -537,14 +582,35 @@ def sweep_sharded(
         def body(st):
             core, _ = st
             s_hat, active, cap, n_hat, rnd, retired, bnds = core
-            winners, prices = resolve_all(values_local, active, rules_local)
-            rates = rate_all(winners, prices, n_hat)
-            c_next, no_cap, n_next = jax.vmap(lane_pred)(
-                rates, b, s_hat, active, n_hat)
-            blk = block_all(winners, prices, n_hat, n_next)
+            keep = alive(core)
+            if fused_partials is not None:
+                # fused round: two resolve+reduce passes whose (S, G, C)
+                # outputs ARE the psum operands; winners/prices stay in the
+                # kernel. Same reductions, same order => same bits.
+                rate_parts = fused_partials(
+                    values_local, active, rules_local, keep, n_hat,
+                    jnp.full_like(n_hat, n_events))
+
+                def rate_of(pt, nh):
+                    sums = pt.sum(axis=0)
+                    denom = jnp.maximum(n_events - nh, 1).astype(sums.dtype)
+                    return sums / denom
+
+                rates = jax.vmap(rate_of)(rate_parts, n_hat)
+                c_next, no_cap, n_next = jax.vmap(lane_pred)(
+                    rates, b, s_hat, active, n_hat)
+                block_parts = fused_partials(
+                    values_local, active, rules_local, keep, n_hat, n_next)
+                blk = jax.vmap(lambda pt: pt.sum(axis=0))(block_parts)
+            else:
+                winners, prices = resolve_all(values_local, active,
+                                              rules_local)
+                rates = rate_all(winners, prices, n_hat)
+                c_next, no_cap, n_next = jax.vmap(lane_pred)(
+                    rates, b, s_hat, active, n_hat)
+                blk = block_all(winners, prices, n_hat, n_next)
             new = jax.vmap(lane_comm)(blk, c_next, no_cap, n_next, s_hat,
                                       active, cap, rnd, retired, bnds)
-            keep = alive(core)
             merged = jax.tree.map(
                 lambda n, o: jnp.where(
                     keep.reshape(keep.shape + (1,) * (n.ndim - 1)), n, o),
@@ -619,8 +685,8 @@ def sweep_first_crossing_sharded(
     (``N+1`` = never crosses)."""
     _check_sweep_shapes(values, budgets, rules, spec,
                         require_block_alignment=False)
-    _, caps, _ = _sweep_s2a_program(values, cap_times, budgets, rules, spec,
-                                    refine_iters=0)
+    _, caps, _, _ = _sweep_s2a_program(values, cap_times, budgets, rules,
+                                       spec, refine_iters=0)
     return caps
 
 
@@ -641,7 +707,7 @@ def _sweep_s2a_program(values, cap_times0, budgets, rules, spec,
     @functools.partial(
         shard_map, mesh=spec.mesh,
         in_specs=(spec_vals, spec_sc2, spec_sc2, spec_sc2, P(sc)),
-        out_specs=(spec_sc2, spec_sc2, spec_sc2))
+        out_specs=(spec_sc2, spec_sc2, spec_sc2, P(sc)))
     def _s2a(values_local, caps0_l, b_l, mult_l, res_l):
         offset = _global_offset(axes, local_n)
         gidx = offset + jnp.arange(local_n, dtype=jnp.int32)
@@ -673,13 +739,18 @@ def _sweep_s2a_program(values, cap_times0, budgets, rules, spec,
             return totals, caps_diag
 
         caps = jnp.minimum(caps0_l.astype(jnp.int32), sentinel)
+        iters = jnp.zeros((caps.shape[0],), jnp.int32)
         if refine_iters > 0:
-            def step(c, _):
+            def step(carry, _):
+                c, moved = carry
                 _, diag = replay(c)
-                return jnp.minimum(diag, sentinel), None
-            caps, _ = jax.lax.scan(step, caps, None, length=refine_iters)
+                new = jnp.minimum(diag, sentinel)
+                moved = moved + jnp.any(new != c, axis=-1).astype(jnp.int32)
+                return (new, moved), None
+            (caps, iters), _ = jax.lax.scan(step, (caps, iters), None,
+                                            length=refine_iters)
         totals, caps_diag = replay(caps)
-        return totals, caps_diag, caps
+        return totals, caps_diag, caps, iters
 
     return _s2a(values, cap_times0, budgets, rules.multipliers,
                 jnp.asarray(rules.reserve, jnp.float32))
@@ -692,7 +763,7 @@ def sweep_sort2aggregate_sharded(
     spec: SweepMeshSpec,
     cap_times_init: Optional[jax.Array] = None,   # (S, C) or (C,) warm start
     refine_iters: int = 8,
-) -> Tuple[SimResult, jax.Array]:
+) -> Tuple[SimResult, jax.Array, jax.Array]:
     """SORT2AGGREGATE over a scenario batch, on the mesh: per-scenario
     fixed-point refinement of the cap times + one aggregate pass, events
     sharded throughout (the mesh analogue of
@@ -710,8 +781,10 @@ def sweep_sort2aggregate_sharded(
     aggregate pass is tolerance-checked against the oracle anyway, not
     bit-compared), so they can differ from the single-device sweep in the
     last ulp; crossing times are integer decisions and agree in practice.
-    Returns ``(results, consistency_gaps)`` with ``gaps[s]`` the max
-    |assumed − replayed| cap time of scenario ``s``, in events.
+    Returns ``(results, consistency_gaps, refine_iters_used)`` with
+    ``gaps[s]`` the max |assumed − replayed| cap time of scenario ``s`` in
+    events, and ``refine_iters_used[s]`` the count of refine iterations that
+    moved scenario ``s``'s cap times (the warm-start quality signal).
     """
     _check_sweep_shapes(values, budgets, rules, spec,
                         require_block_alignment=False)
@@ -721,11 +794,11 @@ def sweep_sort2aggregate_sharded(
         cap_times_init = jnp.full((n_campaigns,), n_events + 1, jnp.int32)
     caps0 = jnp.broadcast_to(jnp.asarray(cap_times_init, jnp.int32),
                              (n_scenarios, n_campaigns))
-    totals, caps_diag, caps_assumed = _sweep_s2a_program(
+    totals, caps_diag, caps_assumed, iters = _sweep_s2a_program(
         values, caps0, budgets, rules, spec, refine_iters=refine_iters)
     sentinel = jnp.int32(never_capped(n_events))
     gaps = jnp.max(jnp.abs(jnp.minimum(caps_diag, sentinel) - caps_assumed)
                    .astype(jnp.float32), axis=-1)
     result = SimResult(final_spend=totals, cap_times=caps_diag,
                        winners=None, prices=None, segments=None)
-    return result, gaps
+    return result, gaps, iters

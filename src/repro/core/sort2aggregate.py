@@ -104,26 +104,35 @@ def refine_fixed_device(
     This is the ``vmap``-able spine of the batched scenario sweep
     (:mod:`repro.core.sweep`); the host :func:`refine_segments` remains the
     adaptive reference (early exit, cycle damping, best-state tracking).
-    Returns ``(SimResult, consistency_gap)``.
+    Returns ``(SimResult, consistency_gap, iters_used)`` where ``iters_used``
+    counts the refine iterations that actually moved the cap times (the
+    fixed-point map is deterministic, so once an iteration is a no-op every
+    later one is too) — the sweep surfaces it per scenario so warm-start
+    quality is measurable.
     """
     n_events = values.shape[0]
     sentinel = jnp.int32(n_events + 1)
 
-    def body(caps, _):
+    def body(carry, _):
+        caps, moved = carry
         segs = Segments.from_cap_times(caps, n_events)
         rep = seg_lib.aggregate(values, segs, budgets, rule,
                                 record_events=False)
-        return jnp.minimum(rep.cap_times, sentinel), None
+        new = jnp.minimum(rep.cap_times, sentinel)
+        moved = moved + jnp.any(new != caps).astype(jnp.int32)
+        return (new, moved), None
 
     caps = jnp.minimum(jnp.asarray(cap_times0, jnp.int32), sentinel)
+    iters_used = jnp.int32(0)
     if refine_iters > 0:
-        caps, _ = jax.lax.scan(body, caps, None, length=refine_iters)
+        (caps, iters_used), _ = jax.lax.scan(body, (caps, iters_used), None,
+                                             length=refine_iters)
     segs = Segments.from_cap_times(caps, n_events)
     final = seg_lib.aggregate(values, segs, budgets, rule,
                               record_events=record_events)
     gap = jnp.max(jnp.abs(jnp.minimum(final.cap_times, sentinel) - caps)
                   .astype(jnp.float32))
-    return final, gap
+    return final, gap, iters_used
 
 
 def sort2aggregate(

@@ -20,7 +20,7 @@ is, by convention, the logged base design. The high-level grid construction /
 delta-table API lives in
 :class:`repro.core.counterfactual.CounterfactualEngine.sweep`.
 
-Two resolve back-ends drive the Algorithm-2 sweep:
+Three resolve back-ends drive the Algorithm-2 sweep:
 
 * ``resolve="jnp"`` — ``vmap(parallel_state_machine)``: each scenario's
   while_loop round resolves the full (N, C) matrix independently, so the
@@ -31,10 +31,18 @@ Two resolve back-ends drive the Algorithm-2 sweep:
   valuation tile is fetched into VMEM once and resolved against all S
   scenarios' (multiplier, reserve, live-mask) variants — S-fold reuse of the
   dominant HBM read. Winners/prices are bit-identical to the jnp path, so
-  both back-ends produce the same cap times and (bitwise) final spends.
+  both back-ends produce the same cap times and (bitwise) final spends;
+* ``resolve="fused"`` — the whole round in one kernel launch
+  (``repro.kernels.auction_resolve.round_fused``): resolve + the canonical
+  (S, 32, C) spend partials + the per-lane cap-out prediction + the block
+  partials, winners/prices never materialised to HBM, with retired lanes'
+  grid steps skipped (``skip_retired``). On CPU — where a Pallas kernel
+  only interprets — the fused round runs its jnp oracle composition
+  instead, which is bit-for-bit the ``"jnp"`` arithmetic.
 
-``resolve="auto"`` (the default) picks ``"pallas"`` on TPU and falls back to
-the vmapped jnp path on CPU, where the kernel would run in interpret mode.
+``resolve="auto"`` (the default) picks ``"fused"`` on TPU and the vmapped
+jnp path on CPU; it NEVER selects an interpret-mode Pallas kernel (see
+:func:`pick_resolve`).
 
 Orthogonally, ``driver="sharded"`` moves the batched while_loop onto a device
 mesh (:func:`repro.core.sharded.sweep_sharded`): the event axis is sharded
@@ -52,7 +60,9 @@ import jax.numpy as jnp
 
 from repro.core import auction
 from repro.core import segments as seg_lib
-from repro.core.parallel import lane_round, parallel_state_machine
+from repro.core.parallel import (RESOLVE_BACKENDS, fused_runs_kernel,
+                                 lane_commit, lane_predict, lane_round,
+                                 parallel_state_machine, pick_resolve)
 from repro.core.sequential import sequential_replay
 from repro.core.sort2aggregate import refine_fixed_device
 from repro.core.types import AuctionRule, Segments, SimResult, never_capped
@@ -116,7 +126,7 @@ def sweep_sequential(
 
 @functools.partial(jax.jit,
                    static_argnames=("resolve", "block_t", "interpret",
-                                    "driver", "mesh"))
+                                    "driver", "mesh", "skip_retired"))
 def sweep_parallel(
     values: jax.Array,            # (N, C)
     budgets: jax.Array,           # (S, C)
@@ -126,6 +136,7 @@ def sweep_parallel(
     interpret: Optional[bool] = None,
     driver: str = "batched",
     mesh=None,                    # SweepMeshSpec, driver="sharded" only
+    skip_retired: bool = True,
 ) -> SimResult:
     """Algorithm 2 over a scenario batch: one device program, serial depth
     ``max_s K_s``. The batched while_loop runs until the slowest scenario
@@ -144,12 +155,17 @@ def sweep_parallel(
 
     ``resolve`` picks the per-round resolve back-end (see module docstring):
     ``"jnp"`` vmaps the single-scenario state machine; ``"pallas"`` runs the
-    batched state machine with the tile-reusing kernel (``interpret`` forces /
-    suppresses Pallas interpret mode — default: interpret off TPU only);
-    ``"auto"`` is pallas on TPU, jnp elsewhere. Both compose with either
-    driver.
+    batched state machine with the tile-reusing kernel; ``"fused"`` runs the
+    batched state machine with the one-launch fused round (``skip_retired``
+    predicates retired lanes' grid steps off — results are bit-identical
+    either way, only wall-clock changes); ``interpret`` forces / suppresses
+    Pallas interpret mode (default: interpret off TPU only — except
+    ``"fused"``, which falls back to its jnp oracle on CPU instead of
+    interpreting). ``"auto"`` is fused on TPU, jnp elsewhere. All compose
+    with either driver.
     """
     _check_batch(values, budgets, rules)
+    resolve = pick_resolve(resolve)
     if driver == "sharded":
         if mesh is None:
             raise ValueError(
@@ -158,13 +174,11 @@ def sweep_parallel(
         from repro.core.sharded import sweep_sharded
         s_hat, cap_times, _, _, _, _ = sweep_sharded(
             values, budgets, rules, mesh, resolve=resolve, block_t=block_t,
-            interpret=interpret)
+            interpret=interpret, skip_retired=skip_retired)
         return SimResult(final_spend=s_hat, cap_times=cap_times,
                          winners=None, prices=None, segments=None)
     if driver != "batched":
         raise ValueError(f"unknown sweep driver: {driver}")
-    if resolve == "auto":
-        resolve = "pallas" if resolve_ops.ON_TPU else "jnp"
     if resolve == "jnp":
         s_hat, cap_times, _, _, _, _ = jax.vmap(
             lambda b, r: parallel_state_machine(values, b, r),
@@ -172,13 +186,14 @@ def sweep_parallel(
     else:
         s_hat, cap_times, _, _, _, _ = sweep_state_machine(
             values, budgets, rules, resolve=resolve, block_t=block_t,
-            interpret=interpret)
+            interpret=interpret, skip_retired=skip_retired)
     return SimResult(final_spend=s_hat, cap_times=cap_times,
                      winners=None, prices=None, segments=None)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("resolve", "block_t", "interpret"))
+                   static_argnames=("resolve", "block_t", "interpret",
+                                    "skip_retired"))
 def sweep_state_machine(
     values: jax.Array,            # (N, C)
     budgets: jax.Array,           # (S, C)
@@ -186,6 +201,7 @@ def sweep_state_machine(
     resolve: str = "pallas",
     block_t: int = 256,
     interpret: Optional[bool] = None,
+    skip_retired: bool = True,
 ):
     """The Algorithm-2 loop over an explicit scenario batch: ONE resolve of
     the shared event log per round for ALL scenarios.
@@ -196,19 +212,26 @@ def sweep_state_machine(
     alive, and finished lanes' states are frozen by select — exactly the
     semantics jax's batching rule gives the vmapped loop, asserted
     bit-for-bit by ``tests/test_scenario_sweep.py``. The difference is the
-    resolve: instead of S independent (N, C) resolves per round, the
-    ``"pallas"`` back-end issues one ``sweep_resolve`` kernel call that keeps
-    each valuation tile in VMEM across the whole scenario batch
-    (``"jnp"`` keeps the vmapped resolve — useful to test the loop
-    restructure in isolation).
+    resolve:
+
+    * ``"jnp"`` keeps the vmapped resolve (useful to test the loop
+      restructure in isolation);
+    * ``"pallas"`` issues one ``sweep_resolve`` kernel call per round that
+      keeps each valuation tile in VMEM across the whole scenario batch;
+    * ``"fused"`` issues one ``round_fused`` kernel launch per round —
+      resolve + canonical partials + cap-out prediction + block partials,
+      (S, N) winners/prices never touching HBM, with retired lanes' grid
+      steps predicated off when ``skip_retired`` (outputs are identical
+      either way: the loop discards frozen lanes' updates by select). On
+      CPU (unless ``interpret=True`` forces the kernel) the fused round
+      runs its jnp oracle composition, bit-for-bit the ``"jnp"`` path.
 
     Returns the batched tuple of ``parallel_state_machine``:
     ``(s_hat (S, C), cap_times (S, C), retired (S, C+1), boundaries (S, C+2),
     num_rounds (S,), n_hat (S,))``.
     """
     _check_batch(values, budgets, rules)
-    if resolve not in ("pallas", "jnp"):
-        raise ValueError(f"unknown resolve back-end: {resolve}")
+    resolve = pick_resolve(resolve)
     n_events, n_campaigns = values.shape
     n_scenarios = budgets.shape[0]
     sentinel = jnp.int32(never_capped(n_events))
@@ -240,13 +263,45 @@ def sweep_state_machine(
     # contract between the two loops is structural, not kept-in-sync
     lane_step = functools.partial(lane_round, n_events=n_events,
                                   n_campaigns=n_campaigns, sentinel=sentinel)
+    lane_pred = functools.partial(lane_predict, n_events=n_events)
+    lane_comm = functools.partial(lane_commit, sentinel=sentinel)
+
+    def fused_round(s_hat, active, n_hat, keep):
+        """One fused round: the kernel where it compiles, otherwise the jnp
+        composition of exactly the ``lane_round`` stages (same primitives,
+        same order — the bit-for-bit contract is structural)."""
+        if fused_runs_kernel(interpret):
+            _, block_parts, c_next, no_cap, n_next = resolve_ops.round_fused(
+                values, rules.multipliers, active, rules.reserve, b, s_hat,
+                n_hat, keep, reduce_blocks=seg_lib.REDUCE_BLOCKS,
+                second_price=(rules.kind == "second_price"),
+                skip_retired=skip_retired, block_t=block_t,
+                interpret=use_interpret)
+            return block_parts.sum(axis=1), c_next, no_cap, n_next
+        winners, prices = resolve_all(active)
+        rates = jax.vmap(
+            lambda w, p, nh: seg_lib.rate_from_events(w, p, n_campaigns, nh)
+        )(winners, prices, n_hat)
+        c_next, no_cap, n_next = jax.vmap(lane_pred)(rates, b, s_hat,
+                                                     active, n_hat)
+        blk = jax.vmap(
+            lambda w, p, lo, hi: seg_lib.block_from_events(w, p, n_campaigns,
+                                                           lo, hi)
+        )(winners, prices, n_hat, n_next)
+        return blk, c_next, no_cap, n_next
 
     def body(st):
         s_hat, active, cap, n_hat, rnd, retired, bnds = st
-        winners, prices = resolve_all(active)
-        new = jax.vmap(lane_step)(winners, prices, b, s_hat, active, cap,
-                                  n_hat, rnd, retired, bnds)
         keep = alive(st)
+        if resolve == "fused":
+            blk, c_next, no_cap, n_next = fused_round(s_hat, active, n_hat,
+                                                      keep)
+            new = jax.vmap(lane_comm)(blk, c_next, no_cap, n_next, s_hat,
+                                      active, cap, rnd, retired, bnds)
+        else:
+            winners, prices = resolve_all(active)
+            new = jax.vmap(lane_step)(winners, prices, b, s_hat, active, cap,
+                                      n_hat, rnd, retired, bnds)
         return jax.tree.map(
             lambda n, o: jnp.where(
                 keep.reshape(keep.shape + (1,) * (n.ndim - 1)), n, o),
@@ -275,14 +330,20 @@ def sweep_sort2aggregate(
     cap_times_init: Optional[jax.Array] = None,   # (S, C) or (C,) warm start
     refine_iters: int = 8,
     record_events: bool = False,
-) -> Tuple[SimResult, jax.Array]:
+) -> Tuple[SimResult, jax.Array, jax.Array]:
     """SORT2AGGREGATE over a scenario batch: per-scenario fixed-point
     refinement of the segment history + one aggregate pass, all vmapped.
 
-    Returns ``(results, consistency_gaps)`` where ``gaps[s]`` is the max
-    |assumed cap − replayed cap| in events (the paper's §6 safeguard) for
-    scenario ``s``. Warm-start with the base design's cap times (the paper's
-    previous-day trick) or default to the optimistic all-active start.
+    Returns ``(results, consistency_gaps, refine_iters_used)`` where
+    ``gaps[s]`` is the max |assumed cap − replayed cap| in events (the
+    paper's §6 safeguard) for scenario ``s`` and ``refine_iters_used[s]``
+    counts the refine iterations that moved scenario ``s``'s cap times — the
+    warm-start quality signal. Warm-start with the base design's cap times
+    (the paper's previous-day trick — the engine's default, and the
+    measured best seed on the synthetic environment), per scenario with
+    :func:`repro.core.vi.estimate_pi_sweep` (each scenario's caps estimated
+    under its own design, no serial base pre-pass), or default to the
+    optimistic all-active start.
     """
     _check_batch(values, budgets, rules)
     n_events, n_campaigns = values.shape

@@ -134,3 +134,41 @@ def estimate_pi(
     if track_every:
         history = hist[::track_every]
     return PiEstimate(pi=pi, history=history, num_updates=n_updates)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sample_size", "num_iters", "batch_size", "coupling"))
+def estimate_pi_sweep(
+    values: jax.Array,            # (N, C) — shared across scenarios
+    budgets: jax.Array,           # (S, C)
+    rules: AuctionRule,           # batched: multipliers (S, C), reserve (S,)
+    key: jax.Array,
+    *,
+    sample_size: int,
+    num_iters: int = 20,
+    eta: float = 0.5,
+    eta_decay: float = 0.0,
+    batch_size: int = 1,
+    pi0: Optional[jax.Array] = None,   # (S, C) or None
+    coupling: str = "shared",
+) -> PiEstimate:
+    """Algorithm 4 over a scenario batch: :func:`estimate_pi` vmapped along
+    the scenario axis with ONE shared PRNG key, so every scenario's VI sees
+    the same sampled events and the same uniform draws (common random
+    numbers — pi deltas across scenarios are design effects, not sampling
+    noise). This is the per-scenario warm start of the SORT2AGGREGATE sweep:
+    a far-from-base scenario gets cap times estimated under ITS OWN design,
+    not the base design's (which can be many refine iterations away).
+
+    Returns a :class:`PiEstimate` whose ``pi`` is (S, C)."""
+    in_axes = (0, 0) if pi0 is None else (0, 0, 0)
+    args = (budgets, rules) if pi0 is None else (budgets, rules, pi0)
+
+    def one(b, r, *p0):
+        return estimate_pi(
+            values, b, r, key, sample_size=sample_size, num_iters=num_iters,
+            eta=eta, eta_decay=eta_decay, batch_size=batch_size,
+            pi0=p0[0] if p0 else None, coupling=coupling)
+
+    return jax.vmap(one, in_axes=in_axes)(*args)

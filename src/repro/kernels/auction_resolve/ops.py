@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.auction_resolve.auction_resolve import auction_resolve_pallas
+from repro.kernels.auction_resolve.round_fused import (round_fused_pallas,
+                                                       sweep_partials_pallas)
 from repro.kernels.auction_resolve.sweep_resolve import sweep_resolve_pallas
 
 ON_TPU = any(d.platform == "tpu" for d in jax.devices())
@@ -100,3 +102,102 @@ def sweep_resolve(
         v, mult, act, live, res,
         second_price=second_price, block_t=block_t, interpret=interpret)
     return winners[:, :n], prices[:, :n], sums[:, :c]
+
+
+def _pad_scenario_state(values, multipliers, active, reserves, block_t):
+    """Shared padding for the fused-round kernels: events to ``block_t``
+    (masked via live rows), campaigns to lane multiples of 128 (masked via
+    the padded activation = 0)."""
+    n, c = values.shape
+    n_scenarios = multipliers.shape[0]
+    v = _pad_to(_pad_to(values.astype(jnp.float32), block_t, 0), 128, 1)
+    mult = _pad_to(multipliers.astype(jnp.float32), 128, 1)
+    act = _pad_to(active.astype(jnp.int8), 128, 1)
+    live = _pad_to(jnp.ones((n, 1), jnp.int8), block_t, 0)
+    res = jnp.broadcast_to(jnp.asarray(reserves, jnp.float32),
+                           (n_scenarios,))[:, None]
+    return v, mult, act, live, res
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "reduce_blocks", "second_price", "skip_retired", "block_t", "interpret"))
+def round_fused(
+    values: jax.Array,           # (N, C) — shared valuation matrix
+    multipliers: jax.Array,      # (S, C)
+    active: jax.Array,           # (S, C) bool — current activation sets
+    reserves: jax.Array,         # (S,) or scalar
+    budgets: jax.Array,          # (S, C)
+    s_hat: jax.Array,            # (S, C) — spends so far
+    n_hat: jax.Array,            # (S,) int32 — current event frontier
+    lane_alive: jax.Array,       # (S,) bool — False = Algorithm-2 lane frozen
+    *,
+    reduce_blocks: int,          # repro.core.segments.REDUCE_BLOCKS
+    second_price: bool = False,
+    skip_retired: bool = True,
+    block_t: int = 256,
+    interpret: bool = not ON_TPU,
+):
+    """One fused Algorithm-2 round for S scenario lanes (see
+    ``round_fused.py``): resolve + rate partials + cap-out prediction +
+    block partials in a single kernel launch, with retired lanes skipped.
+
+    Returns ``(rate_partials (S, G, C), block_partials (S, G, C),
+    c_next (S,) i32, no_cap (S,) bool, n_next (S,) i32)`` — sum a partials
+    tensor over its G axis to get the (S, C) reduction the per-lane logic
+    consumes (same final reduce as ``repro.core.segments``)."""
+    n, c = values.shape
+    block_size = -(-n // reduce_blocks)
+    v, mult, act, live, res = _pad_scenario_state(
+        values, multipliers, active, reserves, block_t)
+    b = _pad_to(budgets.astype(jnp.float32), 128, 1)
+    s = _pad_to(s_hat.astype(jnp.float32), 128, 1)
+    rate_parts, block_parts, c_next, no_cap, n_next = round_fused_pallas(
+        v, mult, act, live, res, b, s,
+        jnp.asarray(n_hat, jnp.int32)[:, None],
+        lane_alive.astype(jnp.int8)[:, None],
+        n_events=n, block_size=block_size, num_reduce_blocks=reduce_blocks,
+        second_price=second_price, skip_retired=skip_retired,
+        block_t=block_t, interpret=interpret)
+    return (rate_parts[:, :, :c], block_parts[:, :, :c],
+            jnp.minimum(c_next[:, 0], c - 1), no_cap[:, 0] != 0,
+            n_next[:, 0])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_events_global", "reduce_blocks", "second_price", "skip_retired",
+    "block_t", "interpret"))
+def sweep_partials(
+    values: jax.Array,           # (N_local, C) — this shard's valuations
+    multipliers: jax.Array,      # (S, C)
+    active: jax.Array,           # (S, C) bool
+    reserves: jax.Array,         # (S,) or scalar
+    lo: jax.Array,               # (S,) int32 — global weight window [lo, hi)
+    hi: jax.Array,               # (S,) int32
+    lane_alive: jax.Array,       # (S,) bool
+    offset: jax.Array,           # () int32 — global index of values[0]
+    *,
+    n_events_global: int,        # N across all shards (canonical grid base)
+    reduce_blocks: int,
+    second_price: bool = False,
+    skip_retired: bool = True,
+    block_t: int = 256,
+    interpret: bool = not ON_TPU,
+):
+    """One fused resolve+reduce pass over the local shard: (S, G, C)
+    canonical partials of events in ``[lo, hi)`` — exactly the tensor the
+    mesh driver psums per round (its shard rows placed on the *global* grid
+    via ``offset``)."""
+    c = values.shape[1]
+    block_size = -(-n_events_global // reduce_blocks)
+    v, mult, act, live, res = _pad_scenario_state(
+        values, multipliers, active, reserves, block_t)
+    parts = sweep_partials_pallas(
+        v, mult, act, live, res,
+        jnp.asarray(lo, jnp.int32)[:, None],
+        jnp.asarray(hi, jnp.int32)[:, None],
+        lane_alive.astype(jnp.int8)[:, None],
+        jnp.asarray(offset, jnp.int32).reshape(1, 1),
+        block_size=block_size, num_reduce_blocks=reduce_blocks,
+        second_price=second_price, skip_retired=skip_retired,
+        block_t=block_t, interpret=interpret)
+    return parts[:, :, :c]

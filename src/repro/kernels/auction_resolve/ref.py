@@ -107,3 +107,95 @@ def sweep_resolve_ref(
                                          second_price=second_price),
         in_axes=(0, 0, 0))(multipliers, active,
                            jnp.asarray(reserves, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Fused-round oracles (mirror kernels in round_fused.py)
+# ---------------------------------------------------------------------------
+#
+# These mirror the fused Algorithm-2 round kernels: resolve + canonical-grid
+# reduction in one function, winners/prices internal only. The partials use
+# the same segment_sum arithmetic as ``repro.core.segments.partial_spend_sums``
+# (and the prediction the same per-lane math as
+# ``repro.core.parallel.lane_predict``), duplicated here so the kernel package
+# stays import-independent of ``repro.core`` — parity between the two copies
+# is pinned by the driver equivalence tests in tests/test_scenario_sweep.py.
+
+
+def fused_partials_ref(
+    values: jax.Array,           # (N_local, C) — shared across scenarios
+    multipliers: jax.Array,      # (S, C)
+    active: jax.Array,           # (S, C) bool
+    reserves: jax.Array,         # (S,)
+    lo: jax.Array,               # (S,) int32 — weight window [lo, hi), global
+    hi: jax.Array,               # (S,) int32
+    *,
+    block_size: int,             # canonical block (ceil(N_global / G))
+    reduce_blocks: int = 32,     # G
+    second_price: bool = False,
+    index_offset=0,              # global index of values[0] (mesh shards)
+):
+    """(S, G, C) canonical-block partial spends of events in ``[lo, hi)``."""
+    n_local, c = values.shape
+    gidx = index_offset + jnp.arange(n_local, dtype=jnp.int32)
+
+    def one(m, a, r, lo_s, hi_s):
+        winners, prices, _ = resolve_tile_ref(values, m, a, r,
+                                              second_price=second_price)
+        weight = ((gidx >= lo_s) & (gidx < hi_s)).astype(prices.dtype)
+        w = jnp.where(winners < 0, c, winners)
+        ids = (gidx // block_size) * (c + 1) + w
+        parts = jax.ops.segment_sum(
+            prices * weight, ids, num_segments=reduce_blocks * (c + 1))
+        return parts.reshape(reduce_blocks, c + 1)[:, :c]
+
+    return jax.vmap(one)(multipliers, active,
+                         jnp.asarray(reserves, jnp.float32),
+                         jnp.asarray(lo, jnp.int32),
+                         jnp.asarray(hi, jnp.int32))
+
+
+def round_fused_ref(
+    values: jax.Array,           # (N, C)
+    multipliers: jax.Array,      # (S, C)
+    active: jax.Array,           # (S, C) bool
+    reserves: jax.Array,         # (S,)
+    budgets: jax.Array,          # (S, C)
+    s_hat: jax.Array,            # (S, C)
+    n_hat: jax.Array,            # (S,) int32
+    *,
+    block_size: int,
+    reduce_blocks: int = 32,
+    second_price: bool = False,
+):
+    """One fused Algorithm-2 round, pure jnp: rate partials over the
+    remaining events, the per-lane cap-out prediction, block partials over
+    the predicted block. Returns ``(rate_partials (S, G, C), block_partials
+    (S, G, C), c_next (S,), no_cap (S,), n_next (S,))``."""
+    n_events = values.shape[0]
+    n_hat = jnp.asarray(n_hat, jnp.int32)
+    rate_parts = fused_partials_ref(
+        values, multipliers, active, reserves, n_hat,
+        jnp.full_like(n_hat, n_events), block_size=block_size,
+        reduce_blocks=reduce_blocks, second_price=second_price)
+
+    # lane_predict, vectorised over lanes (same arithmetic, same order)
+    rates = rate_parts.sum(axis=1) / jnp.maximum(
+        n_events - n_hat[:, None], 1).astype(jnp.float32)
+    ttl = jnp.where(active & (rates > 0),
+                    (budgets.astype(jnp.float32) - s_hat) / rates,
+                    jnp.float32(jnp.inf))
+    ttl = jnp.where(ttl < 0, jnp.float32(0.0), ttl)
+    c_next = jnp.argmin(ttl, axis=1).astype(jnp.int32)
+    ttl_min = jnp.min(ttl, axis=1)
+    no_cap = jnp.isinf(ttl_min)
+    step = jnp.minimum(jnp.floor(ttl_min),
+                       jnp.float32(n_events)).astype(jnp.int32)
+    n_next = jnp.where(no_cap, jnp.int32(n_events),
+                       jnp.minimum(n_hat + step, n_events))
+
+    block_parts = fused_partials_ref(
+        values, multipliers, active, reserves, n_hat, n_next,
+        block_size=block_size, reduce_blocks=reduce_blocks,
+        second_price=second_price)
+    return rate_parts, block_parts, c_next, no_cap, n_next

@@ -1,0 +1,349 @@
+"""Pallas TPU kernels: one fused Algorithm-2 round (resolve + reductions).
+
+The scenario-batched sweep loop (``repro.core.sweep.sweep_state_machine``)
+spends each cap-out round on one resolve of the shared (N, C) valuation
+matrix followed by two reductions of the resolved (S, N) winners/prices —
+the per-scenario remaining-rate and the exact block spends. With the
+``sweep_resolve`` kernel those winners/prices round-trip through HBM: the
+kernel writes (S, N) int32 + (S, N) f32, and ``segments.partial_spend_sums``
+reads them straight back just to collapse them onto the canonical
+(REDUCE_BLOCKS, C) reduction grid. Algorithm 2 never consumes the raw
+per-event outcomes — only the blocked spend partials — so the whole round is
+fusable: this module resolves each (block_t, C) valuation tile against all S
+scenario variants AND accumulates the (S, 32, C) canonical-block partials in
+a VMEM-resident output block, emitting only reduction-shaped tensors.
+Winners and prices never touch HBM.
+
+Two kernels:
+
+* :func:`round_fused_pallas` — the one-pass round for the single-device
+  sweep: grid ``(2, num_blocks, S)``, phase slowest, scenario innermost.
+  Phase 0 accumulates the rate partials (events ``>= n_hat``); at the first
+  phase-1 step the kernel runs the per-lane cap-out prediction
+  (``repro.core.parallel.lane_predict``'s arithmetic, vectorised over lanes)
+  against the VMEM-resident partials and stores ``(c_next, no_cap, n_next)``;
+  phase 1 accumulates the block partials (events in ``[n_hat, n_next)``).
+  One kernel launch per round, two streams of the valuation matrix, zero
+  per-event HBM output.
+* :func:`sweep_partials_pallas` — one weighted partials pass (events in
+  ``[lo, hi)``, per scenario) for drivers that must interleave a collective
+  between the two reductions: the mesh driver psums the rate partials, runs
+  the prediction on the globally-reduced tensor, then issues this kernel
+  again for the block partials — the kernel's (S, 32, C) output IS the psum
+  operand (see docs/SCALING.md).
+
+Converged-lane skipping: both kernels take a per-scenario ``lane_alive``
+mask and (statically, ``skip_retired=True``) predicate each (block, scenario)
+grid step on it with ``pl.when`` — a lane whose Algorithm-2 state is frozen
+contributes no tile work, so a round's wall-clock tracks the lanes still
+running rather than S. Frozen lanes' outputs are whatever the zero-init left
+there; the drivers discard frozen lanes' updates by select either way, so
+skipping cannot change results (asserted masked-vs-unmasked bit-identical in
+``tests/test_scenario_sweep.py`` / ``tests/test_sharded_sweep.py``).
+
+VMEM budget per one-pass launch (fp32, defaults block_t=256, G=32):
+values tile ``block_t*C`` + 2 partials blocks ``S*G*C`` + ~6 scenario-state
+blocks ``S*C`` + O(block_t + C) vectors. At C=1024 that is ~1 MB + 0.26 MB/S
+— S=32 fits in a 16 MB VMEM (~10 MB); S=64 (~18.5 MB) needs the per-phase
+kernel (one partials block: ~10.5 MB) or a C split. The budget table lives
+in docs/ALGORITHMS.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.auction_resolve.sweep_resolve import NEG
+
+
+def _resolve_tile(v, mult, reserve, act, live, *, second_price: bool):
+    """Resolve one (T, C) tile under one scenario's (multiplier, reserve,
+    activation) variant — the same arithmetic as ``sweep_resolve._kernel``,
+    factored so the fused kernels reuse it. Returns (winners (T,), prices
+    (T,), onehot (T, C) of the winning campaign)."""
+    bids = v * mult
+    eligible = act & (bids > reserve) & live
+    masked = jnp.where(eligible, bids, NEG)
+    t, c = masked.shape
+    winners = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    top = jnp.max(masked, axis=1)
+    sale = top > NEG
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, c), 1)
+    if second_price:
+        masked2 = jnp.where(cols == winners[:, None], NEG, masked)
+        second = jnp.max(masked2, axis=1)
+        prices = jnp.where(sale,
+                           jnp.maximum(jnp.where(second > NEG, second,
+                                                 reserve), reserve), 0.0)
+    else:
+        prices = jnp.where(sale, top, 0.0)
+    winners = jnp.where(sale, winners, -1)
+    onehot = (cols == winners[:, None]).astype(jnp.float32)
+    return winners, prices.astype(jnp.float32), onehot
+
+
+def _accumulate_partials(parts_ref, scn, onehot, prices, weight, gidx, *,
+                         block_size: int, num_blocks: int):
+    """Scatter one tile's weighted spends onto the canonical reduction grid.
+
+    ``parts_ref`` is the VMEM-resident (S, G, C) output block; the tile's
+    rows land in canonical block ``gidx // block_size`` (rows past the grid —
+    only ever zero-weight padding — match no row of the one-hot and drop
+    out). The (G, T) x (T, C) contraction runs on the MXU."""
+    spend = onehot * (prices * weight)[:, None]                  # (T, C)
+    g_ids = gidx // block_size                                   # (T,)
+    t = gidx.shape[0]
+    g_rows = jax.lax.broadcasted_iota(jnp.int32, (num_blocks, t), 0)
+    grid_onehot = (g_rows == g_ids[None, :]).astype(jnp.float32)
+    tile_parts = jnp.dot(grid_onehot, spend,
+                         preferred_element_type=jnp.float32)     # (G, C)
+    parts_ref[pl.ds(scn, 1)] += tile_parts[None]
+
+
+def _predict_all(parts, b, s_hat, act, n_hat, *, n_events: int):
+    """``repro.core.parallel.lane_predict`` vectorised over all S lanes,
+    fed by the VMEM-resident rate partials (same reduce order: sum the
+    (G, C) partials, then divide by the remaining-event count)."""
+    sums = jnp.sum(parts, axis=1)                                # (S, C)
+    denom = jnp.maximum(n_events - n_hat, 1).astype(jnp.float32)  # (S, 1)
+    rates = sums / denom
+    ttl = jnp.where(act & (rates > 0), (b - s_hat) / rates,
+                    jnp.float32(jnp.inf))
+    ttl = jnp.where(ttl < 0, jnp.float32(0.0), ttl)
+    c_next = jnp.argmin(ttl, axis=1).astype(jnp.int32)           # (S,)
+    ttl_min = jnp.min(ttl, axis=1)
+    no_cap = jnp.isinf(ttl_min)
+    step = jnp.minimum(jnp.floor(ttl_min),
+                       jnp.float32(n_events)).astype(jnp.int32)
+    n_next = jnp.where(no_cap, jnp.int32(n_events),
+                       jnp.minimum(n_hat[:, 0] + step, n_events))
+    return c_next, no_cap, n_next
+
+
+def _round_kernel(v_ref, mult_ref, act_ref, live_ref, reserve_ref, b_ref,
+                  s_hat_ref, n_hat_ref, alive_ref,
+                  rate_parts_ref, block_parts_ref, c_next_ref, no_cap_ref,
+                  n_next_ref,
+                  *, second_price: bool, skip_retired: bool, n_events: int,
+                  block_size: int, num_blocks: int, block_t: int):
+    phase = pl.program_id(0)
+    blk = pl.program_id(1)
+    scn = pl.program_id(2)
+
+    @pl.when((phase == 0) & (blk == 0) & (scn == 0))
+    def _init():
+        rate_parts_ref[...] = jnp.zeros_like(rate_parts_ref)
+        block_parts_ref[...] = jnp.zeros_like(block_parts_ref)
+        c_next_ref[...] = jnp.zeros_like(c_next_ref)
+        no_cap_ref[...] = jnp.ones_like(no_cap_ref)
+        n_next_ref[...] = jnp.full_like(n_next_ref, n_events)
+
+    # phase transition: the per-lane cap-out prediction, run once against
+    # the now-complete rate partials (all O(S*C) state is VMEM-resident)
+    @pl.when((phase == 1) & (blk == 0) & (scn == 0))
+    def _predict():
+        c_next, no_cap, n_next = _predict_all(
+            rate_parts_ref[...], b_ref[...], s_hat_ref[...],
+            act_ref[...] != 0, n_hat_ref[...], n_events=n_events)
+        c_next_ref[...] = c_next[:, None]
+        no_cap_ref[...] = no_cap.astype(jnp.int32)[:, None]
+        n_next_ref[...] = n_next[:, None]
+
+    def tile_work():
+        v = v_ref[...].astype(jnp.float32)                  # (T, C) shared
+        mult = mult_ref[pl.ds(scn, 1), :]                   # (1, C)
+        act = act_ref[pl.ds(scn, 1), :] != 0
+        reserve = reserve_ref[scn, 0]
+        live = live_ref[...] != 0                           # (T, 1)
+        _, prices, onehot = _resolve_tile(v, mult, reserve, act, live,
+                                          second_price=second_price)
+        gidx = blk * block_t + jax.lax.broadcasted_iota(
+            jnp.int32, (block_t, 1), 0)[:, 0]
+        n_hat = n_hat_ref[scn, 0]
+        in_range = gidx >= n_hat
+        # phase 0: remaining events [n_hat, N); phase 1: the predicted
+        # block [n_hat, n_next) — same weight, upper-clipped
+        hi = jnp.where(phase == 0, jnp.int32(n_events), n_next_ref[scn, 0])
+        weight = (in_range & (gidx < hi) & live[:, 0]).astype(jnp.float32)
+
+        def acc(ref):
+            _accumulate_partials(ref, scn, onehot, prices, weight, gidx,
+                                 block_size=block_size,
+                                 num_blocks=num_blocks)
+
+        @pl.when(phase == 0)
+        def _():
+            acc(rate_parts_ref)
+
+        @pl.when(phase == 1)
+        def _():
+            acc(block_parts_ref)
+
+    if skip_retired:
+        @pl.when(alive_ref[scn, 0] != 0)
+        def _():
+            tile_work()
+    else:
+        tile_work()
+
+
+def round_fused_pallas(
+    values: jax.Array,           # (N_pad, C_pad) — shared valuation tiles
+    multipliers: jax.Array,      # (S, C_pad)
+    active: jax.Array,           # (S, C_pad) int8
+    live: jax.Array,             # (N_pad, 1) int8 — 0 marks padded rows
+    reserves: jax.Array,         # (S, 1)
+    budgets: jax.Array,          # (S, C_pad) f32
+    s_hat: jax.Array,            # (S, C_pad) f32
+    n_hat: jax.Array,            # (S, 1) int32
+    lane_alive: jax.Array,       # (S, 1) int8 — 0 = Algorithm-2 lane frozen
+    *,
+    n_events: int,               # true N (pre-padding)
+    block_size: int,             # canonical reduction block (ceil(N / G))
+    num_reduce_blocks: int,      # G — repro.core.segments.REDUCE_BLOCKS
+    second_price: bool = False,
+    skip_retired: bool = True,
+    block_t: int = 256,
+    interpret: bool = False,
+):
+    """One fused Algorithm-2 round for all S scenario lanes.
+
+    Returns ``(rate_partials (S, G, C), block_partials (S, G, C),
+    c_next (S, 1) i32, no_cap (S, 1) i32, n_next (S, 1) i32)`` — only
+    reduction-shaped outputs; the (S, N) winners/prices live and die in VMEM.
+    """
+    n_pad, c = values.shape
+    s = multipliers.shape[0]
+    assert n_pad % block_t == 0, (n_pad, block_t)
+    g = num_reduce_blocks
+
+    grid = (2, n_pad // block_t, s)
+    kernel = functools.partial(
+        _round_kernel, second_price=second_price, skip_retired=skip_retired,
+        n_events=n_events, block_size=block_size, num_blocks=g,
+        block_t=block_t)
+
+    full_sc = pl.BlockSpec((s, c), lambda p, i, j: (0, 0))
+    full_s1 = pl.BlockSpec((s, 1), lambda p, i, j: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, c), lambda p, i, j: (i, 0)),   # values
+            full_sc,                                              # multipliers
+            full_sc,                                              # active
+            pl.BlockSpec((block_t, 1), lambda p, i, j: (i, 0)),   # live rows
+            full_s1,                                              # reserves
+            full_sc,                                              # budgets
+            full_sc,                                              # s_hat
+            full_s1,                                              # n_hat
+            full_s1,                                              # lane_alive
+        ],
+        out_specs=[
+            pl.BlockSpec((s, g, c), lambda p, i, j: (0, 0, 0)),
+            pl.BlockSpec((s, g, c), lambda p, i, j: (0, 0, 0)),
+            full_s1, full_s1, full_s1,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, g, c), jnp.float32),
+            jax.ShapeDtypeStruct((s, g, c), jnp.float32),
+            jax.ShapeDtypeStruct((s, 1), jnp.int32),
+            jax.ShapeDtypeStruct((s, 1), jnp.int32),
+            jax.ShapeDtypeStruct((s, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(values, multipliers, active, live, reserves, budgets, s_hat, n_hat,
+      lane_alive)
+
+
+def _partials_kernel(v_ref, mult_ref, act_ref, live_ref, reserve_ref,
+                     lo_ref, hi_ref, alive_ref, offset_ref,
+                     parts_ref,
+                     *, second_price: bool, skip_retired: bool,
+                     block_size: int, num_blocks: int, block_t: int):
+    blk = pl.program_id(0)
+    scn = pl.program_id(1)
+
+    @pl.when((blk == 0) & (scn == 0))
+    def _init():
+        parts_ref[...] = jnp.zeros_like(parts_ref)
+
+    def tile_work():
+        v = v_ref[...].astype(jnp.float32)
+        mult = mult_ref[pl.ds(scn, 1), :]
+        act = act_ref[pl.ds(scn, 1), :] != 0
+        reserve = reserve_ref[scn, 0]
+        live = live_ref[...] != 0
+        _, prices, onehot = _resolve_tile(v, mult, reserve, act, live,
+                                          second_price=second_price)
+        gidx = offset_ref[0, 0] + blk * block_t + jax.lax.broadcasted_iota(
+            jnp.int32, (block_t, 1), 0)[:, 0]
+        weight = ((gidx >= lo_ref[scn, 0]) & (gidx < hi_ref[scn, 0])
+                  & live[:, 0]).astype(jnp.float32)
+        _accumulate_partials(parts_ref, scn, onehot, prices, weight, gidx,
+                             block_size=block_size, num_blocks=num_blocks)
+
+    if skip_retired:
+        @pl.when(alive_ref[scn, 0] != 0)
+        def _():
+            tile_work()
+    else:
+        tile_work()
+
+
+def sweep_partials_pallas(
+    values: jax.Array,           # (N_pad, C_pad) — local shard tiles
+    multipliers: jax.Array,      # (S, C_pad)
+    active: jax.Array,           # (S, C_pad) int8
+    live: jax.Array,             # (N_pad, 1) int8
+    reserves: jax.Array,         # (S, 1)
+    lo: jax.Array,               # (S, 1) int32 — weight window [lo, hi)
+    hi: jax.Array,               # (S, 1) int32
+    lane_alive: jax.Array,       # (S, 1) int8
+    offset: jax.Array,           # (1, 1) int32 — global index of row 0
+    *,
+    block_size: int,
+    num_reduce_blocks: int,
+    second_price: bool = False,
+    skip_retired: bool = True,
+    block_t: int = 256,
+    interpret: bool = False,
+):
+    """One fused resolve+reduce pass: (S, G, C) canonical partials of the
+    spends of events in ``[lo, hi)`` per scenario. ``offset`` places a mesh
+    shard's rows on the *global* canonical grid, so the output is exactly
+    the tensor :func:`repro.core.segments.partial_spend_sums` produces — and
+    therefore exactly the mesh driver's psum operand."""
+    n_pad, c = values.shape
+    s = multipliers.shape[0]
+    assert n_pad % block_t == 0, (n_pad, block_t)
+    g = num_reduce_blocks
+    grid = (n_pad // block_t, s)
+    kernel = functools.partial(
+        _partials_kernel, second_price=second_price,
+        skip_retired=skip_retired, block_size=block_size, num_blocks=g,
+        block_t=block_t)
+    full_sc = pl.BlockSpec((s, c), lambda i, j: (0, 0))
+    full_s1 = pl.BlockSpec((s, 1), lambda i, j: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, c), lambda i, j: (i, 0)),
+            full_sc,
+            full_sc,
+            pl.BlockSpec((block_t, 1), lambda i, j: (i, 0)),
+            full_s1,
+            full_s1,
+            full_s1,
+            full_s1,
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((s, g, c), lambda i, j: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, g, c), jnp.float32),
+        interpret=interpret,
+    )(values, multipliers, active, live, reserves, lo, hi, lane_alive,
+      offset)

@@ -6,6 +6,8 @@ import pytest
 
 from repro.kernels.auction_resolve import (auction_resolve,
                                            auction_resolve_ref,
+                                           fused_partials_ref, round_fused,
+                                           round_fused_ref, sweep_partials,
                                            sweep_resolve, sweep_resolve_ref)
 from repro.kernels.capped_scan import capped_scan, capped_scan_ref
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
@@ -118,6 +120,95 @@ def test_sweep_resolve_single_scenario_matches_tilewise():
         np.testing.assert_array_equal(np.asarray(pb[i]), np.asarray(p1[0]))
         np.testing.assert_allclose(np.asarray(sb[i]), np.asarray(s1[0]),
                                    rtol=1e-6)
+
+
+def _fused_inputs(s, n, c, seed=0):
+    key = jax.random.PRNGKey(seed + s * 1000 + n + c)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    v = jax.random.uniform(k1, (n, c))
+    mult = jnp.exp(jax.random.normal(k2, (s, c)) * 0.1)
+    act = jax.random.bernoulli(k3, 0.8, (s, c))
+    res = jax.random.uniform(k4, (s,), maxval=0.05)
+    b = jax.random.uniform(k5, (s, c), minval=2.0, maxval=20.0)
+    s_hat = jnp.zeros((s, c), jnp.float32)
+    n_hat = (jnp.arange(s, dtype=jnp.int32) * (n // (2 * s)))
+    return v, mult, act, res, b, s_hat, n_hat
+
+
+@pytest.mark.parametrize("s,n,c,sp,blk", [
+    (1, 512, 40, False, 256),
+    (5, 1000, 33, True, 128),        # ragged N and C
+    (8, 768, 17, False, 128),
+    (4, 300, 7, True, 128),          # N < canonical grid coverage
+])
+def test_round_fused_matches_ref(s, n, c, sp, blk):
+    """Interpret-mode parity of the one-pass fused round vs its jnp oracle:
+    same canonical partials, same cap-out predictions."""
+    v, mult, act, res, b, s_hat, n_hat = _fused_inputs(s, n, c)
+    block_size = -(-n // 32)
+    rp1, bp1, cn1, nc1, nn1 = round_fused(
+        v, mult, act, res, b, s_hat, n_hat, jnp.ones((s,), bool),
+        reduce_blocks=32, second_price=sp, block_t=blk, interpret=True)
+    rp2, bp2, cn2, nc2, nn2 = round_fused_ref(
+        v, mult, act, res, b, s_hat, n_hat, block_size=block_size,
+        reduce_blocks=32, second_price=sp)
+    np.testing.assert_allclose(np.asarray(rp1), np.asarray(rp2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(bp1), np.asarray(bp2),
+                               rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(cn1), np.asarray(cn2))
+    assert np.array_equal(np.asarray(nc1), np.asarray(nc2))
+    assert np.array_equal(np.asarray(nn1), np.asarray(nn2))
+
+
+def test_round_fused_skip_retired_leaves_live_lanes_untouched():
+    """Predicating retired lanes off must not change any live lane's outputs
+    (frozen lanes' rows are whatever the zero-init left — discarded by the
+    drivers)."""
+    s, n, c = 6, 640, 24
+    v, mult, act, res, b, s_hat, n_hat = _fused_inputs(s, n, c, seed=3)
+    alive = jnp.asarray([True, False, True, True, False, True])
+    out_skip = round_fused(v, mult, act, res, b, s_hat, n_hat, alive,
+                           reduce_blocks=32, skip_retired=True,
+                           block_t=128, interpret=True)
+    out_full = round_fused(v, mult, act, res, b, s_hat, n_hat, alive,
+                           reduce_blocks=32, skip_retired=False,
+                           block_t=128, interpret=True)
+    live = np.asarray(alive)
+    for a, bb in zip(out_skip, out_full):
+        np.testing.assert_array_equal(np.asarray(a)[live],
+                                      np.asarray(bb)[live])
+    # skipped lanes did no tile work: their partials rows stayed zero
+    assert float(np.abs(np.asarray(out_skip[0])[~live]).max()) == 0.0
+    assert float(np.abs(np.asarray(out_skip[1])[~live]).max()) == 0.0
+
+
+@pytest.mark.parametrize("offset,ndev", [(0, 1), (512, 4), (1536, 4)])
+def test_sweep_partials_matches_ref_with_offset(offset, ndev):
+    """The sharded fused pass: a shard's partials land on the GLOBAL
+    canonical grid exactly as the oracle's (the psum-operand contract)."""
+    s, n_global, c = 4, 2048, 20
+    local_n = n_global // ndev
+    v, mult, act, res, b, s_hat, n_hat = _fused_inputs(s, n_global, c)
+    v_local = v[offset:offset + local_n]
+    lo = n_hat
+    hi = jnp.full_like(n_hat, n_global)
+    block_size = -(-n_global // 32)
+    parts_k = sweep_partials(
+        v_local, mult, act, res, lo, hi, jnp.ones((s,), bool),
+        jnp.int32(offset), n_events_global=n_global, reduce_blocks=32,
+        block_t=256, interpret=True)
+    parts_r = fused_partials_ref(
+        v_local, mult, act, res, lo, hi, block_size=block_size,
+        reduce_blocks=32, index_offset=offset)
+    np.testing.assert_allclose(np.asarray(parts_k), np.asarray(parts_r),
+                               rtol=1e-5, atol=1e-5)
+    # rows outside the shard's canonical blocks are exact zeros
+    g_lo, g_hi = offset // block_size, (offset + local_n - 1) // block_size
+    outside = np.ones(32, bool)
+    outside[g_lo:g_hi + 1] = False
+    if outside.any():
+        assert float(np.abs(np.asarray(parts_k)[:, outside]).max()) == 0.0
 
 
 @pytest.mark.parametrize("n,c,blk", [

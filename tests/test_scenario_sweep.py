@@ -165,9 +165,13 @@ def test_sweep_sort2aggregate_close_to_oracle_with_ties(env):
     assert grid.num_scenarios >= 8
     warm = sequential_replay(env.values, ties, base,
                              record_events=False).cap_times
-    sw, gaps = sweep_sort2aggregate(env.values, grid.budgets, grid.rules,
-                                    cap_times_init=warm, refine_iters=8)
+    sw, gaps, iters = sweep_sort2aggregate(env.values, grid.budgets,
+                                           grid.rules, cap_times_init=warm,
+                                           refine_iters=8)
     assert gaps.shape == (grid.num_scenarios,)
+    assert iters.shape == (grid.num_scenarios,)
+    # the warm start IS scenario 0's fixed point: refinement must not move it
+    assert int(iters[0]) == 0
     for s in range(grid.num_scenarios):
         rule, budgets = grid.scenario(s)
         ref = sequential_replay(env.values, budgets, rule,
@@ -258,6 +262,168 @@ def test_sweep_rejects_unknown_resolve(env):
 
 
 # ---------------------------------------------------------------------------
+# (c2) fused round: one launch per round == the jnp loop, bit-for-bit
+# ---------------------------------------------------------------------------
+
+def _skewed_grid(env):
+    """Mixes early-retiring, normal, and never-capping scenarios, so lanes
+    freeze at very different rounds — the converged-lane-skipping regime."""
+    base = AuctionRule.first_price(N_CAMPAIGNS)
+    return ScenarioGrid.product(base, env.budgets,
+                                bid_scales=[1.0, 1.2],
+                                budget_scales=[1.0, 0.25, 1e6])
+
+
+def test_sweep_fused_oracle_is_bitwise_the_jnp_loop(env):
+    """resolve="fused" on CPU (jnp oracle composition) must be bit-for-bit
+    the vmapped jnp sweep — every output of the batched loop."""
+    for grid in (_grid(env, "first_price"), _grid(env, "second_price"),
+                 _skewed_grid(env)):
+        ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                                  resolve="jnp")
+        out = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                                  resolve="fused")
+        for name, a, b in zip(("final_spend", "cap_times", "retired",
+                               "boundaries", "num_rounds", "n_hat"),
+                              out, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+
+
+@pytest.mark.parametrize("kind", ["first_price", "second_price"])
+def test_sweep_fused_kernel_matches_jnp(env, kind):
+    """The fused round KERNEL (interpret mode on CPU) end-to-end: partials
+    accumulated in-kernel reproduce the jnp loop's spends and cap times."""
+    grid = _grid(env, kind)
+    ref = sweep_parallel(env.values, grid.budgets, grid.rules, resolve="jnp")
+    fus = sweep_parallel(env.values, grid.budgets, grid.rules,
+                         resolve="fused", interpret=True)
+    np.testing.assert_allclose(np.asarray(fus.final_spend),
+                               np.asarray(ref.final_spend),
+                               rtol=1e-5, atol=1e-5, err_msg=kind)
+    np.testing.assert_array_equal(np.asarray(fus.cap_times),
+                                  np.asarray(ref.cap_times), err_msg=kind)
+
+
+def test_fused_skip_retired_bit_identical(env):
+    """Converged-lane skipping is a pure wall-clock optimisation: a lane
+    that retires at round k has bit-identical results whether the remaining
+    rounds run masked or unmasked — kernel (interpret) and oracle back-ends,
+    single device. (The 4-device half of this contract runs in
+    test_fused_sharded_retired_lanes_4dev below and in
+    tests/test_sharded_sweep.py.)"""
+    grid = _skewed_grid(env)
+    outs = {}
+    for skip in (True, False):
+        outs[skip] = sweep_state_machine(
+            env.values, grid.budgets, grid.rules, resolve="fused",
+            interpret=True, skip_retired=skip)
+    for name, a, b in zip(("final_spend", "cap_times", "retired",
+                           "boundaries", "num_rounds", "n_hat"),
+                          outs[True], outs[False]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"masked vs unmasked: {name}")
+    # and both equal the jnp loop
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp")
+    np.testing.assert_array_equal(np.asarray(outs[True][0]),
+                                  np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(outs[True][1]),
+                                  np.asarray(ref[1]))
+
+
+@pytest.mark.slow
+def test_fused_sharded_retired_lanes_4dev():
+    """The masked-vs-unmasked contract at 4 forced host devices: the fused
+    sharded sweep (oracle and interpret-kernel back-ends) is bit-identical
+    with lane skipping on and off, and equal to the jnp loop."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    from pathlib import Path
+    script = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        assert len(jax.devices()) == 4
+        from repro.core import AuctionRule, ScenarioGrid, sweep_state_machine
+        from repro.core.sharded import sweep_sharded
+        from repro.data import make_synthetic_env
+        from repro.launch.mesh import SweepMeshSpec
+        env = make_synthetic_env(jax.random.PRNGKey(1), n_events=4096,
+                                 n_campaigns=16, emb_dim=8)
+        base = AuctionRule.first_price(16)
+        grid = ScenarioGrid.product(base, env.budgets,
+                                    bid_scales=[1.0, 1.2],
+                                    budget_scales=[1.0, 0.25, 1e6])
+        ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                                  resolve="jnp")
+        spec = SweepMeshSpec.for_devices(num_event_devices=4)
+        names = ("final_spend", "cap_times", "retired", "boundaries",
+                 "num_rounds", "n_hat")
+        for interpret in (None, True):
+            for skip in (True, False):
+                out = sweep_sharded(env.values, grid.budgets, grid.rules,
+                                    spec, resolve="fused",
+                                    interpret=interpret, skip_retired=skip)
+                for name, a, b in zip(names, out, ref):
+                    assert np.array_equal(np.asarray(a), np.asarray(b)), \\
+                        (interpret, skip, name)
+        print("FUSED_SHARDED_4DEV_OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "FUSED_SHARDED_4DEV_OK" in out.stdout
+
+
+def test_auto_resolve_never_selects_interpret_pallas(env):
+    """Satellite regression: BENCH_sweep.json shows interpret-mode pallas
+    several times slower than vmapped jnp at the sweep layer on CPU, so
+    "auto" must route around it — fused-on-TPU, jnp-on-CPU, and the program
+    "auto" builds off TPU must contain no pallas_call at all."""
+    from repro.core import fused_runs_kernel, pick_resolve
+    assert pick_resolve("auto", on_tpu=False) == "jnp"
+    assert pick_resolve("auto", on_tpu=True) == "fused"
+    with pytest.raises(ValueError, match="unknown resolve"):
+        pick_resolve("cuda")
+    # "fused" off TPU runs its jnp oracle unless interpret is forced
+    assert fused_runs_kernel(None) == resolve_on_tpu()
+    assert fused_runs_kernel(True)
+    # the traced "auto" sweep on CPU contains no pallas_call primitive
+    if not resolve_on_tpu():
+        grid = _grid(env, "first_price")
+        jaxpr = jax.make_jaxpr(
+            lambda v, b: sweep_parallel(v, b, grid.rules, resolve="auto")
+        )(env.values, grid.budgets)
+        assert "pallas_call" not in str(jaxpr)
+        # ... and the same holds for the fused back-end's CPU realization
+        jaxpr = jax.make_jaxpr(
+            lambda v, b: sweep_parallel(v, b, grid.rules, resolve="fused")
+        )(env.values, grid.budgets)
+        assert "pallas_call" not in str(jaxpr)
+
+
+def resolve_on_tpu():
+    from repro.kernels.auction_resolve import ON_TPU
+    return ON_TPU
+
+
+def test_engine_sweep_fused_resolve_option(env):
+    engine = CounterfactualEngine(env.values, env.budgets)
+    grid = engine.grid(bid_scales=[1.0, 1.1], reserves=[0.0, 0.02])
+    ref = engine.sweep(grid, method="parallel", resolve="jnp")
+    fus = engine.sweep(grid, method="parallel", resolve="fused")
+    np.testing.assert_array_equal(np.asarray(fus.results.final_spend),
+                                  np.asarray(ref.results.final_spend))
+    np.testing.assert_array_equal(np.asarray(fus.results.cap_times),
+                                  np.asarray(ref.results.cap_times))
+    assert fus.delta_table() == ref.delta_table()
+
+
+# ---------------------------------------------------------------------------
 # (d) sharded driver: 1×1 mesh == the single-device batched loop, exactly
 # ---------------------------------------------------------------------------
 
@@ -340,6 +506,61 @@ def test_engine_sweep_sort2aggregate_warm_start(env):
     err = float(spend_weighted_relative_error(base.final_spend,
                                               ref.final_spend))
     assert err < ORACLE_TOL
+
+
+def test_engine_sweep_per_scenario_warm_start(env):
+    """warm_start="per_scenario": Algorithm 4 vmapped over the grid seeds
+    every scenario from its OWN design; accuracy stays within the oracle
+    tolerance and the per-scenario refine-iteration counts are reported."""
+    engine = CounterfactualEngine(env.values, env.budgets)
+    grid = engine.grid(bid_scales=[1.0, 1.3], budget_scales=[1.0, 0.4])
+    sweep = engine.sweep(grid, method="sort2aggregate",
+                         warm_start="per_scenario")
+    assert sweep.refine_iters is not None
+    assert sweep.refine_iters.shape == (grid.num_scenarios,)
+    assert sweep.consistency_gaps.shape == (grid.num_scenarios,)
+    for s in range(grid.num_scenarios):
+        rule, budgets = grid.scenario(s)
+        ref = sequential_replay(env.values, budgets, rule,
+                                record_events=False)
+        err = float(spend_weighted_relative_error(
+            sweep.results.final_spend[s], ref.final_spend))
+        assert err < ORACLE_TOL, (grid.labels[s], err)
+
+
+def test_engine_sweep_warm_start_modes(env):
+    """True aliases "base", False is a cold start, junk raises; all report
+    refine_iters."""
+    engine = CounterfactualEngine(env.values, env.budgets)
+    grid = engine.grid(bid_scales=[1.0, 1.1])
+    legacy = engine.sweep(grid, method="sort2aggregate", warm_start=True)
+    base = engine.sweep(grid, method="sort2aggregate", warm_start="base")
+    np.testing.assert_array_equal(np.asarray(legacy.results.cap_times),
+                                  np.asarray(base.results.cap_times))
+    cold = engine.sweep(grid, method="sort2aggregate", warm_start=False)
+    assert cold.refine_iters is not None
+    # the cold start pays refine iterations the converged base seed skips
+    assert int(cold.refine_iters[0]) >= int(base.refine_iters[0])
+    with pytest.raises(ValueError, match="warm_start"):
+        engine.sweep(grid, method="sort2aggregate", warm_start="yesterday")
+
+
+def test_estimate_pi_sweep_matches_per_scenario_estimates(env):
+    """The vmapped VI is estimate_pi per scenario with shared draws: each
+    lane must equal the single-scenario call with the same key."""
+    from repro.core import estimate_pi, estimate_pi_sweep
+    engine = CounterfactualEngine(env.values, env.budgets)
+    grid = engine.grid(bid_scales=[1.0, 1.4])
+    key = jax.random.PRNGKey(7)
+    est = estimate_pi_sweep(env.values, grid.budgets, grid.rules, key,
+                            sample_size=128, num_iters=10, batch_size=32)
+    assert est.pi.shape == (grid.num_scenarios, N_CAMPAIGNS)
+    for s in range(grid.num_scenarios):
+        rule, budgets = grid.scenario(s)
+        solo = estimate_pi(env.values, budgets, rule, key, sample_size=128,
+                           num_iters=10, batch_size=32)
+        np.testing.assert_allclose(np.asarray(est.pi[s]),
+                                   np.asarray(solo.pi), rtol=1e-6, atol=1e-6)
 
 
 def test_stack_rules_rejects_mixed_kinds():

@@ -71,11 +71,13 @@ SCRIPT = textwrap.dedent("""
     for spec in [SweepMeshSpec.for_devices(),
                  SweepMeshSpec.for_devices(num_event_devices=4,
                                            num_scenario_devices=2)]:
-        out = sweep_sharded(env.values, grid.budgets, grid.rules, spec)
-        for name, a, b in zip(("s_hat", "cap", "retired", "bnds", "rnd",
-                               "n_hat"), out, sw_ref):
-            assert np.array_equal(np.asarray(a), np.asarray(b)), \\
-                (spec.event_axes, spec.scenario_axis, name)
+        for resolve in ("jnp", "fused"):
+            out = sweep_sharded(env.values, grid.budgets, grid.rules, spec,
+                                resolve=resolve)
+            for name, a, b in zip(("s_hat", "cap", "retired", "bnds", "rnd",
+                                   "n_hat"), out, sw_ref):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), \\
+                    (resolve, spec.event_axes, spec.scenario_axis, name)
     print("SWEEP_SHARDED_OK")
 """)
 

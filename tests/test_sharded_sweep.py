@@ -93,6 +93,38 @@ def test_sharded_pallas_resolve_matches_batched(env):
 
 
 @needs_4_devices
+def test_sharded_fused_round_matches_batched(env):
+    """resolve="fused" on the mesh: the two fused resolve+reduce passes per
+    round psum the identical canonical partials, so the sharded fused sweep
+    is bitwise the single-device jnp loop — with lane skipping on and off,
+    and with the interpret-mode partials kernel forced."""
+    grid = _grid(env)
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp")
+    spec = SweepMeshSpec.for_devices(num_event_devices=4)
+    for skip in (True, False):
+        out = sweep_sharded(env.values, grid.budgets, grid.rules, spec,
+                            resolve="fused", skip_retired=skip)
+        _assert_bitwise(out, ref, f"fused sharded skip={skip}")
+    out = sweep_sharded(env.values, grid.budgets, grid.rules, spec,
+                        resolve="fused", interpret=True)
+    _assert_bitwise(out, ref, "fused sharded interpret kernel")
+
+
+@needs_4_devices
+def test_sharded_fused_round_event_and_scenario_mesh(env):
+    """Fused round on a 2×2 event×scenario mesh: still bitwise."""
+    grid = _grid(env)
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp")
+    spec = SweepMeshSpec.for_devices(num_event_devices=2,
+                                     num_scenario_devices=2)
+    out = sweep_sharded(env.values, grid.budgets, grid.rules, spec,
+                        resolve="fused")
+    _assert_bitwise(out, ref, "fused 2x2")
+
+
+@needs_4_devices
 def test_ragged_event_shard_raises(env):
     """N not divisible by the event-device count: explicit pad-or-error."""
     grid = _grid(env)
