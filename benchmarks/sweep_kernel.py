@@ -1,6 +1,7 @@
 """Scenario-batched resolve kernel throughput, tracked as BENCH_sweep.json.
 
-Three layers, each for S in a configurable schedule (default {1, 8, 32}):
+Four layers; the first three for S in a configurable schedule (default
+{1, 8, 32}):
 
 * ``resolve`` — one scenario-batched resolve of the full (N, C) valuation
   matrix: the ``sweep_resolve`` Pallas kernel (tile fetched to VMEM once,
@@ -19,6 +20,14 @@ Three layers, each for S in a configurable schedule (default {1, 8, 32}):
   benchmark exits non-zero if it is.
 * ``sweep`` — end-to-end ``sweep_parallel``: the batched state machine with
   ``resolve="pallas"`` vs the vmapped jnp state machine.
+* ``stream`` — events/sec vs N at a FIXED chunk size: the event-chunked
+  streaming executor (``chunks=``, working set bounded by the chunk) vs the
+  in-memory batched driver at S=8, timed with ``common.time_pair``
+  interleaved medians (sequential A/B windows swing 2× under load on a
+  shared box). Tracks the streaming overhead a bounded working set costs as
+  N grows — the chunked path re-resolves each chunk once per reduction
+  window, so CPU numbers are an upper bound on the TPU story (where the
+  chunk scan is what lets N outgrow HBM at all).
 
 Besides the usual CSV rows on stdout, merges a JSON perf section (default
 ``BENCH_sweep.json``, key ``sweep_kernel``, tagged with ``device_count``)
@@ -42,7 +51,9 @@ from benchmarks.common import (bench_report, emit, sweep_argparser,
 
 def main(n_events: int = 2048, n_campaigns: int = 32,
          s_values=(1, 8, 32), block_t: int = 256,
-         out: str = "BENCH_sweep.json") -> None:
+         out: str = "BENCH_sweep.json",
+         stream_n_values=(2048, 4096, 8192),
+         stream_chunk: int = 1024) -> None:
     import jax
     import jax.numpy as jnp
 
@@ -152,6 +163,35 @@ def main(n_events: int = 2048, n_campaigns: int = 32,
             env.values, grid.budgets, grid.rules,
             resolve="jnp").final_spend, repeats=1, warmup=1)
         record(s_count, "sweep", "vmap_jnp", us)
+
+    # --- stream layer: events/sec vs N at a fixed chunk size ---------------
+    stream_s = 8
+    for n_stream in stream_n_values:
+        env_n = make_synthetic_env(jax.random.PRNGKey(0), n_events=n_stream,
+                                   n_campaigns=n_campaigns, emb_dim=8)
+        grid_n = ScenarioGrid.product(
+            base, env_n.budgets,
+            bid_scales=[1.0 + 0.02 * i for i in range(stream_s)])
+
+        def chunked():
+            return sweep_parallel(env_n.values, grid_n.budgets,
+                                  grid_n.rules, resolve="jnp",
+                                  chunks=stream_chunk).final_spend
+
+        def in_memory():
+            return sweep_parallel(env_n.values, grid_n.budgets,
+                                  grid_n.rules, resolve="jnp").final_spend
+
+        us_c, us_m = time_pair(chunked, in_memory, repeats=7, warmup=1)
+        for path, us in (("chunked", us_c), ("in_memory", us_m)):
+            ev_per_sec = n_stream / (us * 1e-6)
+            emit(f"stream_N{n_stream}_{path}", us,
+                 f"events_per_sec={ev_per_sec:.0f}")
+            records.append({
+                "S": stream_s, "N": n_stream, "layer": "stream",
+                "path": path, "events_per_chunk": stream_chunk,
+                "us_per_call": round(us, 1),
+                "events_per_sec": round(ev_per_sec, 1)})
 
     update_bench_json(out, "sweep_kernel", bench_report(
         records, n_events=n_events, n_campaigns=n_campaigns,

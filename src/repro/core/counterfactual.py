@@ -35,6 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sweep as sweep_lib
+from repro.core.executor import (check_s2a_options, execute_s2a_sweep,
+                                 execute_sweep, plan_for_driver)
 from repro.core.parallel import parallel_simulate
 from repro.core.sequential import naive_sampled_replay, sequential_replay
 from repro.core.sort2aggregate import sort2aggregate as _sort2aggregate
@@ -247,6 +249,7 @@ class CounterfactualEngine:
               resolve: str = "auto",
               driver: str = "batched",
               mesh=None,
+              chunks=None,
               key: Optional[jax.Array] = None) -> SweepResult:
         """Evaluate every scenario in ``grid`` in one batched device program.
 
@@ -289,13 +292,28 @@ class CounterfactualEngine:
         sweep's; for ``method="sort2aggregate"`` the Algorithm-4 warm start
         (``estimate_pi_sharded``) and every refine/aggregate pass run on the
         mesh too. See docs/SCALING.md.
+
+        ``chunks`` (``method="parallel"`` only; an int or
+        :class:`~repro.core.executor.ChunkSpec`) turns on event-chunked
+        streaming: each Algorithm-2 round scans the log in fixed chunks,
+        accumulating the canonical spend partials chunk-by-chunk, so the
+        per-device working set stays O(events_per_chunk · C) and N scales
+        past what a resident round allows. Bit-for-bit the in-memory
+        result on aligned chunk sizes (pad-or-error otherwise); composes
+        with ``driver="sharded"`` — each device scans its own shard's
+        chunks. The (driver, resolve, chunks) triple is executed by the
+        unified plan layer (:mod:`repro.core.executor`,
+        docs/ARCHITECTURE.md).
         """
-        if driver not in ("batched", "sharded"):
-            raise ValueError(f"unknown sweep driver: {driver}")
-        if driver == "sharded" and mesh is None:
+        # one validation path for the (driver, resolve, chunks) triple —
+        # the executor raises the same errors for every entry point
+        plan = plan_for_driver(driver, resolve=resolve, mesh=mesh,
+                               chunks=chunks)
+        if chunks is not None and method != "parallel":
             raise ValueError(
-                "driver='sharded' needs mesh=SweepMeshSpec(...); see "
-                "repro.launch.mesh.SweepMeshSpec.for_devices")
+                "chunks= (event-chunked streaming) currently applies to "
+                "method='parallel' sweeps only; drop chunks= for "
+                f"method={method!r}.")
         warm_start = {True: "base", False: None}.get(warm_start, warm_start)
         if warm_start not in (None, "base", "per_scenario"):
             raise ValueError(
@@ -303,61 +321,26 @@ class CounterfactualEngine:
                 "(use 'per_scenario', 'base', or False)")
         gaps = iters = None
         if method == "parallel":
-            results = sweep_lib.sweep_parallel(self.values, grid.budgets,
-                                               grid.rules, resolve=resolve,
-                                               driver=driver, mesh=mesh)
+            # execute the plan built above — sweep_parallel would rebuild
+            # the identical one from the raw strings
+            s_hat, cap_times, _, _, _, _ = execute_sweep(
+                self.values, grid.budgets, grid.rules, plan)
+            results = SimResult(final_spend=s_hat, cap_times=cap_times,
+                                winners=None, prices=None, segments=None)
         elif method == "sort2aggregate":
-            if driver == "sharded":
-                import dataclasses as _dc
-
-                from repro.core import sharded as sharded_lib
-                from repro.core import vi as vi_lib
-                if record_events:
-                    raise ValueError(
-                        "record_events is not supported with "
-                        "driver='sharded': per-event winners/prices are an "
-                        "(S, N) gather off the mesh. Use driver='batched', "
-                        "or replay the scenarios of interest via "
-                        "sharded_aggregate.")
-                caps0 = None
-                if warm_start == "per_scenario":
-                    caps0 = self._per_scenario_warm_caps(grid, key)
-                elif warm_start == "base":
-                    # the single-device flow, kept on the mesh end-to-end:
-                    # Algorithm-4 pi for the base design (psum'd residuals),
-                    # refine the base once, seed every scenario from it
-                    base_rule, base_budgets = grid.scenario(base_index)
-                    pi = sharded_lib.estimate_pi_sharded(
-                        mesh.mesh, self.values, base_budgets, base_rule,
-                        key if key is not None else jax.random.PRNGKey(0),
-                        event_axes=mesh.event_axes)
-                    caps_pi = vi_lib.pi_to_cap_times(pi, self.n_events)
-                    base_mesh = _dc.replace(mesh, scenario_axis=None)
-                    base_res, _, _ = sharded_lib.sweep_sort2aggregate_sharded(
-                        self.values, base_budgets[None, :],
-                        sweep_lib.stack_rules([base_rule]), base_mesh,
-                        cap_times_init=caps_pi, refine_iters=refine_iters)
-                    caps0 = jnp.minimum(base_res.cap_times[0],
-                                        self.n_events + 1)
-                results, gaps, iters = \
-                    sharded_lib.sweep_sort2aggregate_sharded(
-                        self.values, grid.budgets, grid.rules, mesh,
-                        cap_times_init=caps0, refine_iters=refine_iters)
-            else:
-                caps0 = None
-                if warm_start == "per_scenario":
-                    caps0 = self._per_scenario_warm_caps(grid, key)
-                elif warm_start == "base":
-                    base_rule, base_budgets = grid.scenario(base_index)
-                    base = _sort2aggregate(
-                        self.values, base_budgets, base_rule,
-                        key if key is not None else jax.random.PRNGKey(0),
-                        refine_iters=refine_iters)
-                    caps0 = base.result.cap_times
-                results, gaps, iters = sweep_lib.sweep_sort2aggregate(
-                    self.values, grid.budgets, grid.rules,
-                    cap_times_init=caps0, refine_iters=refine_iters,
-                    record_events=record_events)
+            # fail fast (record_events×sharded, chunks) before paying for
+            # a warm start
+            check_s2a_options(plan, record_events)
+            caps0 = None
+            if warm_start == "per_scenario":
+                caps0 = self._per_scenario_warm_caps(grid, key)
+            elif warm_start == "base":
+                caps0 = self._base_warm_caps(grid, base_index, driver, mesh,
+                                             refine_iters, key)
+            results, gaps, iters = execute_s2a_sweep(
+                self.values, grid.budgets, grid.rules, plan,
+                cap_times_init=caps0, refine_iters=refine_iters,
+                record_events=record_events)
         elif method == "sequential":
             if driver == "sharded":
                 raise ValueError(
@@ -373,6 +356,32 @@ class CounterfactualEngine:
         return SweepResult(grid=grid, results=results,
                            n_events=self.n_events, base_index=base_index,
                            consistency_gaps=gaps, refine_iters=iters)
+
+    def _base_warm_caps(self, grid: ScenarioGrid, base_index: int,
+                        driver: str, mesh, refine_iters: int,
+                        key: Optional[jax.Array]) -> jax.Array:
+        """(C,) warm-start cap times from the base design (the paper's
+        previous-day trick), computed on the same placement as the sweep:
+        on the mesh the Algorithm-4 pi estimate (psum'd residuals) and the
+        base refine both run sharded end-to-end."""
+        base_rule, base_budgets = grid.scenario(base_index)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        if driver == "sharded":
+            from repro.core import sharded as sharded_lib
+            from repro.core import vi as vi_lib
+            pi = sharded_lib.estimate_pi_sharded(
+                mesh.mesh, self.values, base_budgets, base_rule, key,
+                event_axes=mesh.event_axes)
+            caps_pi = vi_lib.pi_to_cap_times(pi, self.n_events)
+            base_mesh = dataclasses.replace(mesh, scenario_axis=None)
+            base_res, _, _ = sharded_lib.sweep_sort2aggregate_sharded(
+                self.values, base_budgets[None, :],
+                sweep_lib.stack_rules([base_rule]), base_mesh,
+                cap_times_init=caps_pi, refine_iters=refine_iters)
+            return jnp.minimum(base_res.cap_times[0], self.n_events + 1)
+        base = _sort2aggregate(self.values, base_budgets, base_rule, key,
+                               refine_iters=refine_iters)
+        return base.result.cap_times
 
     def _per_scenario_warm_caps(self, grid: ScenarioGrid,
                                 key: Optional[jax.Array],

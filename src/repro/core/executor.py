@@ -1,0 +1,736 @@
+"""The unified sweep-executor layer: ONE Algorithm-2 program, many backends.
+
+PRs 1–4 grew four Algorithm-2 entry points — ``parallel_state_machine``
+(S=1), ``sweep_state_machine`` (scenario-batched), ``sweep_sharded``
+(mesh-batched) and the SORT2AGGREGATE sweeps — each carrying its own copy of
+the driver/resolve dispatch, its own validation, and its own while_loop
+scaffolding. This module collapses them: a :class:`SweepPlan` names every
+axis of the execution —
+
+* **placement** — where the loop runs: ``"device"`` (one unbatched lane),
+  ``"batched"`` (the S-lane loop on one device), ``"sharded"`` (the same
+  loop under ``shard_map`` on ``plan.mesh``);
+* **resolve** — the per-round back-end: ``"jnp"``, ``"pallas"``,
+  ``"fused"``, or ``"auto"`` (fused on TPU, jnp elsewhere — never an
+  interpret-mode Pallas kernel, see :func:`pick_resolve`);
+* **reduction grid** — every reduction goes through the canonical
+  ``(REDUCE_BLOCKS, C)`` block partials of :mod:`repro.core.segments`,
+  which is what makes every placement bit-for-bit equal;
+* **chunks** — optional event-chunked streaming (:class:`ChunkSpec`): each
+  round scans the event log in fixed chunks, accumulating the canonical
+  ``(S, 32, C)`` spend partials chunk-by-chunk via the same ``index_offset``
+  mechanism the mesh shards use, so only one chunk's per-event intermediates
+  are live at a time;
+* **skip_retired / block_t / interpret** — kernel knobs, unchanged.
+
+and :func:`execute_sweep` generates the program. The legacy entry points are
+thin wrappers that build a plan; a new axis (a placement, a back-end, a chunk
+schedule) is now a change HERE, not in five modules.
+
+Program shapes the plan can generate, all sharing :func:`_run_loop` (the
+while_loop scaffolding: alive-lane condition, frozen-lane select, round log)
+and the per-lane scalar logic (:func:`lane_predict` / :func:`lane_commit`):
+
+* **resolve-once** (jnp / pallas / fused-oracle-on-CPU, unchunked) — one
+  resolve of the local events per round; rate and block reductions are two
+  weighted partials of the same winners/prices (exactly the ``lane_round``
+  decomposition);
+* **one-launch fused round** (``resolve="fused"`` where Pallas compiles,
+  batched placement, unchunked) — the whole round is one ``round_fused``
+  kernel launch, winners/prices never reach HBM;
+* **two-pass** (sharded fused, and EVERY chunked plan) — one weighted
+  partials pass per reduction window (``[n_hat, N)`` then ``[n_hat,
+  n_next)``), each pass built from per-shard / per-chunk canonical partials
+  placed on the global grid via ``index_offset`` and combined by psum
+  (sharded) or chunk-scan accumulation (chunked). Because every canonical
+  block is owned by exactly one shard×chunk, combining adds exact zeros —
+  the partials tensor, and therefore ``final_spend``/``cap_times``, is
+  bit-for-bit identical to the in-memory drivers (docs/SCALING.md,
+  docs/ARCHITECTURE.md).
+
+Misaligned chunk sizes (chunks not holding whole canonical blocks, or not
+dividing the per-device event count) raise the same pad-or-error contract as
+misaligned meshes: :func:`check_chunks`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import axis_size as compat_axis_size, shard_map
+from repro.core import auction
+from repro.core import segments as seg_lib
+from repro.core.types import AuctionRule, never_capped
+from repro.kernels.auction_resolve import ops as resolve_ops
+from repro.launch.mesh import SweepMeshSpec
+
+RESOLVE_BACKENDS = ("jnp", "pallas", "fused")
+SWEEP_DRIVERS = ("batched", "sharded")
+SIM_DRIVERS = ("auto", "device", "host")
+PLACEMENTS = ("device", "batched", "sharded")
+
+
+def _unknown(kind: str, got, known) -> ValueError:
+    """THE unknown-option error: every entry point raises through here, so
+    the message for a bad ``driver=``/``resolve=`` string is identical
+    whether it comes from ``sweep.py``, ``counterfactual.py``,
+    ``sharded.py``, or a plan built directly."""
+    names = ", ".join(repr(k) for k in known)
+    return ValueError(f"unknown {kind}: {got!r} (choose from {names})")
+
+
+def pick_resolve(resolve: str, on_tpu: Optional[bool] = None) -> str:
+    """Resolve the ``"auto"`` preference to a concrete back-end.
+
+    ``"auto"`` picks the fused round kernel where Pallas compiles (TPU) and
+    the vmapped jnp path everywhere else. It must NEVER land on an
+    interpret-mode Pallas kernel: BENCH_sweep.json's sweep layer shows
+    interpret-mode pallas ~3–5× slower than the vmapped jnp path on CPU
+    (e.g. S=8: ~1.2 s vs ~0.24 s per sweep) — interpret mode is a
+    correctness harness, not a production path (regression-tested in
+    tests/test_scenario_sweep.py).
+    """
+    on_tpu = resolve_ops.ON_TPU if on_tpu is None else on_tpu
+    if resolve == "auto":
+        return "fused" if on_tpu else "jnp"
+    if resolve not in RESOLVE_BACKENDS:
+        raise _unknown("resolve back-end", resolve,
+                       RESOLVE_BACKENDS + ("auto",))
+    return resolve
+
+
+def fused_runs_kernel(interpret: Optional[bool]) -> bool:
+    """Whether ``resolve="fused"`` dispatches the Pallas round kernel.
+
+    True on TPU (compiled) or when interpret mode is explicitly forced
+    (kernel tests); otherwise the fused round runs its jnp oracle
+    composition (the exact ``lane_round`` stages) — never an *implicit*
+    interpret-mode kernel."""
+    return resolve_ops.ON_TPU or interpret is True
+
+
+def check_sim_driver(driver: str) -> str:
+    """Validate a single-scenario ``parallel_simulate`` driver string."""
+    if driver not in SIM_DRIVERS:
+        raise _unknown("driver", driver, SIM_DRIVERS)
+    return driver
+
+
+# ---------------------------------------------------------------------------
+# The plan: every axis of a sweep execution, hashable (jit-static)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChunkSpec:
+    """Event-chunked streaming: scan the log ``events_per_chunk`` at a time.
+
+    Each Algorithm-2 round becomes a ``lax.scan`` over fixed event chunks
+    that accumulates the canonical ``(S, REDUCE_BLOCKS, C)`` spend partials —
+    each chunk's rows placed on the *global* reduction grid via the kernels'
+    ``index_offset``, exactly as mesh shards place theirs — while the
+    carried burnout state ``(s_hat, active, cap_times, n_hat)`` stays O(S·C).
+    Per-event intermediates (winners, prices, spend one-hots) exist for one
+    chunk at a time, so the working set is O(events_per_chunk · C) instead
+    of O(N · C) and N can grow past what a resident (S, N) round would
+    allow. Results are bit-for-bit those of the in-memory drivers for any
+    aligned chunk size (chunks holding whole canonical blocks and dividing
+    the per-device event count — :func:`check_chunks`); misaligned sizes
+    raise the same pad-or-error contract as misaligned meshes.
+
+    Composes with every placement and resolve back-end: under
+    ``placement="sharded"`` each device scans its own shard's chunks before
+    the per-round psum (chunking × sharding), and ``resolve="fused"`` uses
+    the ``sweep_partials`` kernel per chunk where Pallas compiles.
+    """
+
+    events_per_chunk: int
+
+    def __post_init__(self):
+        if self.events_per_chunk < 1:
+            raise ValueError(
+                f"ChunkSpec.events_per_chunk must be >= 1, got "
+                f"{self.events_per_chunk}")
+
+
+def as_chunk_spec(chunks) -> Optional[ChunkSpec]:
+    """Normalise ``None`` | int | :class:`ChunkSpec` to an optional spec."""
+    if chunks is None or isinstance(chunks, ChunkSpec):
+        return chunks
+    return ChunkSpec(events_per_chunk=int(chunks))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    """Everything that decides which Algorithm-2 program gets generated.
+
+    Frozen + hashable so a plan rides through ``jax.jit`` as one static
+    argument. Fields:
+
+    * ``placement`` — ``"device"`` (one unbatched lane; the executor runs
+      the batched program at S=1 and unstacks), ``"batched"`` (default), or
+      ``"sharded"`` (requires ``mesh``);
+    * ``resolve`` — ``"jnp" | "pallas" | "fused" | "auto"``;
+    * ``block_t`` — Pallas event-tile size;
+    * ``interpret`` — force (True) / suppress (False) Pallas interpret mode;
+      ``None`` = interpret off-TPU, except ``"fused"`` which falls back to
+      its jnp oracle instead of interpreting;
+    * ``skip_retired`` — predicate retired lanes' kernel grid steps off
+      (pure wall-clock; results are bit-identical either way);
+    * ``mesh`` — :class:`repro.launch.mesh.SweepMeshSpec`, sharded only;
+    * ``chunks`` — optional :class:`ChunkSpec` for event-chunked streaming.
+    """
+
+    placement: str = "batched"
+    resolve: str = "auto"
+    block_t: int = 256
+    interpret: Optional[bool] = None
+    skip_retired: bool = True
+    mesh: Optional[SweepMeshSpec] = None
+    chunks: Optional[ChunkSpec] = None
+
+    def __post_init__(self):
+        if self.placement not in PLACEMENTS:
+            raise _unknown("placement", self.placement, PLACEMENTS)
+        if self.resolve not in RESOLVE_BACKENDS + ("auto",):
+            raise _unknown("resolve back-end", self.resolve,
+                           RESOLVE_BACKENDS + ("auto",))
+        if self.placement == "sharded" and self.mesh is None:
+            raise ValueError(
+                "placement='sharded' needs mesh=SweepMeshSpec(...); see "
+                "repro.launch.mesh.SweepMeshSpec.for_devices")
+        object.__setattr__(self, "chunks", as_chunk_spec(self.chunks))
+
+
+def plan_for_driver(driver: str, *, resolve: str = "auto",
+                    block_t: int = 256, interpret: Optional[bool] = None,
+                    skip_retired: bool = True, mesh=None,
+                    chunks=None) -> SweepPlan:
+    """Build the plan for a legacy ``driver=`` string (``sweep_parallel`` /
+    ``engine.sweep``), with the one consistent unknown-driver error."""
+    if driver not in SWEEP_DRIVERS:
+        raise _unknown("sweep driver", driver, SWEEP_DRIVERS)
+    if driver == "sharded" and mesh is None:
+        raise ValueError(
+            "driver='sharded' needs mesh=SweepMeshSpec(...); see "
+            "repro.launch.mesh.SweepMeshSpec.for_devices")
+    return SweepPlan(placement=driver, resolve=resolve, block_t=block_t,
+                     interpret=interpret, skip_retired=skip_retired,
+                     mesh=mesh if driver == "sharded" else None,
+                     chunks=as_chunk_spec(chunks))
+
+
+# ---------------------------------------------------------------------------
+# Shape / alignment validation (one home for every entry point's checks)
+# ---------------------------------------------------------------------------
+
+def check_batch_shapes(values, budgets, rules) -> None:
+    """The (S, C)-batch contract shared by every sweep entry point."""
+    if rules.multipliers.ndim != 2 or budgets.ndim != 2:
+        raise ValueError(
+            "sweep inputs must be batched: multipliers/budgets (S, C), "
+            f"got {rules.multipliers.shape} / {budgets.shape}")
+    n_campaigns = values.shape[1]
+    if budgets.shape[1] != n_campaigns or \
+            rules.multipliers.shape != budgets.shape:
+        raise ValueError(
+            f"scenario batch mismatch: values C={n_campaigns}, "
+            f"multipliers {rules.multipliers.shape}, budgets {budgets.shape}")
+
+
+def check_sharded_shapes(values, budgets, rules, spec,
+                         require_block_alignment=True) -> None:
+    """Static-shape validation + the shard contract.
+
+    ``require_block_alignment`` adds the canonical-reduction-grid alignment
+    needed for the sharded Algorithm-2 sweep's bit-for-bit guarantee; the
+    SORT2AGGREGATE sweep paths (plain psum'd spends, tolerance-checked) only
+    need evenly divisible shards.
+    """
+    check_batch_shapes(values, budgets, rules)
+    n_events = values.shape[0]
+    n_scenarios = budgets.shape[0]
+    d_ev = spec.event_device_count
+    if n_events % d_ev != 0:
+        raise ValueError(
+            f"ragged shard: N={n_events} events over {d_ev} event-axis "
+            f"devices leaves a remainder of {n_events % d_ev}. Pad the event "
+            "log to a multiple of the event-device count (zero-valuation "
+            "events never win, but they DO count toward rate denominators — "
+            "pad the log upstream where that is accounted for) or use "
+            "driver='batched'.")
+    block = seg_lib.reduce_block_size(n_events)
+    local_n = n_events // d_ev
+    if require_block_alignment and d_ev > 1 and local_n % block != 0:
+        if seg_lib.REDUCE_BLOCKS % d_ev != 0:
+            # no N can align: shards can never hold whole canonical blocks
+            raise ValueError(
+                f"shard/grid misalignment: {d_ev} event-axis devices cannot "
+                f"divide the canonical reduction grid (REDUCE_BLOCKS="
+                f"{seg_lib.REDUCE_BLOCKS}); the event-device count must "
+                "divide REDUCE_BLOCKS for the bit-for-bit contract. Use a "
+                "device count that divides it, raise "
+                "repro.core.segments.REDUCE_BLOCKS (a repo-wide constant — "
+                "it regroups every driver's reductions consistently, so the "
+                "cross-driver bit-for-bit contract is preserved but absolute "
+                "low bits shift), or use driver='batched'.")
+        g = seg_lib.REDUCE_BLOCKS
+        aligned_n = max(1, -(-n_events // g)) * g   # d_ev | g => d_ev | k*g
+        raise ValueError(
+            f"shard/grid misalignment: each shard holds {local_n} events but "
+            f"the canonical reduction grid uses blocks of {block} "
+            f"(REDUCE_BLOCKS={g}); shards must hold whole blocks for the "
+            f"bit-for-bit reduction contract. Pad N to a multiple of {g} "
+            f"(e.g. {aligned_n}), or use driver='batched'.")
+    d_sc = spec.scenario_device_count
+    if n_scenarios % d_sc != 0:
+        raise ValueError(
+            f"ragged scenario shard: S={n_scenarios} scenarios over {d_sc} "
+            f"devices on mesh axis {spec.scenario_axis!r}. Pad the grid with "
+            "repeats of the base design, or drop scenario_axis.")
+
+
+def check_chunks(chunks: Optional[ChunkSpec], *, n_events: int,
+                 local_n: int) -> None:
+    """The chunk-alignment contract (mirrors the mesh's pad-or-error).
+
+    A chunk must (a) hold whole canonical reduction blocks, so every block
+    of the ``(REDUCE_BLOCKS, C)`` partials grid is owned by exactly one
+    chunk and the chunk-scan accumulation adds exact zeros (the bit-for-bit
+    argument of docs/SCALING.md, verbatim), and (b) evenly divide the
+    per-device event count, so every scan step processes a full chunk.
+    """
+    if chunks is None:
+        return
+    epc = chunks.events_per_chunk
+    block = seg_lib.reduce_block_size(n_events)
+    g = seg_lib.REDUCE_BLOCKS
+    if epc % block != 0:
+        raise ValueError(
+            f"chunk/grid misalignment: ChunkSpec(events_per_chunk={epc}) "
+            f"does not hold whole canonical reduction blocks of {block} "
+            f"events (N={n_events}, REDUCE_BLOCKS={g}); chunks must cover "
+            "whole blocks for the bit-for-bit reduction contract. Use a "
+            f"chunk size that is a multiple of {block}, pad N so the block "
+            "size divides your chunk, or drop chunks=.")
+    if local_n % epc != 0:
+        raise ValueError(
+            f"ragged chunk: {local_n} events per device do not divide into "
+            f"chunks of {epc} (remainder {local_n % epc}). Pad the event "
+            "log so every chunk is full (zero-valuation events never win, "
+            "but they DO count toward rate denominators — pad the log "
+            "upstream where that is accounted for), pick a chunk size that "
+            "divides the per-device event count, or drop chunks=.")
+
+
+# One-launch fused-round VMEM budget: the kernel keeps TWO (S, G, C_pad)
+# float32 partials blocks + a (block_t, C_pad) values tile + ~6 (S, C_pad)
+# scenario-state blocks resident (docs/ALGORITHMS.md budget table: S=32
+# fits at C=1024, S=64 does not). Conservative against a 16 MiB VMEM so
+# padding/overheads don't push a "fits" plan over on real hardware.
+ONE_LAUNCH_VMEM_BYTES = 12 << 20
+
+
+def round_fused_fits(n_scenarios: int, n_campaigns: int,
+                     block_t: int = 256) -> bool:
+    """Whether the one-launch ``round_fused`` kernel's resident state fits
+    the VMEM budget. Past it the executor falls back to the two-pass shape
+    (one ``sweep_partials`` launch per reduction window — half the resident
+    partials), which produces the identical canonical partials tensor, so
+    the fallback cannot change results."""
+    c_pad = -(-n_campaigns // 128) * 128
+    resident = (2 * n_scenarios * seg_lib.REDUCE_BLOCKS * c_pad
+                + block_t * c_pad + 6 * n_scenarios * c_pad) * 4
+    return resident <= ONE_LAUNCH_VMEM_BYTES
+
+
+def global_event_offset(event_axes, local_n: int) -> jax.Array:
+    """Global index of this shard's first event (row-major over event axes;
+    call inside ``shard_map``)."""
+    idx = jnp.int32(0)
+    for ax in event_axes:
+        idx = idx * compat_axis_size(ax) + jax.lax.axis_index(ax)
+    return idx * local_n
+
+
+# ---------------------------------------------------------------------------
+# Per-lane scalar logic (the bit-for-bit contract between ALL placements)
+# ---------------------------------------------------------------------------
+
+def lane_predict(rates, b, s_hat, active, n_hat, *, n_events):
+    """Scalar half 1 of an Algorithm-2 round: from the current remaining-rate
+    estimate, predict which campaign caps out next and where its block ends.
+
+    Returns ``(c_next, no_cap, n_next)``; pure per-lane O(C) arithmetic, no
+    event-log access — every placement runs it verbatim between its two
+    reductions.
+    """
+    ttl = jnp.where(active & (rates > 0), (b - s_hat) / rates,
+                    jnp.float32(jnp.inf))
+    ttl = jnp.where(ttl < 0, jnp.float32(0.0), ttl)  # past budget -> retire
+    c_next = jnp.argmin(ttl).astype(jnp.int32)
+    no_cap = jnp.isinf(ttl[c_next])
+    # floor(ttl) clamped to N before the int cast (inf/huge-safe); with
+    # step <= N this equals the host's min(n_hat + floor(ttl), N).
+    step = jnp.minimum(jnp.floor(ttl[c_next]),
+                       jnp.float32(n_events)).astype(jnp.int32)
+    n_next = jnp.where(no_cap, jnp.int32(n_events),
+                       jnp.minimum(n_hat + step, n_events))
+    return c_next, no_cap, n_next
+
+
+def lane_commit(blk, c_next, no_cap, n_next, s_hat, active, cap, rnd,
+                retired, bnds, *, sentinel):
+    """Scalar half 2 of an Algorithm-2 round: apply the exact block spends,
+    retire the predicted campaign, log the round. Pure per-lane arithmetic."""
+    s_hat = s_hat + blk
+    cap = jnp.where(no_cap, cap,
+                    cap.at[c_next].set(jnp.minimum(n_next + 1, sentinel)))
+    active = jnp.where(no_cap, active, active.at[c_next].set(False))
+    retired = retired.at[rnd].set(jnp.where(no_cap, -1, c_next))
+    bnds = bnds.at[rnd + 1].set(n_next)
+    return (s_hat, active, cap, n_next, rnd + 1, retired, bnds)
+
+
+def lane_round(winners, prices, b, s_hat, active, cap, n_hat, rnd, retired,
+               bnds, *, n_events, n_campaigns, sentinel):
+    """One Algorithm-2 round for a single lane, given the round's resolved
+    (winners, prices): predict the next cap-out from the remaining-rate,
+    replay the block up to it, retire the campaign, log the round.
+
+    This is the reference decomposition every executor program realises:
+    resolve → canonical rate partials → :func:`lane_predict` → canonical
+    block partials → :func:`lane_commit`. The executor's resolve-once round
+    body is exactly these stages (same primitives, same order), its fused
+    and chunked bodies replace only *where* the two partials tensors are
+    produced (one kernel launch / per-chunk scans / per-shard psums) — the
+    tensors themselves, and hence every downstream bit, are identical.
+    """
+    rates = seg_lib.rate_from_events(winners, prices, n_campaigns, n_hat)
+    c_next, no_cap, n_next = lane_predict(rates, b, s_hat, active, n_hat,
+                                          n_events=n_events)
+    blk = seg_lib.block_from_events(winners, prices, n_campaigns, n_hat,
+                                    n_next)
+    return lane_commit(blk, c_next, no_cap, n_next, s_hat, active, cap,
+                       rnd, retired, bnds, sentinel=sentinel)
+
+
+# ---------------------------------------------------------------------------
+# The one round body + the one while_loop
+# ---------------------------------------------------------------------------
+
+def _make_round_body(plan: SweepPlan, resolve: str, *, values_local,
+                     rules_local, budgets_f32, n_events: int,
+                     n_campaigns: int, offset_fn, psum, use_interpret: bool):
+    """Build the per-round body for any (placement, resolve, chunks) cell.
+
+    ``values_local`` is this device's event rows, ``offset_fn()`` the global
+    index of its first row (0 off-mesh), ``psum`` the cross-device combiner
+    (identity off-mesh). The returned ``round_body(core, keep)`` maps the
+    carried Algorithm-2 state to the next round's state via
+    :func:`lane_commit`; the loop scaffolding freezes finished lanes.
+    """
+    sentinel = jnp.int32(never_capped(n_events))
+    lane_pred = functools.partial(lane_predict, n_events=n_events)
+    lane_comm = functools.partial(lane_commit, sentinel=sentinel)
+    second = rules_local.kind == "second_price"
+    block = seg_lib.reduce_block_size(n_events)
+    local_n = values_local.shape[0]
+    b = budgets_f32
+    chunks = plan.chunks
+    fused_kernel = resolve == "fused" and fused_runs_kernel(plan.interpret)
+    one_launch = fused_kernel and plan.placement != "sharded" \
+        and chunks is None \
+        and round_fused_fits(budgets_f32.shape[0], n_campaigns,
+                             plan.block_t)
+    two_pass = chunks is not None or (fused_kernel and not one_launch)
+
+    def resolve_all(v, active):
+        """(S_local, T) winners/prices of the rows in ``v`` — purely local,
+        no collectives (the auction is per-event)."""
+        if resolve == "pallas":
+            winners, prices, _ = resolve_ops.sweep_resolve(
+                v, rules_local.multipliers, active, rules_local.reserve,
+                second_price=second, block_t=plan.block_t,
+                interpret=use_interpret)
+            return winners, prices
+        return jax.vmap(lambda a, r: auction.resolve(v, a, r),
+                        in_axes=(0, 0))(active, rules_local)
+
+    def weighted_partials(winners, prices, lo, hi, offset):
+        """(S_l, G, C) canonical partials of events in global ``[lo, hi)``,
+        rows placed on the global grid via ``offset`` (NOT yet psum'd)."""
+        gidx = offset + jnp.arange(winners.shape[-1], dtype=jnp.int32)
+
+        def one(w, p, lo_s, hi_s):
+            weight = ((gidx >= lo_s) & (gidx < hi_s)).astype(p.dtype)
+            return seg_lib.partial_spend_sums(
+                w, p, n_campaigns, weight, block_size=block,
+                index_offset=offset)
+
+        return jax.vmap(one)(winners, prices, lo, hi)
+
+    def kernel_partials(v, active, keep, lo, hi, offset):
+        """One fused resolve+reduce kernel pass over ``v`` (NOT psum'd)."""
+        return resolve_ops.sweep_partials(
+            v, rules_local.multipliers, active, rules_local.reserve,
+            lo, hi, keep, offset, n_events_global=n_events,
+            reduce_blocks=seg_lib.REDUCE_BLOCKS, second_price=second,
+            skip_retired=plan.skip_retired, block_t=plan.block_t,
+            interpret=use_interpret)
+
+    def window_partials(active, keep, lo, hi):
+        """The two-pass reduction: psum'd (S_l, G, C) partials of the global
+        window [lo, hi) — whole-shard kernel pass, or a chunk scan."""
+        offset = offset_fn()
+        if chunks is None:
+            return psum(kernel_partials(values_local, active, keep, lo, hi,
+                                        offset))
+        epc = chunks.events_per_chunk
+        n_chunks = local_n // epc
+        v_chunks = values_local.reshape(n_chunks, epc,
+                                        values_local.shape[1])
+
+        def step(acc, xs):
+            v_k, k = xs
+            off_k = offset + k * epc
+            if fused_kernel:
+                parts_k = kernel_partials(v_k, active, keep, lo, hi, off_k)
+            else:
+                winners, prices = resolve_all(v_k, active)
+                parts_k = weighted_partials(winners, prices, lo, hi, off_k)
+            # every canonical block is owned by exactly one chunk, so this
+            # accumulation only ever adds exact zeros to a block's partial —
+            # the chunk-scan analogue of the mesh psum's exactness
+            return acc + parts_k, None
+
+        acc0 = jnp.zeros((active.shape[0], seg_lib.REDUCE_BLOCKS,
+                          n_campaigns), jnp.float32)
+        parts, _ = jax.lax.scan(
+            step, acc0, (v_chunks, jnp.arange(n_chunks, dtype=jnp.int32)))
+        return psum(parts)
+
+    def rate_of(parts_s, nh):
+        sums = parts_s.sum(axis=0)
+        denom = jnp.maximum(n_events - nh, 1).astype(sums.dtype)
+        return sums / denom
+
+    def round_body(core, keep):
+        s_hat, active, cap, n_hat, rnd, retired, bnds = core
+        if one_launch:
+            # resolve + rate partials + in-kernel prediction + block
+            # partials in ONE launch; winners/prices never reach HBM
+            _, block_parts, c_next, no_cap, n_next = resolve_ops.round_fused(
+                values_local, rules_local.multipliers, active,
+                rules_local.reserve, b, s_hat, n_hat, keep,
+                reduce_blocks=seg_lib.REDUCE_BLOCKS, second_price=second,
+                skip_retired=plan.skip_retired, block_t=plan.block_t,
+                interpret=use_interpret)
+            blk = block_parts.sum(axis=1)
+        else:
+            hi_all = jnp.full_like(n_hat, n_events)
+            if two_pass:
+                rate_parts = window_partials(active, keep, n_hat, hi_all)
+            else:
+                winners, prices = resolve_all(values_local, active)
+                rate_parts = psum(weighted_partials(winners, prices, n_hat,
+                                                    hi_all, offset_fn()))
+            rates = jax.vmap(rate_of)(rate_parts, n_hat)
+            c_next, no_cap, n_next = jax.vmap(lane_pred)(rates, b, s_hat,
+                                                         active, n_hat)
+            if two_pass:
+                block_parts = window_partials(active, keep, n_hat, n_next)
+            else:
+                block_parts = psum(weighted_partials(winners, prices, n_hat,
+                                                     n_next, offset_fn()))
+            blk = block_parts.sum(axis=1)
+        return jax.vmap(lane_comm)(blk, c_next, no_cap, n_next, s_hat,
+                                   active, cap, rnd, retired, bnds)
+
+    return round_body
+
+
+def _run_loop(round_body, *, s_local: int, n_events: int, n_campaigns: int,
+              scenario_axis=None):
+    """The one while_loop every placement shares: run rounds until every
+    lane (everywhere) has retired its last cap-out, freezing finished lanes
+    by select. Returns the carried core state."""
+    sentinel = jnp.int32(never_capped(n_events))
+
+    def alive(core):
+        _, active, _, n_hat, rnd, _, _ = core
+        return (rnd < n_campaigns + 1) & (n_hat < n_events) & active.any(-1)
+
+    def global_any(flags):
+        # with a meshed scenario axis the loop must run until the LAST
+        # slice retires its last cap-out (same trip count everywhere so
+        # the event-axis psums stay aligned); event-axis devices already
+        # agree (replicated state), so only the scenario axis reduces.
+        local = jnp.any(flags)
+        if scenario_axis is None:
+            return local
+        return jax.lax.psum(local.astype(jnp.int32), scenario_axis) > 0
+
+    def body(st):
+        core, _ = st
+        keep = alive(core)
+        new = round_body(core, keep)
+        merged = jax.tree.map(
+            lambda n, o: jnp.where(
+                keep.reshape(keep.shape + (1,) * (n.ndim - 1)), n, o),
+            new, core)
+        return merged, global_any(alive(merged))
+
+    init_core = (
+        jnp.zeros((s_local, n_campaigns), jnp.float32),
+        jnp.ones((s_local, n_campaigns), bool),
+        jnp.full((s_local, n_campaigns), sentinel, jnp.int32),
+        jnp.zeros((s_local,), jnp.int32),
+        jnp.zeros((s_local,), jnp.int32),
+        jnp.full((s_local, n_campaigns + 1), -1, jnp.int32),
+        jnp.zeros((s_local, n_campaigns + 2), jnp.int32),
+    )
+    core, _ = jax.lax.while_loop(
+        lambda st: st[1], body, (init_core, global_any(alive(init_core))))
+    return core
+
+
+# ---------------------------------------------------------------------------
+# The placements: batched (one device) and sharded (shard_map)
+# ---------------------------------------------------------------------------
+
+def _unpack(core):
+    s_hat, active, cap, n_hat, rnd, retired, bnds = core
+    return s_hat, cap, retired, bnds, rnd, n_hat
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _sweep_batched(values, budgets, rules, plan: SweepPlan):
+    """The scenario-batched Algorithm-2 loop on one device."""
+    check_batch_shapes(values, budgets, rules)
+    resolve = pick_resolve(plan.resolve)
+    n_events, n_campaigns = values.shape
+    check_chunks(plan.chunks, n_events=n_events, local_n=n_events)
+    use_interpret = (plan.interpret if plan.interpret is not None
+                     else not resolve_ops.ON_TPU)
+    round_body = _make_round_body(
+        plan, resolve, values_local=values, rules_local=rules,
+        budgets_f32=budgets.astype(jnp.float32), n_events=n_events,
+        n_campaigns=n_campaigns, offset_fn=lambda: 0, psum=lambda x: x,
+        use_interpret=use_interpret)
+    core = _run_loop(round_body, s_local=budgets.shape[0],
+                     n_events=n_events, n_campaigns=n_campaigns)
+    return _unpack(core)
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _sweep_sharded(values, budgets, rules, plan: SweepPlan):
+    """The same loop under ``shard_map`` on ``plan.mesh``: events sharded
+    over ``spec.event_axes``, scenarios vmapped per device or sharded over
+    ``spec.scenario_axis``; two psums per round (one per reduction)."""
+    spec = plan.mesh
+    check_sharded_shapes(values, budgets, rules, spec)
+    resolve = pick_resolve(plan.resolve)
+    n_events, n_campaigns = values.shape
+    local_n = n_events // spec.event_device_count
+    check_chunks(plan.chunks, n_events=n_events, local_n=local_n)
+    use_interpret = (plan.interpret if plan.interpret is not None
+                     else not resolve_ops.ON_TPU)
+    axes = tuple(spec.event_axes)
+    sc = spec.scenario_axis
+
+    spec_vals = P(axes, None)
+    spec_sc2 = P(sc, None)        # (S, ...) arrays; sc=None -> replicated
+    spec_sc1 = P(sc)
+
+    @functools.partial(
+        shard_map, mesh=spec.mesh,
+        in_specs=(spec_vals, spec_sc2, spec_sc2, spec_sc1),
+        out_specs=(spec_sc2, spec_sc2, spec_sc2, spec_sc2, spec_sc1,
+                   spec_sc1))
+    def _driver(values_local, b_local, mult_local, res_local):
+        rules_local = AuctionRule(multipliers=mult_local, reserve=res_local,
+                                  kind=rules.kind)
+        round_body = _make_round_body(
+            plan, resolve, values_local=values_local,
+            rules_local=rules_local,
+            budgets_f32=b_local.astype(jnp.float32), n_events=n_events,
+            n_campaigns=n_campaigns,
+            offset_fn=lambda: global_event_offset(axes, local_n),
+            psum=lambda x: jax.lax.psum(x, axes),
+            use_interpret=use_interpret)
+        core = _run_loop(round_body, s_local=b_local.shape[0],
+                         n_events=n_events, n_campaigns=n_campaigns,
+                         scenario_axis=sc)
+        return _unpack(core)
+
+    return _driver(values, budgets, rules.multipliers,
+                   jnp.asarray(rules.reserve, jnp.float32))
+
+
+def execute_sweep(values, budgets, rules, plan: SweepPlan):
+    """Run the Algorithm-2 sweep program described by ``plan``.
+
+    ``placement="batched"``/``"sharded"`` take batched inputs (budgets
+    (S, C), stacked rules) and return the batched tuple ``(s_hat (S, C),
+    cap_times (S, C), retired (S, C+1), boundaries (S, C+2), num_rounds
+    (S,), n_hat (S,))``; ``placement="device"`` takes ONE scenario
+    (budgets (C,), unstacked rule) and returns the unbatched tuple.
+    """
+    if plan.placement == "sharded":
+        return _sweep_sharded(values, budgets, rules, plan)
+    if plan.placement == "device":
+        rules_b = AuctionRule(
+            multipliers=rules.multipliers[None, :],
+            reserve=jnp.asarray(rules.reserve, jnp.float32)[None],
+            kind=rules.kind)
+        out = _sweep_batched(values, budgets[None, :], rules_b,
+                             dataclasses.replace(plan, placement="batched"))
+        return tuple(x[0] for x in out)
+    return _sweep_batched(values, budgets, rules, plan)
+
+
+def check_s2a_options(plan: SweepPlan, record_events: bool = False) -> None:
+    """Validate the SORT2AGGREGATE sweep's plan (callable up front, so an
+    engine can fail fast before paying for a warm start)."""
+    if plan.chunks is not None:
+        raise ValueError(
+            "chunks= (event-chunked streaming) currently applies to "
+            "method='parallel' sweeps only; drop chunks= for the "
+            "sort2aggregate sweep.")
+    if plan.placement == "sharded" and record_events:
+        raise ValueError(
+            "record_events is not supported with driver='sharded': "
+            "per-event winners/prices are an (S, N) gather off the "
+            "mesh. Use driver='batched', or replay the scenarios of "
+            "interest via sharded_aggregate.")
+
+
+def execute_s2a_sweep(values, budgets, rules, plan: SweepPlan, *,
+                      cap_times_init=None, refine_iters: int = 8,
+                      record_events: bool = False):
+    """Dispatch the SORT2AGGREGATE scenario sweep to ``plan.placement``.
+
+    Returns ``(SimResult, consistency_gaps, refine_iters_used)`` from
+    :func:`repro.core.sweep.sweep_sort2aggregate` (batched) or
+    :func:`repro.core.sharded.sweep_sort2aggregate_sharded` (sharded) — the
+    executor owns the placement dispatch and its validation
+    (:func:`check_s2a_options`), the estimator modules own the algorithm.
+    (Chunked streaming applies to the Algorithm-2 ``method="parallel"``
+    sweep; a chunked refine/aggregate pass would need the same two-pass
+    treatment of ``first_crossing`` — rejected until built.)
+    """
+    check_s2a_options(plan, record_events)
+    if plan.placement == "sharded":
+        from repro.core.sharded import sweep_sort2aggregate_sharded
+        return sweep_sort2aggregate_sharded(
+            values, budgets, rules, plan.mesh,
+            cap_times_init=cap_times_init, refine_iters=refine_iters)
+    from repro.core.sweep import sweep_sort2aggregate
+    return sweep_sort2aggregate(
+        values, budgets, rules, cap_times_init=cap_times_init,
+        refine_iters=refine_iters, record_events=record_events)

@@ -30,6 +30,14 @@ Two drivers implement the same loop:
 Both drivers do float32 arithmetic in the same order, so their
 ``final_spend``/``cap_times`` agree bit-for-bit (asserted by
 ``tests/test_scenario_sweep.py``).
+
+The device driver is the ``placement="device"`` cell of the unified
+executor layer (:mod:`repro.core.executor`, docs/ARCHITECTURE.md):
+:func:`parallel_state_machine` is a thin wrapper that runs the executor's
+batched Algorithm-2 program on a single lane. The per-lane scalar logic
+(``lane_predict`` / ``lane_commit`` / ``lane_round``) and the
+driver/resolve validation (``pick_resolve`` / ``fused_runs_kernel``) live
+in the executor and are re-exported here for compatibility.
 """
 from __future__ import annotations
 
@@ -41,41 +49,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import auction
 from repro.core import segments as seg_lib
+from repro.core.executor import (RESOLVE_BACKENDS, SweepPlan,  # noqa: F401
+                                 check_sim_driver, execute_sweep,
+                                 fused_runs_kernel, lane_commit,
+                                 lane_predict, lane_round, pick_resolve)
 from repro.core.types import AuctionRule, Segments, SimResult, never_capped
-from repro.kernels.auction_resolve import ops as resolve_ops
-
-RESOLVE_BACKENDS = ("jnp", "pallas", "fused")
-
-
-def pick_resolve(resolve: str, on_tpu: Optional[bool] = None) -> str:
-    """Resolve the ``"auto"`` preference to a concrete back-end.
-
-    ``"auto"`` picks the fused round kernel where Pallas compiles (TPU) and
-    the vmapped jnp path everywhere else. It must NEVER land on an
-    interpret-mode Pallas kernel: BENCH_sweep.json's sweep layer shows
-    interpret-mode pallas ~3–5× slower than the vmapped jnp path on CPU
-    (e.g. S=8: ~1.2 s vs ~0.24 s per sweep) — interpret mode is a
-    correctness harness, not a production path (regression-tested in
-    tests/test_scenario_sweep.py).
-    """
-    on_tpu = resolve_ops.ON_TPU if on_tpu is None else on_tpu
-    if resolve == "auto":
-        return "fused" if on_tpu else "jnp"
-    if resolve not in RESOLVE_BACKENDS:
-        raise ValueError(f"unknown resolve back-end: {resolve}")
-    return resolve
-
-
-def fused_runs_kernel(interpret: Optional[bool]) -> bool:
-    """Whether ``resolve="fused"`` dispatches the Pallas round kernel.
-
-    True on TPU (compiled) or when interpret mode is explicitly forced
-    (kernel tests); otherwise the fused round runs its jnp oracle
-    composition (the exact ``lane_round`` stages) — never an *implicit*
-    interpret-mode kernel."""
-    return resolve_ops.ON_TPU or interpret is True
 
 
 @dataclasses.dataclass
@@ -109,6 +88,7 @@ def parallel_simulate(
     kernel — one launch per round, winners/prices never reach HBM), or
     ``"auto"`` (fused on TPU, jnp elsewhere — never interpret-mode Pallas).
     """
+    check_sim_driver(driver)
     if driver == "auto":
         driver = "host" if (rate_fn is not None or block_fn is not None) \
             else "device"
@@ -118,8 +98,6 @@ def parallel_simulate(
         return _simulate_device(values, budgets, rule, resolve=resolve,
                                 record_events=record_events,
                                 return_trace=return_trace)
-    if driver != "host":
-        raise ValueError(f"unknown driver: {driver}")
     return _simulate_host(values, budgets, rule, rate_fn=rate_fn,
                           block_fn=block_fn, record_events=record_events,
                           return_trace=return_trace)
@@ -205,68 +183,8 @@ def _simulate_host(values, budgets, rule, *, rate_fn, block_fn,
 
 
 # --------------------------------------------------------------------------
-# Device-resident driver: the loop is a single jitted lax.while_loop
+# Device-resident driver: the executor's batched loop on a single lane
 # --------------------------------------------------------------------------
-
-def lane_predict(rates, b, s_hat, active, n_hat, *, n_events):
-    """Scalar half 1 of an Algorithm-2 round: from the current remaining-rate
-    estimate, predict which campaign caps out next and where its block ends.
-
-    Returns ``(c_next, no_cap, n_next)``; pure per-lane O(C) arithmetic, no
-    event-log access — the sharded driver runs it verbatim between its two
-    cross-device reductions.
-    """
-    ttl = jnp.where(active & (rates > 0), (b - s_hat) / rates,
-                    jnp.float32(jnp.inf))
-    ttl = jnp.where(ttl < 0, jnp.float32(0.0), ttl)  # past budget -> retire
-    c_next = jnp.argmin(ttl).astype(jnp.int32)
-    no_cap = jnp.isinf(ttl[c_next])
-    # floor(ttl) clamped to N before the int cast (inf/huge-safe); with
-    # step <= N this equals the host's min(n_hat + floor(ttl), N).
-    step = jnp.minimum(jnp.floor(ttl[c_next]),
-                       jnp.float32(n_events)).astype(jnp.int32)
-    n_next = jnp.where(no_cap, jnp.int32(n_events),
-                       jnp.minimum(n_hat + step, n_events))
-    return c_next, no_cap, n_next
-
-
-def lane_commit(blk, c_next, no_cap, n_next, s_hat, active, cap, rnd,
-                retired, bnds, *, sentinel):
-    """Scalar half 2 of an Algorithm-2 round: apply the exact block spends,
-    retire the predicted campaign, log the round. Pure per-lane arithmetic."""
-    s_hat = s_hat + blk
-    cap = jnp.where(no_cap, cap,
-                    cap.at[c_next].set(jnp.minimum(n_next + 1, sentinel)))
-    active = jnp.where(no_cap, active, active.at[c_next].set(False))
-    retired = retired.at[rnd].set(jnp.where(no_cap, -1, c_next))
-    bnds = bnds.at[rnd + 1].set(n_next)
-    return (s_hat, active, cap, n_next, rnd + 1, retired, bnds)
-
-
-def lane_round(winners, prices, b, s_hat, active, cap, n_hat, rnd, retired,
-               bnds, *, n_events, n_campaigns, sentinel):
-    """One Algorithm-2 round for a single lane, given the round's resolved
-    (winners, prices): predict the next cap-out from the remaining-rate,
-    replay the block up to it, retire the campaign, log the round.
-
-    This single definition IS the bit-for-bit contract between the unbatched
-    device driver (:func:`parallel_state_machine`) and the scenario-batched
-    sweep loop (:func:`repro.core.sweep.sweep_state_machine`, which ``vmap``s
-    it per lane) — both call it, so their arithmetic cannot drift apart. The
-    mesh driver (:func:`repro.core.sharded.sweep_sharded`) splits it at the
-    two reductions — :func:`lane_predict` and :func:`lane_commit` carry the
-    scalar logic; the reductions go through the same canonical blocked
-    partials (:func:`repro.core.segments.partial_spend_sums`), psum'd — so
-    the contract extends bit-for-bit across mesh shapes.
-    """
-    rates = seg_lib.rate_from_events(winners, prices, n_campaigns, n_hat)
-    c_next, no_cap, n_next = lane_predict(rates, b, s_hat, active, n_hat,
-                                          n_events=n_events)
-    blk = seg_lib.block_from_events(winners, prices, n_campaigns, n_hat,
-                                    n_next)
-    return lane_commit(blk, c_next, no_cap, n_next, s_hat, active, cap,
-                       rnd, retired, bnds, sentinel=sentinel)
-
 
 @functools.partial(jax.jit,
                    static_argnames=("resolve", "block_t", "interpret"))
@@ -290,79 +208,26 @@ def parallel_state_machine(
     everyone-survives round), ``boundaries[j+1]`` the block end of round
     ``j`` — enough to rebuild the exact segment history on the host.
 
-    ``vmap`` over ``(budgets, rule)`` evaluates a scenario batch over one
-    shared event log (the batched condition keeps looping until every
-    scenario has retired its last cap-out) — but prefer
-    :func:`repro.core.sweep.sweep_state_machine`, which additionally batches
-    the per-round resolve into one kernel call.
+    This is the ``placement="device"`` cell of the executor layer
+    (:mod:`repro.core.executor`): the batched Algorithm-2 program run on a
+    single scenario lane, unstacked — so its arithmetic is *the same
+    program* as the scenario sweep's, not a parallel implementation kept in
+    sync. For a scenario batch call
+    :func:`repro.core.sweep.sweep_state_machine` (or build a
+    :class:`~repro.core.executor.SweepPlan` directly).
 
     ``resolve="pallas"`` swaps the per-round resolve for the S=1 case of the
     ``sweep_resolve`` Pallas kernel (winners/prices bit-identical to the jnp
     resolve; ``interpret=None`` means interpret mode off TPU);
     ``resolve="fused"`` runs the whole round as the S=1 case of the
     ``round_fused`` kernel where Pallas compiles — and IS the ``"jnp"`` body
-    elsewhere (``lane_round`` already fuses resolve and both reductions into
-    one jitted round; the kernel's job is keeping the per-event intermediates
-    out of HBM, which XLA on CPU does anyway). ``vmap`` only composes with
-    the default ``"jnp"`` back-end.
+    elsewhere (the resolve-once round body already fuses resolve and both
+    reductions into one jitted round; the kernel's job is keeping the
+    per-event intermediates out of HBM, which XLA on CPU does anyway).
     """
-    n_events, n_campaigns = values.shape
-    sentinel = jnp.int32(never_capped(n_events))
-    b = budgets.astype(jnp.float32)
-    resolve = pick_resolve(resolve)
-
-    def _resolve(active):
-        if resolve != "pallas":    # "jnp", or "fused" falling back to it
-            return auction.resolve(values, active, rule)
-        winners, prices, _ = resolve_ops.sweep_resolve(
-            values, rule.multipliers[None, :], active[None, :],
-            jnp.asarray(rule.reserve, jnp.float32)[None],
-            second_price=(rule.kind == "second_price"), block_t=block_t,
-            interpret=(interpret if interpret is not None
-                       else not resolve_ops.ON_TPU))
-        return winners[0], prices[0]
-
-    def cond(st):
-        s_hat, active, cap, n_hat, rnd, retired, bnds = st
-        return (rnd < n_campaigns + 1) & (n_hat < n_events) & active.any()
-
-    def _fused_body(st):
-        # the S=1 slice of the fused round kernel: resolve + canonical
-        # partials + prediction in one launch, then the shared lane_commit
-        s_hat, active, cap, n_hat, rnd, retired, bnds = st
-        _, block_parts, c_next, no_cap, n_next = resolve_ops.round_fused(
-            values, rule.multipliers[None, :], active[None, :],
-            jnp.asarray(rule.reserve, jnp.float32)[None], b[None, :],
-            s_hat[None, :], n_hat[None], jnp.ones((1,), bool),
-            reduce_blocks=seg_lib.REDUCE_BLOCKS,
-            second_price=(rule.kind == "second_price"),
-            interpret=(interpret if interpret is not None
-                       else not resolve_ops.ON_TPU), block_t=block_t)
-        return lane_commit(block_parts.sum(axis=1)[0], c_next[0], no_cap[0],
-                           n_next[0], s_hat, active, cap, rnd, retired,
-                           bnds, sentinel=sentinel)
-
-    def body(st):
-        if resolve == "fused" and fused_runs_kernel(interpret):
-            return _fused_body(st)
-        s_hat, active, cap, n_hat, rnd, retired, bnds = st
-        winners, prices = _resolve(active)
-        return lane_round(winners, prices, b, s_hat, active, cap, n_hat,
-                          rnd, retired, bnds, n_events=n_events,
-                          n_campaigns=n_campaigns, sentinel=sentinel)
-
-    init = (
-        jnp.zeros((n_campaigns,), jnp.float32),
-        jnp.ones((n_campaigns,), bool),
-        jnp.full((n_campaigns,), sentinel, jnp.int32),
-        jnp.int32(0),
-        jnp.int32(0),
-        jnp.full((n_campaigns + 1,), -1, jnp.int32),
-        jnp.zeros((n_campaigns + 2,), jnp.int32),
-    )
-    s_hat, active, cap, n_hat, rnd, retired, bnds = \
-        jax.lax.while_loop(cond, body, init)
-    return s_hat, cap, retired, bnds, rnd, n_hat
+    plan = SweepPlan(placement="device", resolve=resolve, block_t=block_t,
+                     interpret=interpret)
+    return execute_sweep(values, budgets, rule, plan)
 
 
 def _simulate_device(values, budgets, rule, *, record_events, return_trace,

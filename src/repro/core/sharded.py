@@ -8,10 +8,15 @@ replaced by ``psum`` over the event axes:
 
 * :func:`make_sharded_kernels` — map + all-reduce closures for the
   single-scenario Algorithm-2 host driver;
-* :func:`sweep_sharded` + :func:`make_sharded_sweep_kernels` — the
-  mesh-batched scenario sweep: the whole batched Algorithm-2 ``while_loop``
-  runs under ``shard_map``, events sharded, scenarios vmapped per device or
-  sharded along a second mesh axis (:class:`repro.launch.mesh.SweepMeshSpec`);
+* :func:`sweep_sharded` — the mesh-batched scenario sweep: the whole batched
+  Algorithm-2 ``while_loop`` runs under ``shard_map``, events sharded,
+  scenarios vmapped per device or sharded along a second mesh axis
+  (:class:`repro.launch.mesh.SweepMeshSpec`). It is a thin wrapper over the
+  unified executor layer (``placement="sharded"`` of
+  :mod:`repro.core.executor`, which builds the per-round resolve+reduce
+  closures for every placement from one round body — see
+  docs/ARCHITECTURE.md), and composes with event-chunked streaming
+  (``chunks=``: each device scans its shard in fixed chunks per round);
 * :func:`sharded_aggregate` — SORT2AGGREGATE Step 3 (one pass, one psum);
 * :func:`sharded_first_crossing` / :func:`sweep_first_crossing_sharded` —
   two-pass distributed prefix: per-device partial sums are all-gathered
@@ -51,10 +56,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import axis_size as compat_axis_size, shard_map
 from repro.core import auction
 from repro.core import segments as seg_lib
-from repro.core.parallel import (fused_runs_kernel, lane_commit,
-                                 lane_predict, pick_resolve)
+from repro.core.executor import (SweepPlan, as_chunk_spec,
+                                 check_sharded_shapes as _check_sweep_shapes,
+                                 execute_sweep,
+                                 global_event_offset as _global_offset)
 from repro.core.types import AuctionRule, Segments, SimResult, never_capped
-from repro.kernels.auction_resolve import ops as resolve_ops
 from repro.launch.mesh import SweepMeshSpec
 
 
@@ -69,14 +75,6 @@ def shard_events(values: jax.Array, mesh: Mesh,
     """Place (N, C) values with events sharded, campaigns replicated."""
     return jax.device_put(
         values, NamedSharding(mesh, P(tuple(event_axes), None)))
-
-
-def _global_offset(event_axes: Sequence[str], local_n: int) -> jax.Array:
-    """Global index of this shard's first event (row-major over event axes)."""
-    idx = jnp.int32(0)
-    for ax in event_axes:
-        idx = idx * compat_axis_size(ax) + jax.lax.axis_index(ax)
-    return idx * local_n
 
 
 def make_sharded_kernels(mesh: Mesh, rule: AuctionRule,
@@ -316,186 +314,6 @@ def estimate_pi_sharded(
 # Mesh-batched scenario sweep: the batched Algorithm-2 while_loop, sharded
 # --------------------------------------------------------------------------
 
-def _check_sweep_shapes(values, budgets, rules, spec,
-                        require_block_alignment=True):
-    """Static-shape validation + the shard contract.
-
-    ``require_block_alignment`` adds the canonical-reduction-grid alignment
-    needed for :func:`sweep_sharded`'s bit-for-bit guarantee; the
-    SORT2AGGREGATE sweep paths (plain psum'd spends, tolerance-checked) only
-    need evenly divisible shards.
-    """
-    if rules.multipliers.ndim != 2 or budgets.ndim != 2:
-        raise ValueError(
-            "sweep inputs must be batched: multipliers/budgets (S, C), "
-            f"got {rules.multipliers.shape} / {budgets.shape}")
-    n_events, n_campaigns = values.shape
-    n_scenarios = budgets.shape[0]
-    if budgets.shape[1] != n_campaigns or \
-            rules.multipliers.shape != budgets.shape:
-        raise ValueError(
-            f"scenario batch mismatch: values C={n_campaigns}, "
-            f"multipliers {rules.multipliers.shape}, budgets {budgets.shape}")
-    d_ev = spec.event_device_count
-    if n_events % d_ev != 0:
-        raise ValueError(
-            f"ragged shard: N={n_events} events over {d_ev} event-axis "
-            f"devices leaves a remainder of {n_events % d_ev}. Pad the event "
-            "log to a multiple of the event-device count (zero-valuation "
-            "events never win, but they DO count toward rate denominators — "
-            "pad the log upstream where that is accounted for) or use "
-            "driver='batched'.")
-    block = seg_lib.reduce_block_size(n_events)
-    local_n = n_events // d_ev
-    if require_block_alignment and d_ev > 1 and local_n % block != 0:
-        if seg_lib.REDUCE_BLOCKS % d_ev != 0:
-            # no N can align: shards can never hold whole canonical blocks
-            raise ValueError(
-                f"shard/grid misalignment: {d_ev} event-axis devices cannot "
-                f"divide the canonical reduction grid (REDUCE_BLOCKS="
-                f"{seg_lib.REDUCE_BLOCKS}); the event-device count must "
-                "divide REDUCE_BLOCKS for the bit-for-bit contract. Use a "
-                "device count that divides it, raise "
-                "repro.core.segments.REDUCE_BLOCKS (a repo-wide constant — "
-                "it regroups every driver's reductions consistently, so the "
-                "cross-driver bit-for-bit contract is preserved but absolute "
-                "low bits shift), or use driver='batched'.")
-        g = seg_lib.REDUCE_BLOCKS
-        aligned_n = max(1, -(-n_events // g)) * g   # d_ev | g => d_ev | k*g
-        raise ValueError(
-            f"shard/grid misalignment: each shard holds {local_n} events but "
-            f"the canonical reduction grid uses blocks of {block} "
-            f"(REDUCE_BLOCKS={g}); shards must hold whole blocks for the "
-            f"bit-for-bit reduction contract. Pad N to a multiple of {g} "
-            f"(e.g. {aligned_n}), or use driver='batched'.")
-    d_sc = spec.scenario_device_count
-    if n_scenarios % d_sc != 0:
-        raise ValueError(
-            f"ragged scenario shard: S={n_scenarios} scenarios over {d_sc} "
-            f"devices on mesh axis {spec.scenario_axis!r}. Pad the grid with "
-            "repeats of the base design, or drop scenario_axis.")
-
-
-def make_sharded_sweep_kernels(
-    spec: SweepMeshSpec,
-    *,
-    n_events: int,
-    n_campaigns: int,
-    kind: str = "first_price",
-    resolve: str = "auto",
-    block_t: int = 256,
-    interpret: Optional[bool] = None,
-    skip_retired: bool = True,
-):
-    """Build the per-round closures of the mesh-batched sweep loop.
-
-    Returns ``(resolve_all, rate_all, block_all, fused_partials)``. All run
-    INSIDE the sweep's ``shard_map`` (they use the mesh axis names) and carry
-    batched scenario arrays with the local scenario count as the leading
-    axis:
-
-    * ``resolve_all(values_local, active, rules_local)`` →
-      ``(winners, prices)`` (S_local, local_n) — purely local, no collectives
-      (the auction is per-event); ``resolve`` picks the jnp or the Pallas
-      ``sweep_resolve`` back-end exactly as in :mod:`repro.core.sweep`;
-    * ``rate_all(winners, prices, n_hat)`` → per-scenario remaining-rate
-      (S_local, C): local canonical block partials
-      (:func:`repro.core.segments.partial_spend_sums`), ONE psum over the
-      event axes, then the same final reduce as the single-device driver;
-    * ``block_all(winners, prices, lo, hi)`` → per-scenario block spends
-      (S_local, C), same structure, the round's second (and last) psum;
-    * ``fused_partials(values_local, active, rules_local, lane_alive, lo,
-      hi)`` — the ``resolve="fused"`` round: resolve + canonical partials of
-      events in ``[lo, hi)`` in ONE ``sweep_partials`` kernel pass over the
-      local shard, already psum'd. The fused round never materialises
-      (S, local_n) winners/prices; the mesh driver calls it twice per round
-      (rate window ``[n_hat, N)``, then block window ``[n_hat, n_next)``)
-      with the prediction between the two collectives. ``None`` unless
-      ``resolve="fused"`` AND the kernel actually compiles (TPU, or
-      interpret mode explicitly forced) — elsewhere the driver keeps the
-      resolve-once ``resolve_all``/``rate_all``/``block_all`` structure,
-      which is the fused round's jnp realization (same arithmetic, same
-      bits, one resolve per round).
-
-    The two psums are the loop's only cross-device traffic: each moves a
-    float32 tensor of shape (S_local, REDUCE_BLOCKS, C) — the two (S, C)
-    reductions of the paper's map-reduce round, kept in canonical block
-    partials so the result is bitwise identical to the single-device loop
-    (docs/SCALING.md explains why unique block ownership makes the psum
-    exact). The fused back-end emits *exactly that tensor* straight from the
-    kernel, so fusing changes the psum operands not at all.
-    """
-    axes = tuple(spec.event_axes)
-    local_n = n_events // spec.event_device_count
-    block = seg_lib.reduce_block_size(n_events)
-    resolve = pick_resolve(resolve)
-    use_interpret = (interpret if interpret is not None
-                     else not resolve_ops.ON_TPU)
-
-    def resolve_all(values_local, active, rules_local):
-        if resolve != "pallas":
-            return jax.vmap(
-                lambda a, r: auction.resolve(values_local, a, r),
-                in_axes=(0, 0))(active, rules_local)
-        winners, prices, _ = resolve_ops.sweep_resolve(
-            values_local, rules_local.multipliers, active,
-            rules_local.reserve, second_price=(kind == "second_price"),
-            block_t=block_t, interpret=use_interpret)
-        return winners, prices
-
-    def _partials(winners, prices, weight_fn, *args):
-        offset = _global_offset(axes, local_n)
-        gidx = offset + jnp.arange(local_n, dtype=jnp.int32)
-
-        def one(w, p, *a):
-            weight = weight_fn(gidx, *a).astype(p.dtype)
-            return seg_lib.partial_spend_sums(
-                w, p, n_campaigns, weight, block_size=block,
-                index_offset=offset)
-
-        parts = jax.vmap(one)(winners, prices, *args)  # (S_l, G, C)
-        return jax.lax.psum(parts, axes)
-
-    def rate_all(winners, prices, n_hat):
-        parts = _partials(winners, prices, lambda g, nh: g >= nh, n_hat)
-
-        def one(pt, nh):
-            sums = pt.sum(axis=0)
-            denom = jnp.maximum(n_events - nh, 1).astype(sums.dtype)
-            return sums / denom
-
-        return jax.vmap(one)(parts, n_hat)
-
-    def block_all(winners, prices, lo, hi):
-        parts = _partials(winners, prices,
-                          lambda g, l, h: (g >= l) & (g < h), lo, hi)
-        return jax.vmap(lambda pt: pt.sum(axis=0))(parts)
-
-    fused_partials = None
-    if resolve == "fused" and fused_runs_kernel(interpret):
-        # one kernel pass per reduction window: resolve + canonical
-        # partials fused, already placed on the GLOBAL grid via the shard
-        # offset. Where the kernel would only interpret (CPU, interpret
-        # unset), the driver takes the standard resolve-once branch
-        # instead — same arithmetic, half the resolve cost.
-        def fused_partials(values_local, active, rules_local, lane_alive,
-                           lo, hi):
-            parts = resolve_ops.sweep_partials(
-                values_local, rules_local.multipliers, active,
-                rules_local.reserve, lo, hi, lane_alive,
-                _global_offset(axes, local_n),
-                n_events_global=n_events,
-                reduce_blocks=seg_lib.REDUCE_BLOCKS,
-                second_price=(kind == "second_price"),
-                skip_retired=skip_retired, block_t=block_t,
-                interpret=use_interpret)
-            return jax.lax.psum(parts, axes)
-
-    return resolve_all, rate_all, block_all, fused_partials
-
-
-@functools.partial(jax.jit, static_argnames=("spec", "resolve", "block_t",
-                                             "interpret", "skip_retired"))
 def sweep_sharded(
     values: jax.Array,            # (N, C) — events sharded over the mesh
     budgets: jax.Array,           # (S, C)
@@ -505,134 +323,44 @@ def sweep_sharded(
     block_t: int = 256,
     interpret: Optional[bool] = None,
     skip_retired: bool = True,
+    chunks=None,                  # int | ChunkSpec — chunking × sharding
 ):
     """The batched Algorithm-2 loop as ONE mesh program: events sharded over
     ``spec.event_axes``, campaign/scenario state replicated, the scenario
     axis vmapped per device or sharded over ``spec.scenario_axis``.
 
-    Structurally this is :func:`repro.core.sweep.sweep_state_machine` moved
-    under ``shard_map``: the while_loop carries the identical batched
-    ``(s_hat, active, cap_times, n_hat)`` + round-log state, each round
-    resolves only the LOCAL event shard, and the per-lane scalar logic is the
-    same :func:`repro.core.parallel.lane_predict` /
-    :func:`~repro.core.parallel.lane_commit` pair the single-device loop
-    runs. Per round the only cross-device traffic is the two psum'd
-    canonical block-partial tensors (see :func:`make_sharded_sweep_kernels`),
-    so results are **bit-for-bit identical to the single-device
-    ``sweep_state_machine``** on any mesh satisfying the alignment contract
-    (shards hold whole canonical reduction blocks; checked, with a
-    pad-or-error message, at trace time).
+    This is the ``placement="sharded"`` cell of the executor layer
+    (:mod:`repro.core.executor`, docs/ARCHITECTURE.md): the SAME round body
+    as the single-device :func:`repro.core.sweep.sweep_state_machine`, run
+    under ``shard_map``, with each reduction's canonical block partials
+    produced from the local shard (placed on the global grid via the shard
+    offset) and psum'd over the event axes — the round's only cross-device
+    traffic, two (S_local, REDUCE_BLOCKS, C) float32 tensors. Unique block
+    ownership makes the psum exact, so results are **bit-for-bit identical
+    to the single-device sweep** on any mesh satisfying the alignment
+    contract (shards hold whole canonical reduction blocks; checked, with a
+    pad-or-error message, at trace time). See docs/SCALING.md.
 
-    ``resolve="fused"`` swaps the resolve + two-reduction structure for two
-    fused resolve+reduce passes per round (``make_sharded_sweep_kernels``'s
-    ``fused_partials``): the kernel's (S_local, 32, C) output is exactly the
-    psum operand, so per-round communication and bits are unchanged;
-    ``skip_retired`` passes the loop's per-lane alive flags into the kernel
-    so frozen scenarios' grid steps are skipped (pure wall-clock — results
-    identical either way).
+    ``resolve="fused"`` swaps the resolve-once structure for two fused
+    resolve+reduce kernel passes per round whose outputs ARE the psum
+    operands (communication and bits unchanged); ``skip_retired`` passes
+    the loop's per-lane alive flags into the kernel so frozen scenarios'
+    grid steps are skipped (pure wall-clock). ``chunks`` composes chunking
+    with sharding: each device scans its own shard's chunks before the
+    psum, so the per-device working set is O(events_per_chunk · C) — still
+    bit-for-bit, for chunk sizes aligned to the canonical grid within the
+    shard.
 
     Returns the same batched tuple as ``sweep_state_machine``:
     ``(s_hat (S, C), cap_times (S, C), retired (S, C+1), boundaries
     (S, C+2), num_rounds (S,), n_hat (S,))``, gathered across the scenario
     axis when one is meshed.
     """
-    _check_sweep_shapes(values, budgets, rules, spec)
-    n_events, n_campaigns = values.shape
-    sentinel = jnp.int32(never_capped(n_events))
-    mesh, sc = spec.mesh, spec.scenario_axis
-    resolve = pick_resolve(resolve)
-    resolve_all, rate_all, block_all, fused_partials = \
-        make_sharded_sweep_kernels(
-            spec, n_events=n_events, n_campaigns=n_campaigns,
-            kind=rules.kind, resolve=resolve, block_t=block_t,
-            interpret=interpret, skip_retired=skip_retired)
-
-    spec_vals = P(tuple(spec.event_axes), None)
-    spec_sc2 = P(sc, None)        # (S, ...) arrays; sc=None -> replicated
-    spec_sc1 = P(sc)
-
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(spec_vals, spec_sc2, spec_sc2, spec_sc1),
-        out_specs=(spec_sc2, spec_sc2, spec_sc2, spec_sc2, spec_sc1,
-                   spec_sc1))
-    def _driver(values_local, b_local, mult_local, res_local):
-        s_local = b_local.shape[0]
-        rules_local = AuctionRule(multipliers=mult_local, reserve=res_local,
-                                  kind=rules.kind)
-        b = b_local.astype(jnp.float32)
-        lane_pred = functools.partial(lane_predict, n_events=n_events)
-        lane_comm = functools.partial(lane_commit, sentinel=sentinel)
-
-        def alive(core):
-            _, active, _, n_hat, rnd, _, _ = core
-            return (rnd < n_campaigns + 1) & (n_hat < n_events) \
-                & active.any(-1)
-
-        def global_any(flags):
-            # with a meshed scenario axis the loop must run until the LAST
-            # slice retires its last cap-out (same trip count everywhere so
-            # the event-axis psums stay aligned); event-axis devices already
-            # agree (replicated state), so only the scenario axis reduces.
-            local = jnp.any(flags)
-            if sc is None:
-                return local
-            return jax.lax.psum(local.astype(jnp.int32), sc) > 0
-
-        def body(st):
-            core, _ = st
-            s_hat, active, cap, n_hat, rnd, retired, bnds = core
-            keep = alive(core)
-            if fused_partials is not None:
-                # fused round: two resolve+reduce passes whose (S, G, C)
-                # outputs ARE the psum operands; winners/prices stay in the
-                # kernel. Same reductions, same order => same bits.
-                rate_parts = fused_partials(
-                    values_local, active, rules_local, keep, n_hat,
-                    jnp.full_like(n_hat, n_events))
-
-                def rate_of(pt, nh):
-                    sums = pt.sum(axis=0)
-                    denom = jnp.maximum(n_events - nh, 1).astype(sums.dtype)
-                    return sums / denom
-
-                rates = jax.vmap(rate_of)(rate_parts, n_hat)
-                c_next, no_cap, n_next = jax.vmap(lane_pred)(
-                    rates, b, s_hat, active, n_hat)
-                block_parts = fused_partials(
-                    values_local, active, rules_local, keep, n_hat, n_next)
-                blk = jax.vmap(lambda pt: pt.sum(axis=0))(block_parts)
-            else:
-                winners, prices = resolve_all(values_local, active,
-                                              rules_local)
-                rates = rate_all(winners, prices, n_hat)
-                c_next, no_cap, n_next = jax.vmap(lane_pred)(
-                    rates, b, s_hat, active, n_hat)
-                blk = block_all(winners, prices, n_hat, n_next)
-            new = jax.vmap(lane_comm)(blk, c_next, no_cap, n_next, s_hat,
-                                      active, cap, rnd, retired, bnds)
-            merged = jax.tree.map(
-                lambda n, o: jnp.where(
-                    keep.reshape(keep.shape + (1,) * (n.ndim - 1)), n, o),
-                new, core)
-            return merged, global_any(alive(merged))
-
-        init_core = (
-            jnp.zeros((s_local, n_campaigns), jnp.float32),
-            jnp.ones((s_local, n_campaigns), bool),
-            jnp.full((s_local, n_campaigns), sentinel, jnp.int32),
-            jnp.zeros((s_local,), jnp.int32),
-            jnp.zeros((s_local,), jnp.int32),
-            jnp.full((s_local, n_campaigns + 1), -1, jnp.int32),
-            jnp.zeros((s_local, n_campaigns + 2), jnp.int32),
-        )
-        core, _ = jax.lax.while_loop(
-            lambda st: st[1], body, (init_core, global_any(alive(init_core))))
-        s_hat, active, cap, n_hat, rnd, retired, bnds = core
-        return s_hat, cap, retired, bnds, rnd, n_hat
-
-    return _driver(values, budgets, rules.multipliers,
-                   jnp.asarray(rules.reserve, jnp.float32))
+    plan = SweepPlan(placement="sharded", mesh=spec, resolve=resolve,
+                     block_t=block_t, interpret=interpret,
+                     skip_retired=skip_retired,
+                     chunks=as_chunk_spec(chunks))
+    return execute_sweep(values, budgets, rules, plan)
 
 
 # --------------------------------------------------------------------------

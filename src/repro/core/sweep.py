@@ -20,35 +20,25 @@ is, by convention, the logged base design. The high-level grid construction /
 delta-table API lives in
 :class:`repro.core.counterfactual.CounterfactualEngine.sweep`.
 
-Three resolve back-ends drive the Algorithm-2 sweep:
+Every Algorithm-2 sweep here is a thin wrapper over the unified executor
+layer (:mod:`repro.core.executor`, docs/ARCHITECTURE.md): the entry points
+build a :class:`~repro.core.executor.SweepPlan` naming the placement
+(``driver="batched"`` → one device, ``driver="sharded"`` → the mesh named by
+``mesh=``), the per-round resolve back-end (``resolve="jnp"|"pallas"|
+"fused"|"auto"``), and the optional event-chunk schedule (``chunks=``), and
+the executor generates the program — there is exactly one while_loop round
+body behind all of them, so every combination stays bit-for-bit
+interchangeable on ``final_spend``/``cap_times``.
 
-* ``resolve="jnp"`` — ``vmap(parallel_state_machine)``: each scenario's
-  while_loop round resolves the full (N, C) matrix independently, so the
-  event log is streamed from HBM once per scenario per round;
-* ``resolve="pallas"`` — :func:`sweep_state_machine`, an explicitly batched
-  while_loop whose rounds issue ONE scenario-batched Pallas resolve
-  (``repro.kernels.auction_resolve.sweep_resolve``): each (block_t, C)
-  valuation tile is fetched into VMEM once and resolved against all S
-  scenarios' (multiplier, reserve, live-mask) variants — S-fold reuse of the
-  dominant HBM read. Winners/prices are bit-identical to the jnp path, so
-  both back-ends produce the same cap times and (bitwise) final spends;
-* ``resolve="fused"`` — the whole round in one kernel launch
-  (``repro.kernels.auction_resolve.round_fused``): resolve + the canonical
-  (S, 32, C) spend partials + the per-lane cap-out prediction + the block
-  partials, winners/prices never materialised to HBM, with retired lanes'
-  grid steps skipped (``skip_retired``). On CPU — where a Pallas kernel
-  only interprets — the fused round runs its jnp oracle composition
-  instead, which is bit-for-bit the ``"jnp"`` arithmetic.
-
-``resolve="auto"`` (the default) picks ``"fused"`` on TPU and the vmapped
-jnp path on CPU; it NEVER selects an interpret-mode Pallas kernel (see
-:func:`pick_resolve`).
-
-Orthogonally, ``driver="sharded"`` moves the batched while_loop onto a device
-mesh (:func:`repro.core.sharded.sweep_sharded`): the event axis is sharded
-across devices, the scenario axis is vmapped per device or mapped to a second
-mesh axis, and each round's two reductions are psum'd — bit-for-bit identical
-to the single-device drivers on any aligned mesh. See docs/SCALING.md.
+``chunks=`` (an int or :class:`~repro.core.executor.ChunkSpec`) turns on
+**event-chunked streaming**: each round scans the log ``events_per_chunk``
+events at a time, accumulating the canonical (S, 32, C) spend partials
+chunk-by-chunk via the kernels' ``index_offset`` — exactly how mesh shards
+place their rows on the global reduction grid — so per-event intermediates
+exist for one chunk at a time and results stay bit-for-bit equal to the
+in-memory drivers on any aligned chunk size (misaligned sizes raise the same
+pad-or-error contract as misaligned meshes). Chunking composes with both
+drivers and all resolve back-ends.
 """
 from __future__ import annotations
 
@@ -58,15 +48,11 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import auction
-from repro.core import segments as seg_lib
-from repro.core.parallel import (RESOLVE_BACKENDS, fused_runs_kernel,
-                                 lane_commit, lane_predict, lane_round,
-                                 parallel_state_machine, pick_resolve)
+from repro.core.executor import (SweepPlan, as_chunk_spec, check_batch_shapes,
+                                 execute_sweep, plan_for_driver)
 from repro.core.sequential import sequential_replay
 from repro.core.sort2aggregate import refine_fixed_device
-from repro.core.types import AuctionRule, Segments, SimResult, never_capped
-from repro.kernels.auction_resolve import ops as resolve_ops
+from repro.core.types import AuctionRule, SimResult
 
 
 def stack_rules(rules) -> AuctionRule:
@@ -92,19 +78,6 @@ def scenario_rule(rules: AuctionRule, s: int) -> AuctionRule:
                        reserve=rules.reserve[s], kind=rules.kind)
 
 
-def _check_batch(values, budgets, rules):
-    if rules.multipliers.ndim != 2 or budgets.ndim != 2:
-        raise ValueError(
-            "sweep inputs must be batched: multipliers/budgets (S, C), "
-            f"got {rules.multipliers.shape} / {budgets.shape}")
-    n_campaigns = values.shape[1]
-    if budgets.shape[1] != n_campaigns or \
-            rules.multipliers.shape != budgets.shape:
-        raise ValueError(
-            f"scenario batch mismatch: values C={n_campaigns}, "
-            f"multipliers {rules.multipliers.shape}, budgets {budgets.shape}")
-
-
 @functools.partial(jax.jit, static_argnames=("record_events",))
 def sweep_sequential(
     values: jax.Array,            # (N, C) — shared across scenarios
@@ -117,7 +90,7 @@ def sweep_sequential(
     Still O(N) serial depth — the scan carries all S spend states at once —
     so this is the validation path, not the production one.
     """
-    _check_batch(values, budgets, rules)
+    check_batch_shapes(values, budgets, rules)
     return jax.vmap(
         lambda b, r: sequential_replay(values, b, r,
                                        record_events=record_events),
@@ -126,7 +99,8 @@ def sweep_sequential(
 
 @functools.partial(jax.jit,
                    static_argnames=("resolve", "block_t", "interpret",
-                                    "driver", "mesh", "skip_retired"))
+                                    "driver", "mesh", "skip_retired",
+                                    "chunks"))
 def sweep_parallel(
     values: jax.Array,            # (N, C)
     budgets: jax.Array,           # (S, C)
@@ -137,6 +111,7 @@ def sweep_parallel(
     driver: str = "batched",
     mesh=None,                    # SweepMeshSpec, driver="sharded" only
     skip_retired: bool = True,
+    chunks=None,                  # int | ChunkSpec — event-chunked streaming
 ) -> SimResult:
     """Algorithm 2 over a scenario batch: one device program, serial depth
     ``max_s K_s``. The batched while_loop runs until the slowest scenario
@@ -144,56 +119,39 @@ def sweep_parallel(
     lanes' updates are discarded by select) — total work is S × max_s K_s
     resolves, so heavily skewed grids pay for their slowest member.
 
-    ``driver`` picks where the batched loop runs:
+    The (driver, resolve, chunks) triple names a cell of the executor layer
+    (:mod:`repro.core.executor`); this wrapper just builds the
+    :class:`~repro.core.executor.SweepPlan` and wraps the result:
 
-    * ``"batched"`` (default) — one device, as below;
-    * ``"sharded"`` — the same loop under ``shard_map`` on the mesh named by
-      ``mesh`` (a :class:`repro.launch.mesh.SweepMeshSpec`): events sharded,
-      scenarios vmapped per device or sharded along a second mesh axis.
-      Bit-for-bit identical to ``"batched"`` on any aligned mesh (see
-      :func:`repro.core.sharded.sweep_sharded` and docs/SCALING.md).
-
-    ``resolve`` picks the per-round resolve back-end (see module docstring):
-    ``"jnp"`` vmaps the single-scenario state machine; ``"pallas"`` runs the
-    batched state machine with the tile-reusing kernel; ``"fused"`` runs the
-    batched state machine with the one-launch fused round (``skip_retired``
-    predicates retired lanes' grid steps off — results are bit-identical
-    either way, only wall-clock changes); ``interpret`` forces / suppresses
-    Pallas interpret mode (default: interpret off TPU only — except
-    ``"fused"``, which falls back to its jnp oracle on CPU instead of
-    interpreting). ``"auto"`` is fused on TPU, jnp elsewhere. All compose
-    with either driver.
+    * ``driver="batched"`` (default) — the batched loop on one device;
+      ``driver="sharded"`` — the same loop under ``shard_map`` on the mesh
+      named by ``mesh`` (a :class:`repro.launch.mesh.SweepMeshSpec`):
+      events sharded, scenarios vmapped per device or sharded along a
+      second mesh axis. Bit-for-bit identical to ``"batched"`` on any
+      aligned mesh (docs/SCALING.md).
+    * ``resolve`` picks the per-round resolve back-end (see the module
+      docstring): ``"jnp"`` / ``"pallas"`` / ``"fused"`` / ``"auto"``
+      (fused on TPU, jnp elsewhere); ``skip_retired`` predicates retired
+      lanes' kernel grid steps off (bit-identical either way, only
+      wall-clock changes); ``interpret`` forces / suppresses Pallas
+      interpret mode.
+    * ``chunks`` (int or :class:`~repro.core.executor.ChunkSpec`) streams
+      each round over fixed event chunks — bit-for-bit the in-memory
+      result on aligned chunk sizes, pad-or-error otherwise. Composes
+      with either driver (each mesh shard scans its own chunks).
     """
-    _check_batch(values, budgets, rules)
-    resolve = pick_resolve(resolve)
-    if driver == "sharded":
-        if mesh is None:
-            raise ValueError(
-                "driver='sharded' needs mesh=SweepMeshSpec(...); see "
-                "repro.launch.mesh.SweepMeshSpec.for_devices")
-        from repro.core.sharded import sweep_sharded
-        s_hat, cap_times, _, _, _, _ = sweep_sharded(
-            values, budgets, rules, mesh, resolve=resolve, block_t=block_t,
-            interpret=interpret, skip_retired=skip_retired)
-        return SimResult(final_spend=s_hat, cap_times=cap_times,
-                         winners=None, prices=None, segments=None)
-    if driver != "batched":
-        raise ValueError(f"unknown sweep driver: {driver}")
-    if resolve == "jnp":
-        s_hat, cap_times, _, _, _, _ = jax.vmap(
-            lambda b, r: parallel_state_machine(values, b, r),
-            in_axes=(0, 0))(budgets, rules)
-    else:
-        s_hat, cap_times, _, _, _, _ = sweep_state_machine(
-            values, budgets, rules, resolve=resolve, block_t=block_t,
-            interpret=interpret, skip_retired=skip_retired)
+    plan = plan_for_driver(driver, resolve=resolve, block_t=block_t,
+                           interpret=interpret, skip_retired=skip_retired,
+                           mesh=mesh, chunks=chunks)
+    s_hat, cap_times, _, _, _, _ = execute_sweep(values, budgets, rules,
+                                                 plan)
     return SimResult(final_spend=s_hat, cap_times=cap_times,
                      winners=None, prices=None, segments=None)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("resolve", "block_t", "interpret",
-                                    "skip_retired"))
+                                    "skip_retired", "chunks"))
 def sweep_state_machine(
     values: jax.Array,            # (N, C)
     budgets: jax.Array,           # (S, C)
@@ -202,123 +160,30 @@ def sweep_state_machine(
     block_t: int = 256,
     interpret: Optional[bool] = None,
     skip_retired: bool = True,
+    chunks=None,
 ):
     """The Algorithm-2 loop over an explicit scenario batch: ONE resolve of
     the shared event log per round for ALL scenarios.
 
-    Structurally this is ``vmap(parallel_state_machine)`` unrolled by hand:
-    the while_loop carries batched ``(s_hat, active, cap_times, n_hat)`` plus
+    This is the executor's ``placement="batched"`` program
+    (:mod:`repro.core.executor`) with the full round-log state exposed: the
+    while_loop carries batched ``(s_hat, active, cap_times, n_hat)`` plus
     the per-lane round log, the condition keeps looping while ANY lane is
     alive, and finished lanes' states are frozen by select — exactly the
-    semantics jax's batching rule gives the vmapped loop, asserted
-    bit-for-bit by ``tests/test_scenario_sweep.py``. The difference is the
-    resolve:
+    semantics jax's batching rule gives a vmapped single-lane loop,
+    asserted bit-for-bit by ``tests/test_scenario_sweep.py``. ``resolve``
+    picks how each round's reductions are produced (one jnp/pallas resolve
+    feeding two weighted canonical partials, or the one-launch fused round
+    kernel); ``chunks`` streams each round over fixed event chunks (see
+    the module docstring).
 
-    * ``"jnp"`` keeps the vmapped resolve (useful to test the loop
-      restructure in isolation);
-    * ``"pallas"`` issues one ``sweep_resolve`` kernel call per round that
-      keeps each valuation tile in VMEM across the whole scenario batch;
-    * ``"fused"`` issues one ``round_fused`` kernel launch per round —
-      resolve + canonical partials + cap-out prediction + block partials,
-      (S, N) winners/prices never touching HBM, with retired lanes' grid
-      steps predicated off when ``skip_retired`` (outputs are identical
-      either way: the loop discards frozen lanes' updates by select). On
-      CPU (unless ``interpret=True`` forces the kernel) the fused round
-      runs its jnp oracle composition, bit-for-bit the ``"jnp"`` path.
-
-    Returns the batched tuple of ``parallel_state_machine``:
-    ``(s_hat (S, C), cap_times (S, C), retired (S, C+1), boundaries (S, C+2),
-    num_rounds (S,), n_hat (S,))``.
+    Returns the batched tuple ``(s_hat (S, C), cap_times (S, C),
+    retired (S, C+1), boundaries (S, C+2), num_rounds (S,), n_hat (S,))``.
     """
-    _check_batch(values, budgets, rules)
-    resolve = pick_resolve(resolve)
-    n_events, n_campaigns = values.shape
-    n_scenarios = budgets.shape[0]
-    sentinel = jnp.int32(never_capped(n_events))
-    b = budgets.astype(jnp.float32)
-    use_interpret = (interpret if interpret is not None
-                     else not resolve_ops.ON_TPU)
-
-    if resolve == "pallas":
-        def resolve_all(active):
-            winners, prices, _ = resolve_ops.sweep_resolve(
-                values, rules.multipliers, active, rules.reserve,
-                second_price=(rules.kind == "second_price"),
-                block_t=block_t, interpret=use_interpret)
-            return winners, prices
-    else:
-        def resolve_all(active):
-            return jax.vmap(lambda a, r: auction.resolve(values, a, r),
-                            in_axes=(0, 0))(active, rules)
-
-    def alive(st):
-        _, active, _, n_hat, rnd, _, _ = st
-        return (rnd < n_campaigns + 1) & (n_hat < n_events) & active.any(-1)
-
-    def cond(st):
-        return jnp.any(alive(st))
-
-    # the per-lane round is the SAME function the unbatched device driver
-    # runs (repro.core.parallel.lane_round), vmapped — the bit-for-bit
-    # contract between the two loops is structural, not kept-in-sync
-    lane_step = functools.partial(lane_round, n_events=n_events,
-                                  n_campaigns=n_campaigns, sentinel=sentinel)
-    lane_pred = functools.partial(lane_predict, n_events=n_events)
-    lane_comm = functools.partial(lane_commit, sentinel=sentinel)
-
-    def fused_round(s_hat, active, n_hat, keep):
-        """One fused round: the kernel where it compiles, otherwise the jnp
-        composition of exactly the ``lane_round`` stages (same primitives,
-        same order — the bit-for-bit contract is structural)."""
-        if fused_runs_kernel(interpret):
-            _, block_parts, c_next, no_cap, n_next = resolve_ops.round_fused(
-                values, rules.multipliers, active, rules.reserve, b, s_hat,
-                n_hat, keep, reduce_blocks=seg_lib.REDUCE_BLOCKS,
-                second_price=(rules.kind == "second_price"),
-                skip_retired=skip_retired, block_t=block_t,
-                interpret=use_interpret)
-            return block_parts.sum(axis=1), c_next, no_cap, n_next
-        winners, prices = resolve_all(active)
-        rates = jax.vmap(
-            lambda w, p, nh: seg_lib.rate_from_events(w, p, n_campaigns, nh)
-        )(winners, prices, n_hat)
-        c_next, no_cap, n_next = jax.vmap(lane_pred)(rates, b, s_hat,
-                                                     active, n_hat)
-        blk = jax.vmap(
-            lambda w, p, lo, hi: seg_lib.block_from_events(w, p, n_campaigns,
-                                                           lo, hi)
-        )(winners, prices, n_hat, n_next)
-        return blk, c_next, no_cap, n_next
-
-    def body(st):
-        s_hat, active, cap, n_hat, rnd, retired, bnds = st
-        keep = alive(st)
-        if resolve == "fused":
-            blk, c_next, no_cap, n_next = fused_round(s_hat, active, n_hat,
-                                                      keep)
-            new = jax.vmap(lane_comm)(blk, c_next, no_cap, n_next, s_hat,
-                                      active, cap, rnd, retired, bnds)
-        else:
-            winners, prices = resolve_all(active)
-            new = jax.vmap(lane_step)(winners, prices, b, s_hat, active, cap,
-                                      n_hat, rnd, retired, bnds)
-        return jax.tree.map(
-            lambda n, o: jnp.where(
-                keep.reshape(keep.shape + (1,) * (n.ndim - 1)), n, o),
-            new, st)
-
-    init = (
-        jnp.zeros((n_scenarios, n_campaigns), jnp.float32),
-        jnp.ones((n_scenarios, n_campaigns), bool),
-        jnp.full((n_scenarios, n_campaigns), sentinel, jnp.int32),
-        jnp.zeros((n_scenarios,), jnp.int32),
-        jnp.zeros((n_scenarios,), jnp.int32),
-        jnp.full((n_scenarios, n_campaigns + 1), -1, jnp.int32),
-        jnp.zeros((n_scenarios, n_campaigns + 2), jnp.int32),
-    )
-    s_hat, active, cap, n_hat, rnd, retired, bnds = \
-        jax.lax.while_loop(cond, body, init)
-    return s_hat, cap, retired, bnds, rnd, n_hat
+    plan = SweepPlan(placement="batched", resolve=resolve, block_t=block_t,
+                     interpret=interpret, skip_retired=skip_retired,
+                     chunks=as_chunk_spec(chunks))
+    return execute_sweep(values, budgets, rules, plan)
 
 
 @functools.partial(jax.jit,
@@ -345,7 +210,7 @@ def sweep_sort2aggregate(
     under its own design, no serial base pre-pass), or default to the
     optimistic all-active start.
     """
-    _check_batch(values, budgets, rules)
+    check_batch_shapes(values, budgets, rules)
     n_events, n_campaigns = values.shape
     n_scenarios = budgets.shape[0]
     if cap_times_init is None:

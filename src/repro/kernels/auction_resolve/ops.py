@@ -183,10 +183,15 @@ def sweep_partials(
     block_t: int = 256,
     interpret: bool = not ON_TPU,
 ):
-    """One fused resolve+reduce pass over the local shard: (S, G, C)
-    canonical partials of events in ``[lo, hi)`` — exactly the tensor the
-    mesh driver psums per round (its shard rows placed on the *global* grid
-    via ``offset``)."""
+    """One fused resolve+reduce pass over a slice of the event log: (S, G, C)
+    canonical partials of events in ``[lo, hi)``, the slice's rows placed on
+    the *global* reduction grid via ``offset``. The same offset mechanism
+    serves both sweep-executor axes (repro.core.executor): a mesh shard
+    passes its row-major rank × local_n and psums the result; a streaming
+    chunk passes ``shard_offset + chunk_index * events_per_chunk`` and
+    accumulates across the chunk scan — either way the output is exactly
+    the tensor :func:`repro.core.segments.partial_spend_sums` would produce
+    for those rows, which is what keeps every placement bit-for-bit."""
     c = values.shape[1]
     block_size = -(-n_events_global // reduce_blocks)
     v, mult, act, live, res = _pad_scenario_state(

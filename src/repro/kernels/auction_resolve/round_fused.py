@@ -26,11 +26,15 @@ Two kernels:
   One kernel launch per round, two streams of the valuation matrix, zero
   per-event HBM output.
 * :func:`sweep_partials_pallas` — one weighted partials pass (events in
-  ``[lo, hi)``, per scenario) for drivers that must interleave a collective
-  between the two reductions: the mesh driver psums the rate partials, runs
-  the prediction on the globally-reduced tensor, then issues this kernel
-  again for the block partials — the kernel's (S, 32, C) output IS the psum
-  operand (see docs/SCALING.md).
+  ``[lo, hi)``, per scenario) for drivers that must split the round at a
+  reduction boundary: the mesh driver psums the rate partials, runs the
+  prediction on the globally-reduced tensor, then issues this kernel again
+  for the block partials — the kernel's (S, 32, C) output IS the psum
+  operand (see docs/SCALING.md). The event-chunked streaming executor
+  (``chunks=`` in repro.core.executor) reuses the same kernel per chunk:
+  ``index_offset`` places each chunk's rows on the global canonical grid,
+  and the chunk scan's accumulation is exact for the same
+  unique-block-ownership reason the psum is (docs/ARCHITECTURE.md).
 
 Converged-lane skipping: both kernels take a per-scenario ``lane_alive``
 mask and (statically, ``skip_retired=True``) predicate each (block, scenario)

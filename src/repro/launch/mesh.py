@@ -101,6 +101,30 @@ class SweepMeshSpec:
         return self.mesh.shape[self.scenario_axis] if self.scenario_axis \
             else 1
 
+    def local_event_count(self, n_events: int) -> int:
+        """Events per device under this spec (the quantity chunk sizes must
+        divide for chunking × sharding — see ``executor.check_chunks``)."""
+        return n_events // self.event_device_count
+
+    def plan(self, *, resolve: str = "auto", block_t: int = 256,
+             interpret: Optional[bool] = None, skip_retired: bool = True,
+             chunks=None):
+        """Compose this mesh with the other execution axes into a
+        :class:`repro.core.executor.SweepPlan` (placement ``"sharded"``).
+
+        ``chunks`` (an int or :class:`~repro.core.executor.ChunkSpec`)
+        states chunking × sharding: each device scans its own event shard
+        ``events_per_chunk`` events at a time per Algorithm-2 round, so the
+        per-device working set is bounded by the chunk, not the shard.
+        Chunk sizes must divide :meth:`local_event_count` and hold whole
+        canonical reduction blocks (pad-or-error at trace time).
+        """
+        from repro.core.executor import SweepPlan, as_chunk_spec
+        return SweepPlan(placement="sharded", mesh=self, resolve=resolve,
+                         block_t=block_t, interpret=interpret,
+                         skip_retired=skip_retired,
+                         chunks=as_chunk_spec(chunks))
+
     @staticmethod
     def for_devices(num_event_devices: Optional[int] = None,
                     num_scenario_devices: int = 1) -> "SweepMeshSpec":

@@ -1,0 +1,118 @@
+"""Golden tests for the engine's delta tables.
+
+``SweepResult.delta_table`` is the number every consumer of a sweep reads
+(the revenue/spend/cap-shift report), but until now its baseline-row
+indexing and per-column arithmetic were only exercised indirectly through
+whole-engine sweeps. These tests pin the semantics on hand-computed
+fixtures: the base row is ``base_index`` (not necessarily 0), ``revenue``
+falls back to total spend when no per-event prices were recorded,
+``num_capped`` counts ``cap_time <= N``, and ``mean_cap_shift_events``
+clips never-capped campaigns to ``N+1`` before differencing.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AuctionRule, SimResult, stack_rules
+from repro.core.counterfactual import ScenarioGrid, SweepResult
+
+N_EVENTS = 10
+
+
+def _grid(labels):
+    rules = stack_rules([AuctionRule.first_price(2)] * len(labels))
+    budgets = jnp.ones((len(labels), 2), jnp.float32)
+    return ScenarioGrid(rules=rules, budgets=budgets, labels=tuple(labels))
+
+
+def _result(spend, caps):
+    return SimResult(final_spend=jnp.asarray(spend, jnp.float32),
+                     cap_times=jnp.asarray(caps, jnp.int32),
+                     winners=None, prices=None, segments=None)
+
+
+def test_delta_table_golden_columns():
+    """Every column against hand arithmetic (no per-event prices recorded,
+    so revenue == total spend)."""
+    # scenario 0: spends (3, 1), campaign 0 caps at event 4, campaign 1 never
+    # scenario 1: spends (4, 2), both cap (at 2 and 10)
+    sweep = SweepResult(
+        grid=_grid(["base", "alt"]),
+        results=_result([[3.0, 1.0], [4.0, 2.0]],
+                        [[4, N_EVENTS + 1], [2, N_EVENTS]]),
+        n_events=N_EVENTS)
+    rows = sweep.delta_table()
+    assert [r["scenario"] for r in rows] == ["base", "alt"]
+
+    base, alt = rows
+    assert base["revenue"] == pytest.approx(4.0)
+    assert base["revenue_lift"] == 0.0
+    assert base["spend_total"] == pytest.approx(4.0)
+    assert base["spend_delta"] == 0.0
+    assert base["num_capped"] == 1              # cap at 4 <= N; N+1 doesn't
+    assert base["mean_cap_shift_events"] == 0.0
+
+    assert alt["revenue"] == pytest.approx(6.0)
+    assert alt["revenue_lift"] == pytest.approx((6.0 - 4.0) / 4.0)
+    assert alt["spend_total"] == pytest.approx(6.0)
+    assert alt["spend_delta"] == pytest.approx(2.0)
+    assert alt["num_capped"] == 2               # cap_time == N counts
+    # shifts: |2 - 4| = 2 and |10 - 11| = 1 -> mean 1.5
+    assert alt["mean_cap_shift_events"] == pytest.approx(1.5)
+
+
+def test_delta_table_base_index_selects_baseline_row():
+    """base_index != 0: every delta is measured against THAT row, and the
+    base row's own deltas are zero."""
+    sweep = SweepResult(
+        grid=_grid(["a", "b", "c"]),
+        results=_result([[1.0, 1.0], [2.0, 2.0], [3.0, 3.0]],
+                        [[3, 5], [4, 6], [5, 7]]),
+        n_events=N_EVENTS, base_index=1)
+    rows = sweep.delta_table()
+    assert rows[1]["revenue_lift"] == 0.0
+    assert rows[1]["spend_delta"] == 0.0
+    assert rows[1]["mean_cap_shift_events"] == 0.0
+    # row 0 vs row 1: revenue 2 vs 4, spend 2 vs 4, caps (3,5) vs (4,6)
+    assert rows[0]["revenue_lift"] == pytest.approx((2.0 - 4.0) / 4.0)
+    assert rows[0]["spend_delta"] == pytest.approx(-2.0)
+    assert rows[0]["mean_cap_shift_events"] == pytest.approx(1.0)
+    assert rows[2]["revenue_lift"] == pytest.approx((6.0 - 4.0) / 4.0)
+    assert rows[2]["spend_delta"] == pytest.approx(2.0)
+
+
+def test_delta_table_cap_times_clipped_to_sentinel():
+    """Cap times past N+1 (foreign sentinels) are clipped before the shift
+    column, so 'never capped' has one canonical distance."""
+    sweep = SweepResult(
+        grid=_grid(["base", "alt"]),
+        results=_result([[1.0, 1.0], [1.0, 1.0]],
+                        [[5, N_EVENTS + 1], [5, 10 ** 6]]),
+        n_events=N_EVENTS)
+    rows = sweep.delta_table()
+    # 10**6 clips to N+1 == the base's sentinel: no shift, not capped
+    assert rows[1]["mean_cap_shift_events"] == 0.0
+    assert rows[1]["num_capped"] == 1
+
+
+def test_delta_table_zero_base_revenue_guard():
+    """A zero-revenue base design must not divide by zero."""
+    sweep = SweepResult(
+        grid=_grid(["base", "alt"]),
+        results=_result([[0.0, 0.0], [1.0, 1.0]],
+                        [[N_EVENTS + 1] * 2] * 2),
+        n_events=N_EVENTS)
+    rows = sweep.delta_table()
+    assert np.isfinite(rows[1]["revenue_lift"])
+    assert rows[1]["revenue_lift"] > 0
+
+
+def test_format_delta_table_shape():
+    sweep = SweepResult(
+        grid=_grid(["base", "alt"]),
+        results=_result([[3.0, 1.0], [4.0, 2.0]],
+                        [[4, N_EVENTS + 1], [2, N_EVENTS]]),
+        n_events=N_EVENTS)
+    lines = sweep.format_delta_table().splitlines()
+    assert len(lines) == 2 + 2                  # header + rule + 2 rows
+    assert lines[0].split()[0] == "scenario"

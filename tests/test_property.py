@@ -1,4 +1,6 @@
 """Hypothesis property tests on the system's invariants."""
+import functools
+
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
@@ -96,6 +98,38 @@ def test_error_feedback_preserves_mass(x):
     recon = np.asarray(dequantize_int8(q, scale, x.shape[0]))
     np.testing.assert_allclose(recon + np.asarray(err1), x, rtol=1e-4,
                                atol=1e-4)
+
+
+_SWEEP_N, _SWEEP_C = 512, 8        # canonical reduce block = 512/32 = 16
+
+
+@functools.lru_cache(maxsize=1)
+def _sweep_env():
+    from repro.data import make_synthetic_env
+    return make_synthetic_env(jax.random.PRNGKey(3), n_events=_SWEEP_N,
+                              n_campaigns=_SWEEP_C, emb_dim=6)
+
+
+@given(st.sampled_from([16, 32, 64, 128, 256, 512]),
+       st.floats(0.7, 1.4), st.floats(0.2, 2.0))
+def test_chunked_sweep_bitwise_any_aligned_chunk(epc, bid, bud):
+    """Event-chunked streaming is bit-for-bit the in-memory batched sweep
+    for EVERY aligned chunk size (multiples of the canonical reduce block
+    dividing N), across random scenario designs — the executor-layer
+    analogue of the mesh-invariance property."""
+    from repro.core import ScenarioGrid, sweep_state_machine
+    env = _sweep_env()
+    grid = ScenarioGrid.product(AuctionRule.first_price(_SWEEP_C),
+                                env.budgets, bid_scales=[1.0, bid],
+                                budget_scales=[1.0, bud])
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp")
+    out = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp", chunks=epc)
+    for name, a, b in zip(("final_spend", "cap_times", "retired",
+                           "boundaries", "num_rounds", "n_hat"), out, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"chunks={epc}: {name}")
 
 
 @given(st.lists(st.integers(1, 100), min_size=1, max_size=8),

@@ -379,6 +379,27 @@ def test_fused_sharded_retired_lanes_4dev():
     assert "FUSED_SHARDED_4DEV_OK" in out.stdout
 
 
+def test_one_launch_vmem_fallback(env, monkeypatch):
+    """The one-launch fused round is only selected when its resident state
+    fits the VMEM budget (docs/ALGORITHMS.md: S=32 fits at C=1024, S=64
+    does not); past it the executor falls back to the two-pass
+    sweep_partials shape, which must stay bit-identical — forced here by
+    shrinking the budget so the fallback triggers at test sizes."""
+    from repro.core import executor
+    assert executor.round_fused_fits(32, 1024)
+    assert not executor.round_fused_fits(64, 1024)
+    grid = _grid(env, "first_price")
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp")
+    monkeypatch.setattr(executor, "ONE_LAUNCH_VMEM_BYTES", 1)
+    out = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="fused", interpret=True,
+                              block_t=128)   # fresh jit key -> retrace
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(ref[1]))
+
+
 def test_auto_resolve_never_selects_interpret_pallas(env):
     """Satellite regression: BENCH_sweep.json shows interpret-mode pallas
     several times slower than vmapped jnp at the sweep layer on CPU, so
@@ -470,6 +491,184 @@ def test_sweep_rejects_unknown_driver(env):
     grid = _grid(env, "first_price")
     with pytest.raises(ValueError, match="unknown sweep driver"):
         sweep_parallel(env.values, grid.budgets, grid.rules, driver="mpi")
+
+
+# ---------------------------------------------------------------------------
+# (e) event-chunked streaming: chunked == in-memory, bit-for-bit
+# ---------------------------------------------------------------------------
+
+ALIGNED_CHUNKS = (128, 512, 2048, N_EVENTS)   # reduce block @ N=4096 is 128
+
+
+def test_chunked_sweep_bitwise_aligned_sizes(env):
+    """The streaming sweep (per-round chunk scan accumulating canonical
+    partials via index_offset) is bit-for-bit the in-memory batched driver
+    on EVERY loop output, for several aligned chunk sizes, on both the jnp
+    and the fused-oracle back-ends."""
+    grid = _skewed_grid(env)
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp")
+    names = ("final_spend", "cap_times", "retired", "boundaries",
+             "num_rounds", "n_hat")
+    for resolve in ("jnp", "fused"):
+        for epc in ALIGNED_CHUNKS:
+            out = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                                      resolve=resolve, chunks=epc)
+            for name, a, b in zip(names, out, ref):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"chunks={epc} resolve={resolve}: {name}")
+
+
+def test_chunked_sweep_parallel_and_engine(env):
+    """chunks= through the public wrappers: sweep_parallel and
+    engine.sweep produce the identical SimResult / delta table."""
+    from repro.core import ChunkSpec
+    grid = _grid(env, "second_price")
+    ref = sweep_parallel(env.values, grid.budgets, grid.rules)
+    out = sweep_parallel(env.values, grid.budgets, grid.rules,
+                         chunks=ChunkSpec(events_per_chunk=256))
+    np.testing.assert_array_equal(np.asarray(out.final_spend),
+                                  np.asarray(ref.final_spend))
+    np.testing.assert_array_equal(np.asarray(out.cap_times),
+                                  np.asarray(ref.cap_times))
+    engine = CounterfactualEngine(env.values, env.budgets)
+    egrid = engine.grid(bid_scales=[1.0, 1.1])
+    np.testing.assert_array_equal(
+        np.asarray(engine.sweep(egrid, chunks=512).results.final_spend),
+        np.asarray(engine.sweep(egrid).results.final_spend))
+
+
+def test_chunked_pallas_kernel_matches_jnp(env):
+    """Chunked + resolve="pallas" (interpret-mode kernel per chunk): cap
+    times exact, spends within kernel tolerance of the unchunked jnp
+    sweep."""
+    grid = _grid(env, "first_price")
+    ref = sweep_parallel(env.values, grid.budgets, grid.rules,
+                         resolve="jnp")
+    out = sweep_parallel(env.values, grid.budgets, grid.rules,
+                         resolve="pallas", interpret=True, chunks=512)
+    np.testing.assert_allclose(np.asarray(out.final_spend),
+                               np.asarray(ref.final_spend),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(out.cap_times),
+                                  np.asarray(ref.cap_times))
+
+
+def test_chunked_sharded_1dev_bitwise(env):
+    """chunking × sharding on the trivial mesh (the 4-device half runs in
+    test_chunked_sharded_4dev / tests/test_sharded_sweep.py): still the
+    in-memory bits."""
+    grid = _grid(env, "first_price")
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp")
+    spec = SweepMeshSpec.for_devices(num_event_devices=1)
+    out = sweep_sharded(env.values, grid.budgets, grid.rules, spec,
+                        chunks=512)
+    for name, a, b in zip(("final_spend", "cap_times", "retired",
+                           "boundaries", "num_rounds", "n_hat"), out, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+@pytest.mark.slow
+def test_chunked_sharded_4dev_bitwise():
+    """Acceptance: chunked == in-memory batched, bit-for-bit, composed with
+    driver="sharded" at 4 forced host devices (several aligned chunk
+    sizes), via the public sweep_parallel driver axis."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    from pathlib import Path
+    script = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        assert len(jax.devices()) == 4
+        from repro.core import AuctionRule, ScenarioGrid, sweep_parallel
+        from repro.data import make_synthetic_env
+        from repro.launch.mesh import SweepMeshSpec
+        env = make_synthetic_env(jax.random.PRNGKey(1), n_events=4096,
+                                 n_campaigns=16, emb_dim=8)
+        base = AuctionRule.first_price(16)
+        grid = ScenarioGrid.product(base, env.budgets,
+                                    bid_scales=[1.0, 1.2],
+                                    budget_scales=[1.0, 0.25, 1e6])
+        ref = sweep_parallel(env.values, grid.budgets, grid.rules)
+        spec = SweepMeshSpec.for_devices(num_event_devices=4)
+        for epc in (128, 512, 1024):   # local_n = 1024
+            out = sweep_parallel(env.values, grid.budgets, grid.rules,
+                                 driver="sharded", mesh=spec, chunks=epc)
+            assert np.array_equal(np.asarray(out.final_spend),
+                                  np.asarray(ref.final_spend)), epc
+            assert np.array_equal(np.asarray(out.cap_times),
+                                  np.asarray(ref.cap_times)), epc
+        print("CHUNKED_SHARDED_4DEV_OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "CHUNKED_SHARDED_4DEV_OK" in out.stdout
+
+
+def test_misaligned_chunk_sizes_raise(env):
+    """The mesh's pad-or-error contract, on the chunk axis: chunks not
+    holding whole canonical blocks, or not dividing the event count."""
+    grid = _grid(env, "first_price")
+    with pytest.raises(ValueError, match="chunk/grid misalignment"):
+        sweep_parallel(env.values, grid.budgets, grid.rules, chunks=100)
+    with pytest.raises(ValueError, match="ragged chunk"):
+        # holds whole 128-blocks but does not divide N=4096
+        sweep_parallel(env.values, grid.budgets, grid.rules, chunks=1536)
+    with pytest.raises(ValueError, match="events_per_chunk"):
+        sweep_parallel(env.values, grid.budgets, grid.rules, chunks=0)
+
+
+def test_engine_chunks_require_parallel_method(env):
+    engine = CounterfactualEngine(env.values, env.budgets)
+    grid = engine.grid(bid_scales=[1.0, 1.1])
+    with pytest.raises(ValueError, match="chunks"):
+        engine.sweep(grid, method="sort2aggregate", chunks=256)
+
+
+def test_unknown_driver_and_resolve_errors_are_consistent(env):
+    """Satellite: every entry point raises the SAME ValueError text for a
+    bad driver/resolve string (the executor owns validation)."""
+    grid = _grid(env, "first_price")
+    engine = CounterfactualEngine(env.values, env.budgets)
+
+    def msg(fn):
+        with pytest.raises(ValueError) as e:
+            fn()
+        return str(e.value)
+
+    driver_msgs = {
+        msg(lambda: sweep_parallel(env.values, grid.budgets, grid.rules,
+                                   driver="mpi")),
+        msg(lambda: engine.sweep(engine.grid(bid_scales=[1.0]),
+                                 driver="mpi")),
+    }
+    assert len(driver_msgs) == 1
+    assert "unknown sweep driver: 'mpi'" in driver_msgs.pop()
+
+    resolve_msgs = {
+        msg(lambda: sweep_parallel(env.values, grid.budgets, grid.rules,
+                                   resolve="cuda")),
+        msg(lambda: sweep_state_machine(env.values, grid.budgets,
+                                        grid.rules, resolve="cuda")),
+        msg(lambda: parallel_simulate(env.values, env.budgets,
+                                      AuctionRule.first_price(N_CAMPAIGNS),
+                                      driver="device", resolve="cuda")),
+    }
+    assert len(resolve_msgs) == 1
+    assert "unknown resolve back-end: 'cuda'" in resolve_msgs.pop()
+
+    assert "unknown driver: 'mpi'" in msg(
+        lambda: parallel_simulate(env.values, env.budgets,
+                                  AuctionRule.first_price(N_CAMPAIGNS),
+                                  driver="mpi"))
 
 
 # ---------------------------------------------------------------------------

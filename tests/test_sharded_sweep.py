@@ -125,6 +125,65 @@ def test_sharded_fused_round_event_and_scenario_mesh(env):
 
 
 @needs_4_devices
+def test_chunked_sharded_sweep_bit_for_bit(env):
+    """chunking × sharding: each device scans its 1024-event shard in fixed
+    chunks per round; the accumulated canonical partials psum to the exact
+    single-device tensor, so every loop output stays bitwise."""
+    grid = _grid(env)
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp")
+    spec = SweepMeshSpec.for_devices(num_event_devices=4)
+    for epc in (128, 256, 1024):
+        out = sweep_sharded(env.values, grid.budgets, grid.rules, spec,
+                            chunks=epc)
+        _assert_bitwise(out, ref, f"chunked sharded epc={epc}")
+
+
+@needs_4_devices
+def test_chunked_sharded_fused_and_scenario_mesh(env):
+    """Chunking composes with the fused back-end (per-chunk sweep_partials
+    kernel passes) and with a 2×2 event×scenario mesh."""
+    grid = _grid(env)
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp")
+    spec = SweepMeshSpec.for_devices(num_event_devices=4)
+    out = sweep_sharded(env.values, grid.budgets, grid.rules, spec,
+                        resolve="fused", chunks=512)
+    _assert_bitwise(out, ref, "chunked fused (oracle)")
+    spec22 = SweepMeshSpec.for_devices(num_event_devices=2,
+                                       num_scenario_devices=2)
+    out = sweep_sharded(env.values, grid.budgets, grid.rules, spec22,
+                        chunks=256)
+    _assert_bitwise(out, ref, "chunked 2x2")
+
+
+@needs_4_devices
+def test_chunk_must_divide_local_shard(env):
+    """A chunk size that is block-aligned but ragged against the per-device
+    shard (1024 events) raises the pad-or-error contract."""
+    grid = _grid(env)
+    spec = SweepMeshSpec.for_devices(num_event_devices=4)
+    with pytest.raises(ValueError, match="ragged chunk"):
+        sweep_sharded(env.values, grid.budgets, grid.rules, spec,
+                      chunks=768)
+
+
+@needs_4_devices
+def test_mesh_spec_plan_composes_chunking(env):
+    """SweepMeshSpec.plan(...) builds the sharded plan with a chunk axis;
+    executing it matches the wrapper entry point."""
+    from repro.core import execute_sweep
+    grid = _grid(env)
+    spec = SweepMeshSpec.for_devices(num_event_devices=4)
+    assert spec.local_event_count(N_EVENTS) == 1024
+    plan = spec.plan(resolve="jnp", chunks=256)
+    out = execute_sweep(env.values, grid.budgets, grid.rules, plan)
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp")
+    _assert_bitwise(out, ref, "spec.plan chunked")
+
+
+@needs_4_devices
 def test_ragged_event_shard_raises(env):
     """N not divisible by the event-device count: explicit pad-or-error."""
     grid = _grid(env)
