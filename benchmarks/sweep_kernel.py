@@ -28,6 +28,14 @@ Four layers; the first three for S in a configurable schedule (default
   N grows — the chunked path re-resolves each chunk once per reduction
   window, so CPU numbers are an upper bound on the TPU story (where the
   chunk scan is what lets N outgrow HBM at all).
+* ``search`` — scenario-space search (``engine.search``, successive halving
+  over the reserve axis) vs the exhaustive grid at the resolution the
+  search converges to, timed with ``common.time_pair`` interleaved medians
+  and reported with the evaluation counts from the search ledger. Written
+  to its OWN json section (``sweep_search``) so the CI invocation that runs
+  only this layer (``--layers search``) does not clobber the kernel rows.
+
+``--layers`` selects a subset (default: all).
 
 Besides the usual CSV rows on stdout, merges a JSON perf section (default
 ``BENCH_sweep.json``, key ``sweep_kernel``, tagged with ``device_count``)
@@ -49,11 +57,15 @@ from benchmarks.common import (bench_report, emit, sweep_argparser,
                                time_call, time_pair, update_bench_json)
 
 
+LAYERS = ("resolve", "round", "sweep", "stream", "search")
+
+
 def main(n_events: int = 2048, n_campaigns: int = 32,
          s_values=(1, 8, 32), block_t: int = 256,
          out: str = "BENCH_sweep.json",
          stream_n_values=(2048, 4096, 8192),
-         stream_chunk: int = 1024) -> None:
+         stream_chunk: int = 1024,
+         layers=LAYERS) -> None:
     import jax
     import jax.numpy as jnp
 
@@ -110,63 +122,69 @@ def main(n_events: int = 2048, n_campaigns: int = 32,
         return _reduce(winners, prices, b, s_hat, act, n_hat)
 
     round_gate = {}
-    for s_count in s_values:
+    kernel_layers = {"resolve", "round", "sweep"} & set(layers)
+    for s_count in (s_values if kernel_layers else ()):
         scales = [1.0 + 0.02 * i for i in range(s_count)]
         grid = ScenarioGrid.product(base, env.budgets, bid_scales=scales)
         act = jnp.ones((s_count, n_campaigns), bool)
 
-        _, us = time_call(lambda: sweep_resolve(
-            env.values, grid.rules.multipliers, act, grid.rules.reserve,
-            block_t=block_t)[2], repeats=2, warmup=1)
-        record(s_count, "resolve", "pallas", us)
+        if "resolve" in layers:
+            _, us = time_call(lambda: sweep_resolve(
+                env.values, grid.rules.multipliers, act, grid.rules.reserve,
+                block_t=block_t)[2], repeats=2, warmup=1)
+            record(s_count, "resolve", "pallas", us)
 
-        _, us = time_call(lambda: jax.vmap(
-            lambda a, r: auction.resolve(env.values, a, r),
-            in_axes=(0, 0))(act, grid.rules)[1], repeats=2, warmup=1)
-        record(s_count, "resolve", "vmap_jnp", us)
+            _, us = time_call(lambda: jax.vmap(
+                lambda a, r: auction.resolve(env.values, a, r),
+                in_axes=(0, 0))(act, grid.rules)[1], repeats=2, warmup=1)
+            record(s_count, "resolve", "vmap_jnp", us)
 
-        # round layer: mid-sweep state (everyone active, frontier at 0)
-        b = grid.budgets.astype(jnp.float32)
-        s_hat = jnp.zeros((s_count, n_campaigns), jnp.float32)
-        n_hat = jnp.zeros((s_count,), jnp.int32)
-        rounds = sweep_state_machine(env.values, grid.budgets, grid.rules,
-                                     resolve="jnp")[4]
-        counts = [int(r) for r in rounds]
-        hist = {}
-        for r in counts:
-            hist[str(r)] = hist.get(str(r), 0) + 1
+        if "round" in layers:
+            # round layer: mid-sweep state (everyone active, frontier at 0)
+            b = grid.budgets.astype(jnp.float32)
+            s_hat = jnp.zeros((s_count, n_campaigns), jnp.float32)
+            n_hat = jnp.zeros((s_count,), jnp.int32)
+            rounds = sweep_state_machine(env.values, grid.budgets,
+                                         grid.rules, resolve="jnp")[4]
+            counts = [int(r) for r in rounds]
+            hist = {}
+            for r in counts:
+                hist[str(r)] = hist.get(str(r), 0) + 1
 
-        def fused():
-            return fused_round_dispatch(act, grid.rules, b, s_hat, n_hat)[0]
+            def fused():
+                return fused_round_dispatch(act, grid.rules, b, s_hat,
+                                            n_hat)[0]
 
-        def unfused():
-            winners, prices = resolve_dispatch(act, grid.rules)
-            return reduce_dispatch(winners, prices, b, s_hat, act, n_hat)[0]
+            def unfused():
+                winners, prices = resolve_dispatch(act, grid.rules)
+                return reduce_dispatch(winners, prices, b, s_hat, act,
+                                       n_hat)[0]
 
-        # interleaved pairwise timing: load drift on a shared machine hits
-        # both paths alike, so the medians stay comparable (a sequential
-        # A-then-B measurement here can swing either way by 2x)
-        us_fused, us_unfused = time_pair(fused, unfused, repeats=15,
-                                         warmup=2)
-        record(s_count, "round", "fused_oracle", us_fused,
-               round_counts=counts, round_count_hist=hist)
-        record(s_count, "round", "resolve+reduce", us_unfused,
-               round_counts=counts, round_count_hist=hist)
-        round_gate[s_count] = (us_fused, us_unfused)
+            # interleaved pairwise timing: load drift on a shared machine
+            # hits both paths alike, so the medians stay comparable (a
+            # sequential A-then-B measurement here can swing either way 2x)
+            us_fused, us_unfused = time_pair(fused, unfused, repeats=15,
+                                             warmup=2)
+            record(s_count, "round", "fused_oracle", us_fused,
+                   round_counts=counts, round_count_hist=hist)
+            record(s_count, "round", "resolve+reduce", us_unfused,
+                   round_counts=counts, round_count_hist=hist)
+            round_gate[s_count] = (us_fused, us_unfused)
 
-        _, us = time_call(lambda: sweep_parallel(
-            env.values, grid.budgets, grid.rules,
-            resolve="pallas").final_spend, repeats=1, warmup=1)
-        record(s_count, "sweep", "pallas", us)
+        if "sweep" in layers:
+            _, us = time_call(lambda: sweep_parallel(
+                env.values, grid.budgets, grid.rules,
+                resolve="pallas").final_spend, repeats=1, warmup=1)
+            record(s_count, "sweep", "pallas", us)
 
-        _, us = time_call(lambda: sweep_parallel(
-            env.values, grid.budgets, grid.rules,
-            resolve="jnp").final_spend, repeats=1, warmup=1)
-        record(s_count, "sweep", "vmap_jnp", us)
+            _, us = time_call(lambda: sweep_parallel(
+                env.values, grid.budgets, grid.rules,
+                resolve="jnp").final_spend, repeats=1, warmup=1)
+            record(s_count, "sweep", "vmap_jnp", us)
 
     # --- stream layer: events/sec vs N at a fixed chunk size ---------------
     stream_s = 8
-    for n_stream in stream_n_values:
+    for n_stream in (stream_n_values if "stream" in layers else ()):
         env_n = make_synthetic_env(jax.random.PRNGKey(0), n_events=n_stream,
                                    n_campaigns=n_campaigns, emb_dim=8)
         grid_n = ScenarioGrid.product(
@@ -193,9 +211,50 @@ def main(n_events: int = 2048, n_campaigns: int = 32,
                 "us_per_call": round(us, 1),
                 "events_per_sec": round(ev_per_sec, 1)})
 
-    update_bench_json(out, "sweep_kernel", bench_report(
-        records, n_events=n_events, n_campaigns=n_campaigns,
-        block_t=block_t, pallas_interpret=not ON_TPU))
+    # --- search layer: optimizer vs exhaustive grid at equal resolution ----
+    if "search" in layers:
+        import numpy as np
+
+        from repro.core import CounterfactualEngine
+        from repro.search import SearchSpace
+
+        engine = CounterfactualEngine(env.values, env.budgets,
+                                      base_rule=base)
+        space = SearchSpace(reserve=(0.0, 0.4))
+        xatol = 0.05                       # -> 1/xatol + 1 = 21 grid points
+        grid_pts = list(np.linspace(0.0, 0.4, int(round(1 / xatol)) + 1))
+
+        def run_search():
+            return engine.search(space, method="halving", budget=64,
+                                 num_candidates=8, xatol=xatol)
+
+        def run_grid():
+            g = engine.grid(reserves=grid_pts)
+            return engine.sweep(g).results.revenue.block_until_ready()
+
+        res = run_search()                 # evaluation counts off-clock
+        us_s, us_g = time_pair(run_search, run_grid, repeats=7, warmup=1)
+        search_records = []
+        for path, us, n_evals in (("halving", us_s, res.evaluations),
+                                  ("exhaustive_grid", us_g,
+                                   len(grid_pts))):
+            emit(f"search_{path}", us, f"evaluations={n_evals}")
+            search_records.append({
+                "layer": "search", "path": path, "us_per_call": round(us, 1),
+                "evaluations": n_evals,
+                "evals_per_sec": round(n_evals / (us * 1e-6), 2)})
+        print(f"search: {res.evaluations} evaluations vs "
+              f"{len(grid_pts)}-point grid, best reserve "
+              f"{res.best_point['reserve']:.3f} "
+              f"(converged={res.converged})")
+        update_bench_json(out, "sweep_search", bench_report(
+            search_records, n_events=n_events, n_campaigns=n_campaigns,
+            search_budget=64, xatol=xatol))
+
+    if records:
+        update_bench_json(out, "sweep_kernel", bench_report(
+            records, n_events=n_events, n_campaigns=n_campaigns,
+            block_t=block_t, pallas_interpret=not ON_TPU))
 
     # CI gate: the fused round oracle must beat (or at worst match) the
     # unfused resolve+reduce dispatch pair at the largest S on CPU — if
@@ -220,6 +279,9 @@ if __name__ == "__main__":
     ap = sweep_argparser(__doc__.splitlines()[0], n_events=2048,
                          n_campaigns=32, s_values=(1, 8, 32), block_t=256,
                          out="BENCH_sweep.json")
+    ap.add_argument("--layers", nargs="+", default=list(LAYERS),
+                    choices=list(LAYERS))
     args = ap.parse_args()
     main(n_events=args.n_events, n_campaigns=args.n_campaigns,
-         s_values=tuple(args.s_values), block_t=args.block_t, out=args.out)
+         s_values=tuple(args.s_values), block_t=args.block_t, out=args.out,
+         layers=tuple(args.layers))

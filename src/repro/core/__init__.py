@@ -10,8 +10,8 @@ from repro.core.vi import (estimate_pi, estimate_pi_sweep, pi_to_cap_times,
 from repro.core.sort2aggregate import (sort2aggregate, refine_segments,
                                        refine_fixed_device,
                                        Sort2AggregateResult)
-from repro.core.executor import (SweepPlan, ChunkSpec, execute_sweep,
-                                 execute_s2a_sweep)
+from repro.core.executor import (SweepPlan, ChunkSpec, ScenarioChunkSpec,
+                                 execute_sweep, execute_s2a_sweep)
 from repro.core.sweep import (sweep_sequential, sweep_parallel,
                               sweep_sort2aggregate, sweep_state_machine,
                               stack_rules, scenario_rule)
@@ -32,7 +32,8 @@ __all__ = [
     "PiEstimate",
     "sort2aggregate", "refine_segments", "refine_fixed_device",
     "Sort2AggregateResult",
-    "SweepPlan", "ChunkSpec", "execute_sweep", "execute_s2a_sweep",
+    "SweepPlan", "ChunkSpec", "ScenarioChunkSpec", "execute_sweep",
+    "execute_s2a_sweep",
     "sweep_sequential", "sweep_parallel", "sweep_sort2aggregate",
     "sweep_state_machine",
     "sweep_sharded", "sweep_sort2aggregate_sharded",

@@ -250,6 +250,7 @@ class CounterfactualEngine:
               driver: str = "batched",
               mesh=None,
               chunks=None,
+              scenario_chunks=None,
               key: Optional[jax.Array] = None) -> SweepResult:
         """Evaluate every scenario in ``grid`` in one batched device program.
 
@@ -304,16 +305,30 @@ class CounterfactualEngine:
         chunks. The (driver, resolve, chunks) triple is executed by the
         unified plan layer (:mod:`repro.core.executor`,
         docs/ARCHITECTURE.md).
+
+        ``scenario_chunks`` (``method="parallel"`` only; an int or
+        :class:`~repro.core.executor.ScenarioChunkSpec`) runs the loop
+        over fixed scenario slices — bit-for-bit the unchunked sweep for
+        chunk sizes dividing the per-device scenario count (pad-or-error
+        otherwise), bounding per-round intermediates by the chunk instead
+        of the whole grid. Composes with ``driver=``, ``resolve=`` and
+        event ``chunks=``.
         """
         # one validation path for the (driver, resolve, chunks) triple —
         # the executor raises the same errors for every entry point
         plan = plan_for_driver(driver, resolve=resolve, mesh=mesh,
-                               chunks=chunks)
+                               chunks=chunks,
+                               scenario_chunks=scenario_chunks)
         if chunks is not None and method != "parallel":
             raise ValueError(
                 "chunks= (event-chunked streaming) currently applies to "
                 "method='parallel' sweeps only; drop chunks= for "
                 f"method={method!r}.")
+        if scenario_chunks is not None and method != "parallel":
+            raise ValueError(
+                "scenario_chunks= (scenario-chunked execution) currently "
+                "applies to method='parallel' sweeps only; drop "
+                f"scenario_chunks= for method={method!r}.")
         warm_start = {True: "base", False: None}.get(warm_start, warm_start)
         if warm_start not in (None, "base", "per_scenario"):
             raise ValueError(
@@ -356,6 +371,90 @@ class CounterfactualEngine:
         return SweepResult(grid=grid, results=results,
                            n_events=self.n_events, base_index=base_index,
                            consistency_gaps=gaps, refine_iters=iters)
+
+    def grid_from_points(self, points: Sequence[dict]) -> ScenarioGrid:
+        """A :class:`ScenarioGrid` from search-space points: each point is a
+        ``{axis: float}`` dict over ``bid_scale`` / ``reserve`` /
+        ``budget_scale``, applied to this engine's base design (missing axes
+        stay at the base — the same semantics as
+        :meth:`ScenarioGrid.product`, for an arbitrary point set instead of
+        a cartesian product)."""
+        scenarios, labels = [], []
+        for p in points:
+            bid = float(p.get("bid_scale", 1.0))
+            res = float(p.get("reserve", float(self.base_rule.reserve)))
+            bud = float(p.get("budget_scale", 1.0))
+            rule = AuctionRule(
+                multipliers=self.base_rule.multipliers * jnp.float32(bid),
+                reserve=jnp.asarray(res, jnp.float32),
+                kind=self.base_rule.kind)
+            scenarios.append((rule, self.budgets * jnp.float32(bud)))
+            labels.append(f"bid×{bid:g} res={res:g} bud×{bud:g}")
+        return ScenarioGrid.from_scenarios(scenarios, labels)
+
+    def search(self, space, *,
+               objective="revenue",
+               constraints=(),
+               method: str = "hillclimb",
+               budget: int = 256,
+               resolve: str = "auto",
+               driver: str = "batched",
+               mesh=None,
+               chunks=None,
+               scenario_chunks=None,
+               **options):
+        """Optimize the scenario design over ``space`` with the batched
+        sweep as the inner loop — "what reserve maximizes revenue subject
+        to cap-out < 10%?" as one call.
+
+        ``space`` is a :class:`repro.search.SearchSpace` bounding any of
+        the grid axes (``bid_scale``, ``reserve``, ``budget_scale``);
+        ``objective`` an :data:`repro.search.OBJECTIVES` name or a callable
+        ``SweepResult -> (S,) scores`` (maximized); ``constraints`` a
+        sequence of callables ``SweepResult -> (S,) margins`` (e.g.
+        :class:`repro.search.CapRateCeiling`). ``method`` picks the
+        optimizer: ``"hillclimb"`` (coordinate pattern search, default) or
+        ``"halving"`` (successive halving over shrinking boxes); extra
+        ``options`` go to it verbatim (``num_candidates``, ``xatol``,
+        ``init``, …).
+
+        ``budget`` caps the TOTAL scenario evaluations. Every proposal
+        batch is charged to an :class:`repro.search.EvaluationLedger`
+        before it runs, so the search can never silently over-spend; the
+        returned :class:`repro.search.SearchResult` carries the ledger,
+        the full trajectory, and ``converged``.
+
+        ``resolve`` / ``driver`` / ``mesh`` / ``chunks`` /
+        ``scenario_chunks`` configure the inner
+        :meth:`sweep(method="parallel") <sweep>` exactly as they do there
+        (validated up front, same error contract), so a search scales out
+        over a mesh or chunks its batches like any sweep.
+        """
+        from repro import search as search_lib
+        # fail fast on the execution plan, with the executor's one error
+        # contract, before any evaluation is spent
+        plan_for_driver(driver, resolve=resolve, mesh=mesh, chunks=chunks,
+                        scenario_chunks=scenario_chunks)
+        objective_fn = search_lib.as_objective(objective)
+        ledger = search_lib.EvaluationLedger(budget=int(budget))
+
+        def evaluate(points, note):
+            del note
+            swept = self.sweep(
+                self.grid_from_points(points), method="parallel",
+                resolve=resolve, driver=driver, mesh=mesh, chunks=chunks,
+                scenario_chunks=scenario_chunks)
+            return search_lib.score_sweep(swept, objective_fn, constraints)
+
+        if method == "halving":
+            return search_lib.successive_halving(evaluate, space, ledger,
+                                                 **options)
+        if method == "hillclimb":
+            return search_lib.coordinate_hillclimb(evaluate, space, ledger,
+                                                   **options)
+        names = ", ".join(repr(m) for m in search_lib.SEARCH_METHODS)
+        raise ValueError(
+            f"unknown search method: {method!r} (choose from {names})")
 
     def _base_warm_caps(self, grid: ScenarioGrid, base_index: int,
                         driver: str, mesh, refine_iters: int,

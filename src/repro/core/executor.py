@@ -21,6 +21,14 @@ axis of the execution —
   ``(S, 32, C)`` spend partials chunk-by-chunk via the same ``index_offset``
   mechanism the mesh shards use, so only one chunk's per-event intermediates
   are live at a time;
+* **scenario_chunks** — optional scenario-chunked execution
+  (:class:`ScenarioChunkSpec`): the whole round program is scanned over
+  fixed slices of the scenario axis. Lanes are independent (carried burnout
+  state is per-scenario; finished lanes are frozen by select), so scenario
+  chunks are bit-for-bit the unchunked program and compose with every other
+  axis. When the fused one-launch round would exceed its VMEM gate, the
+  executor auto-picks a fitting scenario chunk (:func:`planned_scenario_chunk`)
+  instead of degrading to the two-pass shape;
 * **skip_retired / block_t / interpret** — kernel knobs, unchanged.
 
 and :func:`execute_sweep` generates the program. The legacy entry points are
@@ -165,6 +173,50 @@ def as_chunk_spec(chunks) -> Optional[ChunkSpec]:
 
 
 @dataclasses.dataclass(frozen=True)
+class ScenarioChunkSpec:
+    """Scenario-chunked execution: run the S-lane loop ``scenarios_per_chunk``
+    lanes at a time.
+
+    The executor's whole round program — round body, while_loop, frozen-lane
+    select — is generated once and scanned (``lax.map``) over fixed slices of
+    the scenario axis, exactly as :class:`ChunkSpec` scans the event axis.
+    The carried burnout state ``(s_hat, active, cap_times, n_hat)`` is
+    per-scenario and lanes never read other lanes' state (finished lanes are
+    frozen by select, so a chunk's extra or missing rounds are no-ops), which
+    makes scenario chunks *independent*: results are bit-for-bit those of
+    the unchunked program for any chunk size dividing the per-device
+    scenario count (:func:`check_scenario_chunks`; misaligned sizes raise
+    the same pad-or-error contract as event chunks and meshes).
+
+    Composes with every placement, resolve back-end and event ``chunks=``:
+    under ``placement="sharded"`` each scenario-axis device slice scans its
+    own lanes chunk-by-chunk, and ``resolve="fused"`` runs the one-launch
+    ``round_fused`` kernel per chunk — which is how a sweep whose full S
+    does not fit :data:`ONE_LAUNCH_VMEM_BYTES` keeps the one-launch shape
+    instead of degrading to two-pass (the executor auto-picks a fitting
+    chunk; :func:`planned_scenario_chunk`). Peak memory for per-round
+    intermediates drops from O(S · …) to O(scenarios_per_chunk · …) at the
+    cost of serial depth across chunks.
+    """
+
+    scenarios_per_chunk: int
+
+    def __post_init__(self):
+        if self.scenarios_per_chunk < 1:
+            raise ValueError(
+                f"ScenarioChunkSpec.scenarios_per_chunk must be >= 1, got "
+                f"{self.scenarios_per_chunk}")
+
+
+def as_scenario_chunk_spec(scenario_chunks) -> Optional[ScenarioChunkSpec]:
+    """Normalise ``None`` | int | :class:`ScenarioChunkSpec`."""
+    if scenario_chunks is None or isinstance(scenario_chunks,
+                                             ScenarioChunkSpec):
+        return scenario_chunks
+    return ScenarioChunkSpec(scenarios_per_chunk=int(scenario_chunks))
+
+
+@dataclasses.dataclass(frozen=True)
 class SweepPlan:
     """Everything that decides which Algorithm-2 program gets generated.
 
@@ -182,7 +234,11 @@ class SweepPlan:
     * ``skip_retired`` — predicate retired lanes' kernel grid steps off
       (pure wall-clock; results are bit-identical either way);
     * ``mesh`` — :class:`repro.launch.mesh.SweepMeshSpec`, sharded only;
-    * ``chunks`` — optional :class:`ChunkSpec` for event-chunked streaming.
+    * ``chunks`` — optional :class:`ChunkSpec` for event-chunked streaming;
+    * ``scenario_chunks`` — optional :class:`ScenarioChunkSpec`: scan the
+      round program over fixed scenario slices (``None`` also lets the
+      executor auto-pick a VMEM-fitting chunk for the fused one-launch
+      round — see :func:`planned_scenario_chunk`).
     """
 
     placement: str = "batched"
@@ -192,6 +248,7 @@ class SweepPlan:
     skip_retired: bool = True
     mesh: Optional[SweepMeshSpec] = None
     chunks: Optional[ChunkSpec] = None
+    scenario_chunks: Optional[ScenarioChunkSpec] = None
 
     def __post_init__(self):
         if self.placement not in PLACEMENTS:
@@ -204,12 +261,14 @@ class SweepPlan:
                 "placement='sharded' needs mesh=SweepMeshSpec(...); see "
                 "repro.launch.mesh.SweepMeshSpec.for_devices")
         object.__setattr__(self, "chunks", as_chunk_spec(self.chunks))
+        object.__setattr__(self, "scenario_chunks",
+                           as_scenario_chunk_spec(self.scenario_chunks))
 
 
 def plan_for_driver(driver: str, *, resolve: str = "auto",
                     block_t: int = 256, interpret: Optional[bool] = None,
                     skip_retired: bool = True, mesh=None,
-                    chunks=None) -> SweepPlan:
+                    chunks=None, scenario_chunks=None) -> SweepPlan:
     """Build the plan for a legacy ``driver=`` string (``sweep_parallel`` /
     ``engine.sweep``), with the one consistent unknown-driver error."""
     if driver not in SWEEP_DRIVERS:
@@ -221,7 +280,8 @@ def plan_for_driver(driver: str, *, resolve: str = "auto",
     return SweepPlan(placement=driver, resolve=resolve, block_t=block_t,
                      interpret=interpret, skip_retired=skip_retired,
                      mesh=mesh if driver == "sharded" else None,
-                     chunks=as_chunk_spec(chunks))
+                     chunks=as_chunk_spec(chunks),
+                     scenario_chunks=as_scenario_chunk_spec(scenario_chunks))
 
 
 # ---------------------------------------------------------------------------
@@ -327,6 +387,28 @@ def check_chunks(chunks: Optional[ChunkSpec], *, n_events: int,
             "divides the per-device event count, or drop chunks=.")
 
 
+def check_scenario_chunks(scenario_chunks: Optional[ScenarioChunkSpec], *,
+                          n_scenarios: int, local_s: int) -> None:
+    """The scenario-chunk alignment contract (the S-axis pad-or-error).
+
+    Unlike event chunks there is no reduction-grid constraint on the
+    scenario axis — lanes are independent — so the only requirement is that
+    chunks evenly divide the per-device scenario count, making every scan
+    step a full chunk.
+    """
+    if scenario_chunks is None:
+        return
+    spc = scenario_chunks.scenarios_per_chunk
+    if local_s % spc != 0:
+        raise ValueError(
+            f"ragged scenario chunk: {local_s} scenarios per device do not "
+            f"divide into chunks of {spc} (remainder {local_s % spc}). Pad "
+            "the grid with repeats of the base design (duplicate lanes run "
+            "the identical per-lane program, so they cannot change any "
+            "other lane's bits), pick a scenario-chunk size that divides "
+            "the per-device scenario count, or drop scenario_chunks=.")
+
+
 # One-launch fused-round VMEM budget: the kernel keeps TWO (S, G, C_pad)
 # float32 partials blocks + a (block_t, C_pad) values tile + ~6 (S, C_pad)
 # scenario-state blocks resident (docs/ALGORITHMS.md budget table: S=32
@@ -335,17 +417,66 @@ def check_chunks(chunks: Optional[ChunkSpec], *, n_events: int,
 ONE_LAUNCH_VMEM_BYTES = 12 << 20
 
 
+def round_fused_bytes(n_scenarios: int, n_campaigns: int,
+                      block_t: int = 256) -> int:
+    """Resident float32 bytes the one-launch ``round_fused`` kernel keeps in
+    VMEM: two (S, G, C_pad) partials blocks, one (block_t, C_pad) values
+    tile, ~6 (S, C_pad) scenario-state blocks."""
+    c_pad = -(-n_campaigns // 128) * 128
+    return (2 * n_scenarios * seg_lib.REDUCE_BLOCKS * c_pad
+            + block_t * c_pad + 6 * n_scenarios * c_pad) * 4
+
+
 def round_fused_fits(n_scenarios: int, n_campaigns: int,
                      block_t: int = 256) -> bool:
     """Whether the one-launch ``round_fused`` kernel's resident state fits
-    the VMEM budget. Past it the executor falls back to the two-pass shape
-    (one ``sweep_partials`` launch per reduction window — half the resident
-    partials), which produces the identical canonical partials tensor, so
-    the fallback cannot change results."""
-    c_pad = -(-n_campaigns // 128) * 128
-    resident = (2 * n_scenarios * seg_lib.REDUCE_BLOCKS * c_pad
-                + block_t * c_pad + 6 * n_scenarios * c_pad) * 4
-    return resident <= ONE_LAUNCH_VMEM_BYTES
+    the VMEM budget. Past it the executor *scenario-chunks* the loop down to
+    a fitting lane count (:func:`planned_scenario_chunk`) so the round keeps
+    its one-launch shape; only when no chunk fits (or the caller pinned an
+    unfitting explicit ``scenario_chunks=``) does it fall back to the
+    two-pass shape (one ``sweep_partials`` launch per reduction window —
+    half the resident partials). Both alternatives produce the identical
+    canonical partials tensor, so neither gate can change results."""
+    return round_fused_bytes(n_scenarios, n_campaigns,
+                             block_t) <= ONE_LAUNCH_VMEM_BYTES
+
+
+def fitting_scenario_chunk(n_scenarios: int, n_campaigns: int,
+                           block_t: int = 256) -> Optional[int]:
+    """The largest divisor of ``n_scenarios`` whose one-launch fused round
+    fits :data:`ONE_LAUNCH_VMEM_BYTES` (``None`` when even one lane does
+    not fit). Divisors only: every scan step must be a full chunk
+    (:func:`check_scenario_chunks`)."""
+    for spc in range(n_scenarios, 0, -1):
+        if n_scenarios % spc == 0 and \
+                round_fused_fits(spc, n_campaigns, block_t):
+            return spc
+    return None
+
+
+def planned_scenario_chunk(plan: SweepPlan, n_scenarios: int,
+                           n_campaigns: int,
+                           resolve: Optional[str] = None) -> Optional[int]:
+    """The scenario-chunk size ``plan`` will actually execute at, per
+    device (``None`` = the whole local batch in one pass).
+
+    An explicit ``plan.scenario_chunks`` always wins. Otherwise the
+    executor auto-picks a chunk in exactly one situation: the plan wants
+    the fused one-launch round (``resolve="fused"`` where the kernel
+    dispatches, unsharded, no event chunks) but the full batch exceeds the
+    VMEM gate — then the largest fitting divisor keeps every round on the
+    one-launch kernel instead of degrading to two-pass. Exposed as a
+    function so tests (and planners) can ask what the executor will do
+    without tracing it."""
+    if plan.scenario_chunks is not None:
+        return plan.scenario_chunks.scenarios_per_chunk
+    resolve = pick_resolve(plan.resolve) if resolve is None else resolve
+    if (resolve == "fused" and fused_runs_kernel(plan.interpret)
+            and plan.placement != "sharded" and plan.chunks is None
+            and not round_fused_fits(n_scenarios, n_campaigns,
+                                     plan.block_t)):
+        return fitting_scenario_chunk(n_scenarios, n_campaigns, plan.block_t)
+    return None
 
 
 def global_event_offset(event_axes, local_n: int) -> jax.Array:
@@ -608,22 +739,63 @@ def _unpack(core):
     return s_hat, cap, retired, bnds, rnd, n_hat
 
 
+def _run_lanes(plan: SweepPlan, resolve: str, *, values_local, mult_local,
+               res_local, kind, budgets_f32, n_events: int,
+               n_campaigns: int, offset_fn, psum, use_interpret: bool,
+               scenario_axis=None):
+    """Run the local scenario lanes through the round program, scanning
+    fixed scenario chunks when the plan asks for (or auto-picks) them.
+
+    Each chunk builds and runs the IDENTICAL round body + while_loop over
+    its slice of the lane state. Per-lane arithmetic never reads other
+    lanes (resolve/partials/predict/commit are all vmapped per lane, and
+    the loop freezes finished lanes by select, so a chunk looping fewer or
+    more rounds than the full batch changes no lane's bits) — scenario
+    chunks are therefore bit-for-bit the unchunked program, the S-axis
+    analogue of the event-chunk exactness argument.
+    """
+    s_local = budgets_f32.shape[0]
+
+    def run(b_c, mult_c, res_c):
+        rules_c = AuctionRule(multipliers=mult_c, reserve=res_c, kind=kind)
+        round_body = _make_round_body(
+            plan, resolve, values_local=values_local, rules_local=rules_c,
+            budgets_f32=b_c, n_events=n_events, n_campaigns=n_campaigns,
+            offset_fn=offset_fn, psum=psum, use_interpret=use_interpret)
+        return _run_loop(round_body, s_local=b_c.shape[0],
+                         n_events=n_events, n_campaigns=n_campaigns,
+                         scenario_axis=scenario_axis)
+
+    spc = planned_scenario_chunk(plan, s_local, n_campaigns, resolve)
+    if spc is None or spc == s_local:
+        return run(budgets_f32, mult_local, res_local)
+    n_chunks = s_local // spc
+    out = jax.lax.map(
+        lambda xs: run(*xs),
+        (budgets_f32.reshape(n_chunks, spc, n_campaigns),
+         mult_local.reshape(n_chunks, spc, n_campaigns),
+         res_local.reshape(n_chunks, spc)))
+    return jax.tree.map(lambda x: x.reshape((s_local,) + x.shape[2:]), out)
+
+
 @functools.partial(jax.jit, static_argnames=("plan",))
 def _sweep_batched(values, budgets, rules, plan: SweepPlan):
     """The scenario-batched Algorithm-2 loop on one device."""
     check_batch_shapes(values, budgets, rules)
     resolve = pick_resolve(plan.resolve)
     n_events, n_campaigns = values.shape
+    n_scenarios = budgets.shape[0]
     check_chunks(plan.chunks, n_events=n_events, local_n=n_events)
+    check_scenario_chunks(plan.scenario_chunks, n_scenarios=n_scenarios,
+                          local_s=n_scenarios)
     use_interpret = (plan.interpret if plan.interpret is not None
                      else not resolve_ops.ON_TPU)
-    round_body = _make_round_body(
-        plan, resolve, values_local=values, rules_local=rules,
+    core = _run_lanes(
+        plan, resolve, values_local=values, mult_local=rules.multipliers,
+        res_local=jnp.asarray(rules.reserve, jnp.float32), kind=rules.kind,
         budgets_f32=budgets.astype(jnp.float32), n_events=n_events,
         n_campaigns=n_campaigns, offset_fn=lambda: 0, psum=lambda x: x,
         use_interpret=use_interpret)
-    core = _run_loop(round_body, s_local=budgets.shape[0],
-                     n_events=n_events, n_campaigns=n_campaigns)
     return _unpack(core)
 
 
@@ -638,6 +810,9 @@ def _sweep_sharded(values, budgets, rules, plan: SweepPlan):
     n_events, n_campaigns = values.shape
     local_n = n_events // spec.event_device_count
     check_chunks(plan.chunks, n_events=n_events, local_n=local_n)
+    check_scenario_chunks(
+        plan.scenario_chunks, n_scenarios=budgets.shape[0],
+        local_s=budgets.shape[0] // spec.scenario_device_count)
     use_interpret = (plan.interpret if plan.interpret is not None
                      else not resolve_ops.ON_TPU)
     axes = tuple(spec.event_axes)
@@ -653,19 +828,14 @@ def _sweep_sharded(values, budgets, rules, plan: SweepPlan):
         out_specs=(spec_sc2, spec_sc2, spec_sc2, spec_sc2, spec_sc1,
                    spec_sc1))
     def _driver(values_local, b_local, mult_local, res_local):
-        rules_local = AuctionRule(multipliers=mult_local, reserve=res_local,
-                                  kind=rules.kind)
-        round_body = _make_round_body(
+        core = _run_lanes(
             plan, resolve, values_local=values_local,
-            rules_local=rules_local,
+            mult_local=mult_local, res_local=res_local, kind=rules.kind,
             budgets_f32=b_local.astype(jnp.float32), n_events=n_events,
             n_campaigns=n_campaigns,
             offset_fn=lambda: global_event_offset(axes, local_n),
             psum=lambda x: jax.lax.psum(x, axes),
-            use_interpret=use_interpret)
-        core = _run_loop(round_body, s_local=b_local.shape[0],
-                         n_events=n_events, n_campaigns=n_campaigns,
-                         scenario_axis=sc)
+            use_interpret=use_interpret, scenario_axis=sc)
         return _unpack(core)
 
     return _driver(values, budgets, rules.multipliers,
@@ -702,6 +872,11 @@ def check_s2a_options(plan: SweepPlan, record_events: bool = False) -> None:
             "chunks= (event-chunked streaming) currently applies to "
             "method='parallel' sweeps only; drop chunks= for the "
             "sort2aggregate sweep.")
+    if plan.scenario_chunks is not None:
+        raise ValueError(
+            "scenario_chunks= (scenario-chunked execution) currently "
+            "applies to method='parallel' sweeps only; drop "
+            "scenario_chunks= for the sort2aggregate sweep.")
     if plan.placement == "sharded" and record_events:
         raise ValueError(
             "record_events is not supported with driver='sharded': "

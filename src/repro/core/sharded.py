@@ -57,6 +57,7 @@ from repro.compat import axis_size as compat_axis_size, shard_map
 from repro.core import auction
 from repro.core import segments as seg_lib
 from repro.core.executor import (SweepPlan, as_chunk_spec,
+                                 as_scenario_chunk_spec,
                                  check_sharded_shapes as _check_sweep_shapes,
                                  execute_sweep,
                                  global_event_offset as _global_offset)
@@ -324,6 +325,7 @@ def sweep_sharded(
     interpret: Optional[bool] = None,
     skip_retired: bool = True,
     chunks=None,                  # int | ChunkSpec — chunking × sharding
+    scenario_chunks=None,         # int | ScenarioChunkSpec — S-axis chunks
 ):
     """The batched Algorithm-2 loop as ONE mesh program: events sharded over
     ``spec.event_axes``, campaign/scenario state replicated, the scenario
@@ -349,7 +351,10 @@ def sweep_sharded(
     with sharding: each device scans its own shard's chunks before the
     psum, so the per-device working set is O(events_per_chunk · C) — still
     bit-for-bit, for chunk sizes aligned to the canonical grid within the
-    shard.
+    shard. ``scenario_chunks`` scans each device's scenario lanes in fixed
+    slices (chunk sizes must divide the per-device scenario count) — lanes
+    are independent, so this too is bit-for-bit, and it composes with event
+    chunking.
 
     Returns the same batched tuple as ``sweep_state_machine``:
     ``(s_hat (S, C), cap_times (S, C), retired (S, C+1), boundaries
@@ -359,7 +364,8 @@ def sweep_sharded(
     plan = SweepPlan(placement="sharded", mesh=spec, resolve=resolve,
                      block_t=block_t, interpret=interpret,
                      skip_retired=skip_retired,
-                     chunks=as_chunk_spec(chunks))
+                     chunks=as_chunk_spec(chunks),
+                     scenario_chunks=as_scenario_chunk_spec(scenario_chunks))
     return execute_sweep(values, budgets, rules, plan)
 
 

@@ -48,7 +48,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.executor import (SweepPlan, as_chunk_spec, check_batch_shapes,
+from repro.core.executor import (SweepPlan, as_chunk_spec,
+                                 as_scenario_chunk_spec, check_batch_shapes,
                                  execute_sweep, plan_for_driver)
 from repro.core.sequential import sequential_replay
 from repro.core.sort2aggregate import refine_fixed_device
@@ -100,7 +101,7 @@ def sweep_sequential(
 @functools.partial(jax.jit,
                    static_argnames=("resolve", "block_t", "interpret",
                                     "driver", "mesh", "skip_retired",
-                                    "chunks"))
+                                    "chunks", "scenario_chunks"))
 def sweep_parallel(
     values: jax.Array,            # (N, C)
     budgets: jax.Array,           # (S, C)
@@ -112,6 +113,7 @@ def sweep_parallel(
     mesh=None,                    # SweepMeshSpec, driver="sharded" only
     skip_retired: bool = True,
     chunks=None,                  # int | ChunkSpec — event-chunked streaming
+    scenario_chunks=None,         # int | ScenarioChunkSpec — S-axis chunks
 ) -> SimResult:
     """Algorithm 2 over a scenario batch: one device program, serial depth
     ``max_s K_s``. The batched while_loop runs until the slowest scenario
@@ -139,10 +141,17 @@ def sweep_parallel(
       each round over fixed event chunks — bit-for-bit the in-memory
       result on aligned chunk sizes, pad-or-error otherwise. Composes
       with either driver (each mesh shard scans its own chunks).
+    * ``scenario_chunks`` (int or
+      :class:`~repro.core.executor.ScenarioChunkSpec`) scans the loop over
+      fixed scenario slices — lanes are independent, so bit-for-bit the
+      unchunked sweep for any size dividing the per-device scenario count
+      (pad-or-error otherwise). Composes with both drivers, every resolve
+      back-end, and event ``chunks=``.
     """
     plan = plan_for_driver(driver, resolve=resolve, block_t=block_t,
                            interpret=interpret, skip_retired=skip_retired,
-                           mesh=mesh, chunks=chunks)
+                           mesh=mesh, chunks=chunks,
+                           scenario_chunks=scenario_chunks)
     s_hat, cap_times, _, _, _, _ = execute_sweep(values, budgets, rules,
                                                  plan)
     return SimResult(final_spend=s_hat, cap_times=cap_times,
@@ -151,7 +160,8 @@ def sweep_parallel(
 
 @functools.partial(jax.jit,
                    static_argnames=("resolve", "block_t", "interpret",
-                                    "skip_retired", "chunks"))
+                                    "skip_retired", "chunks",
+                                    "scenario_chunks"))
 def sweep_state_machine(
     values: jax.Array,            # (N, C)
     budgets: jax.Array,           # (S, C)
@@ -161,6 +171,7 @@ def sweep_state_machine(
     interpret: Optional[bool] = None,
     skip_retired: bool = True,
     chunks=None,
+    scenario_chunks=None,
 ):
     """The Algorithm-2 loop over an explicit scenario batch: ONE resolve of
     the shared event log per round for ALL scenarios.
@@ -182,7 +193,8 @@ def sweep_state_machine(
     """
     plan = SweepPlan(placement="batched", resolve=resolve, block_t=block_t,
                      interpret=interpret, skip_retired=skip_retired,
-                     chunks=as_chunk_spec(chunks))
+                     chunks=as_chunk_spec(chunks),
+                     scenario_chunks=as_scenario_chunk_spec(scenario_chunks))
     return execute_sweep(values, budgets, rules, plan)
 
 

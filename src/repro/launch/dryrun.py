@@ -27,6 +27,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
 from repro.launch import roofline as roofline_lib
 from repro.launch.mesh import make_production_mesh
@@ -174,9 +175,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
               f"  output_size={mem.output_size_in_bytes/1e9:.3f} GB"
               f"  temp_size={mem.temp_size_in_bytes/1e9:.3f} GB"
               f"  alias_size={mem.alias_size_in_bytes/1e9:.3f} GB")
-        ca = compiled.cost_analysis()
-        if isinstance(ca, list):
-            ca = ca[0]
+        ca = compat.compiled_cost_analysis(compiled)
         print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
               f"bytes={ca.get('bytes accessed', 0):.3e}")
         hlo_text = compiled.as_text()

@@ -108,7 +108,7 @@ class SweepMeshSpec:
 
     def plan(self, *, resolve: str = "auto", block_t: int = 256,
              interpret: Optional[bool] = None, skip_retired: bool = True,
-             chunks=None):
+             chunks=None, scenario_chunks=None):
         """Compose this mesh with the other execution axes into a
         :class:`repro.core.executor.SweepPlan` (placement ``"sharded"``).
 
@@ -118,12 +118,21 @@ class SweepMeshSpec:
         per-device working set is bounded by the chunk, not the shard.
         Chunk sizes must divide :meth:`local_event_count` and hold whole
         canonical reduction blocks (pad-or-error at trace time).
+
+        ``scenario_chunks`` (an int or
+        :class:`~repro.core.executor.ScenarioChunkSpec`) does the same on
+        the scenario axis: each device runs its scenario lanes
+        ``scenarios_per_chunk`` at a time; sizes must divide the per-device
+        scenario count (S / scenario-axis size).
         """
-        from repro.core.executor import SweepPlan, as_chunk_spec
+        from repro.core.executor import (SweepPlan, as_chunk_spec,
+                                         as_scenario_chunk_spec)
         return SweepPlan(placement="sharded", mesh=self, resolve=resolve,
                          block_t=block_t, interpret=interpret,
                          skip_retired=skip_retired,
-                         chunks=as_chunk_spec(chunks))
+                         chunks=as_chunk_spec(chunks),
+                         scenario_chunks=as_scenario_chunk_spec(
+                             scenario_chunks))
 
     @staticmethod
     def for_devices(num_event_devices: Optional[int] = None,

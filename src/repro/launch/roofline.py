@@ -150,10 +150,9 @@ def roofline(compiled, *, model_flops_per_device: Optional[float] = None,
     """Derive the three terms. ``structural=True`` uses the trip-count-aware
     HLO walker (repro.launch.hlo_cost) — XLA's own cost_analysis counts
     while-loop bodies once, so scanned-layers programs need this."""
+    from repro.compat import compiled_cost_analysis
     from repro.launch import hlo_cost
-    ca = compiled.cost_analysis()
-    if isinstance(ca, list):           # older jax returns [dict]
-        ca = ca[0]
+    ca = compiled_cost_analysis(compiled)
     text = hlo_text if hlo_text is not None else compiled.as_text()
     if structural:
         cost = hlo_cost.analyze(text)

@@ -1,0 +1,103 @@
+"""The search domain: box bounds over the ScenarioGrid design axes.
+
+A :class:`SearchSpace` bounds any subset of the three
+:meth:`~repro.core.counterfactual.ScenarioGrid.product` axes — ``bid_scale``
+(multiplies every campaign's bid multiplier), ``reserve`` (the auction
+reserve price), ``budget_scale`` (scales every campaign's budget). A *point*
+is a plain ``{axis: float}`` dict over the bounded axes; axes left unbounded
+stay at the engine's base design. A *box* is a ``{axis: (lo, hi)}`` dict —
+the optimizers shrink boxes, the space clips them to its bounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+SEARCH_AXES = ("bid_scale", "reserve", "budget_scale")
+
+Point = Dict[str, float]
+Box = Dict[str, Tuple[float, float]]
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    """Box bounds over the scenario-design axes (``None`` = not searched)."""
+
+    bid_scale: Optional[Tuple[float, float]] = None
+    reserve: Optional[Tuple[float, float]] = None
+    budget_scale: Optional[Tuple[float, float]] = None
+
+    def __post_init__(self):
+        if not self.axes:
+            raise ValueError(
+                "SearchSpace needs at least one bounded axis; give (lo, hi) "
+                f"bounds for one of {SEARCH_AXES}")
+        for a in self.axes:
+            lo, hi = getattr(self, a)
+            if not (lo <= hi):
+                raise ValueError(f"SearchSpace.{a}: lo={lo} > hi={hi}")
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in SEARCH_AXES if getattr(self, a) is not None)
+
+    def bounds(self) -> Box:
+        return {a: tuple(map(float, getattr(self, a))) for a in self.axes}
+
+    def widths(self, box: Optional[Box] = None) -> Dict[str, float]:
+        box = self.bounds() if box is None else box
+        return {a: hi - lo for a, (lo, hi) in box.items()}
+
+    def center(self, box: Optional[Box] = None) -> Point:
+        box = self.bounds() if box is None else box
+        return {a: 0.5 * (lo + hi) for a, (lo, hi) in box.items()}
+
+    def clip(self, point: Point) -> Point:
+        out = {}
+        for a in self.axes:
+            lo, hi = getattr(self, a)
+            out[a] = min(max(float(point.get(a, 0.5 * (lo + hi))), lo), hi)
+        return out
+
+    def grid(self, num: int, box: Optional[Box] = None) -> List[Point]:
+        """A balanced cartesian grid of ~``num`` points over ``box``.
+
+        Per-axis counts are the largest k with ``k**d <= num`` (at least 2),
+        so 1-D boxes get exactly ``num`` points and multi-axis boxes the
+        nearest cartesian product not exceeding ``num``. Endpoints
+        inclusive; a zero-width axis contributes its single value.
+        """
+        if num < 1:
+            raise ValueError(f"grid needs num >= 1, got {num}")
+        box = self.bounds() if box is None else box
+        d = len(box)
+        k = max(2, int(num ** (1.0 / d))) if num >= 2 ** d else 2
+        while k ** d > num and k > 2:
+            k -= 1
+        if d == 1:
+            k = max(2, num)
+        per_axis = []
+        for a, (lo, hi) in box.items():
+            if hi == lo:
+                per_axis.append([lo])
+            else:
+                per_axis.append([lo + (hi - lo) * i / (k - 1)
+                                 for i in range(k)])
+        return [dict(zip(box.keys(), combo))
+                for combo in itertools.product(*per_axis)]
+
+    def shrink_around(self, point: Point, factor: float,
+                      box: Optional[Box] = None) -> Box:
+        """A ``factor``-width sub-box centered on ``point``, clipped to the
+        space bounds (the center slides inward at an edge, so the new box
+        always has the full shrunk width where the space allows it)."""
+        box = self.bounds() if box is None else box
+        out = {}
+        for a, (lo, hi) in box.items():
+            s_lo, s_hi = getattr(self, a)
+            half = 0.5 * (hi - lo) * factor
+            c = min(max(float(point[a]), s_lo + half), s_hi - half) \
+                if s_hi - s_lo >= 2 * half else 0.5 * (s_lo + s_hi)
+            out[a] = (max(c - half, s_lo), min(c + half, s_hi))
+        return out

@@ -132,6 +132,61 @@ def test_chunked_sweep_bitwise_any_aligned_chunk(epc, bid, bud):
                                       err_msg=f"chunks={epc}: {name}")
 
 
+@given(st.sampled_from([1, 2, 4]),
+       st.sampled_from([None, 16, 64, 128]),
+       st.sampled_from(["jnp", "fused"]),
+       st.sampled_from(["device", "batched", "sharded"]),
+       st.floats(0.7, 1.4), st.floats(0.2, 2.0))
+def test_scenario_chunked_sweep_bitwise_any_aligned_chunk(
+        spc, epc, resolve, placement, bid, bud):
+    """Scenario-chunked execution is bit-for-bit the unchunked program on
+    final_spend/cap_times for EVERY aligned chunk size, across placements
+    (device / batched / sharded — the latter over however many devices are
+    visible, 4 in the forced-host CI step), resolve back-ends jnp / fused,
+    and composed with aligned event chunks — the S-axis analogue of the
+    event-chunk invariance property above."""
+    from repro.core import (ScenarioGrid, SweepPlan, execute_sweep,
+                            sweep_parallel)
+    from repro.launch.mesh import SweepMeshSpec
+    env = _sweep_env()
+    grid = ScenarioGrid.product(AuctionRule.first_price(_SWEEP_C),
+                                env.budgets, bid_scales=[1.0, bid],
+                                budget_scales=[1.0, bud])
+    interpret = True if resolve == "fused" else None
+    ref = sweep_parallel(env.values, grid.budgets, grid.rules,
+                         resolve="jnp")
+    label = f"spc={spc} epc={epc} {resolve}/{placement}"
+    if placement == "device":
+        # one unbatched lane: only the trivial chunk divides S=1
+        rule1, budgets1 = grid.scenario(1)
+        plan = SweepPlan(placement="device", resolve=resolve,
+                         interpret=interpret, chunks=epc, scenario_chunks=1)
+        s_hat, cap_times, *_ = execute_sweep(env.values, budgets1, rule1,
+                                             plan)
+        np.testing.assert_array_equal(
+            np.asarray(s_hat), np.asarray(ref.final_spend[1]), err_msg=label)
+        np.testing.assert_array_equal(
+            np.asarray(cap_times), np.asarray(ref.cap_times[1]),
+            err_msg=label)
+        return
+    kwargs = dict(resolve=resolve, interpret=interpret, chunks=epc,
+                  scenario_chunks=spc)
+    if placement == "sharded":
+        n_dev = len(jax.devices())
+        if n_dev >= 4 and spc <= 2:
+            # event x scenario mesh: per-device lanes = S/2 = 2
+            kwargs["mesh"] = SweepMeshSpec.for_devices(n_dev // 2, 2)
+        else:
+            kwargs["mesh"] = SweepMeshSpec.for_devices()
+        kwargs["driver"] = "sharded"
+    out = sweep_parallel(env.values, grid.budgets, grid.rules, **kwargs)
+    np.testing.assert_array_equal(np.asarray(out.final_spend),
+                                  np.asarray(ref.final_spend),
+                                  err_msg=label)
+    np.testing.assert_array_equal(np.asarray(out.cap_times),
+                                  np.asarray(ref.cap_times), err_msg=label)
+
+
 @given(st.lists(st.integers(1, 100), min_size=1, max_size=8),
        st.integers(50, 200))
 def test_segments_from_cap_times_invariants(caps, n):

@@ -672,6 +672,201 @@ def test_unknown_driver_and_resolve_errors_are_consistent(env):
 
 
 # ---------------------------------------------------------------------------
+# scenario-chunked execution (the S-axis analogue of chunks=)
+# ---------------------------------------------------------------------------
+
+ALIGNED_SCENARIO_CHUNKS = (1, 2, 4, 8)        # _grid has S = 4 bids x 2 res
+
+
+def test_scenario_chunked_bitwise_aligned_sizes(env):
+    """Scenario-chunked execution (lax.map over fixed S-slices of the grid)
+    is bit-for-bit the unchunked batched driver on EVERY loop output, for
+    every aligned chunk size, on the jnp and fused back-ends — lanes never
+    exchange data, so slicing the S axis cannot move a single bit."""
+    grid = _grid(env, "first_price")
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp")
+    names = ("final_spend", "cap_times", "retired", "boundaries",
+             "num_rounds", "n_hat")
+    for resolve, interpret in (("jnp", None), ("fused", True)):
+        for spc in ALIGNED_SCENARIO_CHUNKS:
+            out = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                                      resolve=resolve, interpret=interpret,
+                                      scenario_chunks=spc)
+            for name, a, b in zip(names, out, ref):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"scenario_chunks={spc} resolve={resolve}: "
+                            f"{name}")
+
+
+def test_scenario_chunks_compose_with_event_chunks(env):
+    """Both chunk axes at once (scan S-slices, each streaming event chunks)
+    through the public wrappers: sweep_parallel and engine.sweep still
+    reproduce the unchunked bits."""
+    from repro.core import ScenarioChunkSpec
+    grid = _grid(env, "second_price")
+    ref = sweep_parallel(env.values, grid.budgets, grid.rules)
+    out = sweep_parallel(env.values, grid.budgets, grid.rules, chunks=512,
+                         scenario_chunks=ScenarioChunkSpec(
+                             scenarios_per_chunk=2))
+    np.testing.assert_array_equal(np.asarray(out.final_spend),
+                                  np.asarray(ref.final_spend))
+    np.testing.assert_array_equal(np.asarray(out.cap_times),
+                                  np.asarray(ref.cap_times))
+    engine = CounterfactualEngine(env.values, env.budgets)
+    egrid = engine.grid(bid_scales=[1.0, 1.1, 1.2])
+    np.testing.assert_array_equal(
+        np.asarray(engine.sweep(egrid, chunks=256,
+                                scenario_chunks=3).results.final_spend),
+        np.asarray(engine.sweep(egrid).results.final_spend))
+
+
+def test_scenario_chunked_sharded_1dev_bitwise(env):
+    """scenario_chunks × driver="sharded" on the trivial mesh (the 4-device
+    half runs in test_scenario_chunked_sharded_4dev_bitwise): each device
+    slice scans its own scenario chunks, still the in-memory bits."""
+    grid = _grid(env, "first_price")
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="jnp")
+    spec = SweepMeshSpec.for_devices(num_event_devices=1)
+    out = sweep_sharded(env.values, grid.budgets, grid.rules, spec,
+                        scenario_chunks=4, chunks=512)
+    for name, a, b in zip(("final_spend", "cap_times", "retired",
+                           "boundaries", "num_rounds", "n_hat"), out, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+@pytest.mark.slow
+def test_scenario_chunked_sharded_4dev_bitwise():
+    """Acceptance: scenario-chunked == unchunked, bit-for-bit, at 4 forced
+    host devices — on the all-event mesh (S vmapped per device) AND the
+    2×2 event×scenario mesh (chunk sizes dividing the per-device S)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    from pathlib import Path
+    script = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        assert len(jax.devices()) == 4
+        from repro.core import AuctionRule, ScenarioGrid, sweep_parallel
+        from repro.data import make_synthetic_env
+        from repro.launch.mesh import SweepMeshSpec
+        env = make_synthetic_env(jax.random.PRNGKey(1), n_events=4096,
+                                 n_campaigns=16, emb_dim=8)
+        base = AuctionRule.first_price(16)
+        grid = ScenarioGrid.product(base, env.budgets,
+                                    bid_scales=[1.0, 1.2],
+                                    budget_scales=[1.0, 0.25, 1e6])
+        ref = sweep_parallel(env.values, grid.budgets, grid.rules)
+        cells = [(SweepMeshSpec.for_devices(num_event_devices=4),
+                  (1, 2, 3, 6), None),          # S=6 vmapped per device
+                 (SweepMeshSpec.for_devices(2, 2),
+                  (1, 3), 512)]                 # local S=3, + event chunks
+        for spec, spcs, epc in cells:
+            for spc in spcs:
+                out = sweep_parallel(env.values, grid.budgets, grid.rules,
+                                     driver="sharded", mesh=spec,
+                                     chunks=epc, scenario_chunks=spc)
+                assert np.array_equal(np.asarray(out.final_spend),
+                                      np.asarray(ref.final_spend)), spc
+                assert np.array_equal(np.asarray(out.cap_times),
+                                      np.asarray(ref.cap_times)), spc
+        print("SCENARIO_CHUNKED_SHARDED_4DEV_OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SCENARIO_CHUNKED_SHARDED_4DEV_OK" in out.stdout
+
+
+def test_misaligned_scenario_chunks_one_error_everywhere(env):
+    """Satellite: the ONE pad-or-error contract on the S axis — every
+    entry point (sweep_parallel, sweep_state_machine, engine.sweep,
+    engine.search) raises the identical ValueError for a chunk size that
+    does not divide the scenario count (the executor owns validation)."""
+    from repro.search import SearchSpace
+    grid = _grid(env, "first_price")              # S = 8; 3 is ragged
+    engine = CounterfactualEngine(env.values, env.budgets)
+
+    def msg(fn):
+        with pytest.raises(ValueError) as e:
+            fn()
+        return str(e.value)
+
+    msgs = {
+        msg(lambda: sweep_parallel(env.values, grid.budgets, grid.rules,
+                                   scenario_chunks=3)),
+        msg(lambda: sweep_state_machine(env.values, grid.budgets,
+                                        grid.rules, scenario_chunks=3)),
+        msg(lambda: engine.sweep(engine.grid(bid_scales=[1.0, 0.9, 1.1, 1.3],
+                                             reserves=[0.0, 0.05]),
+                                 scenario_chunks=3)),
+        # halving's first rung evaluates num_candidates=8 points at once
+        msg(lambda: engine.search(SearchSpace(reserve=(0.0, 0.2)),
+                                  method="halving", num_candidates=8,
+                                  scenario_chunks=3)),
+    }
+    assert len(msgs) == 1, msgs
+    assert "ragged scenario chunk" in next(iter(msgs))
+    with pytest.raises(ValueError, match="scenarios_per_chunk"):
+        sweep_parallel(env.values, grid.budgets, grid.rules,
+                       scenario_chunks=0)
+
+
+def test_engine_scenario_chunks_require_parallel_method(env):
+    engine = CounterfactualEngine(env.values, env.budgets)
+    grid = engine.grid(bid_scales=[1.0, 1.1])
+    with pytest.raises(ValueError, match="scenario_chunks"):
+        engine.sweep(grid, method="sort2aggregate", scenario_chunks=2)
+
+
+def test_vmem_gate_picks_fitting_scenario_chunk(env, monkeypatch):
+    """Satellite regression: past the one-launch VMEM budget the executor
+    now CHOOSES a fitting scenario chunk (largest divisor whose resident
+    state fits) instead of silently degrading to the two-pass shape — at
+    the documented S=64/C=1024 point and, with a shrunk budget, on a real
+    run that must stay bit-identical to the unchunked fused kernel."""
+    from repro.core import executor
+    from repro.core.executor import SweepPlan, planned_scenario_chunk
+
+    # docs/ALGORITHMS.md case: S=64 over-fills VMEM at C=1024, S=32 fits
+    plan = SweepPlan(resolve="fused", interpret=True)
+    assert not executor.round_fused_fits(64, 1024)
+    assert planned_scenario_chunk(plan, 64, 1024) == 32
+    # an explicit spec always wins over the auto gate
+    assert planned_scenario_chunk(
+        SweepPlan(resolve="fused", interpret=True, scenario_chunks=16),
+        64, 1024) == 16
+
+    grid = _grid(env, "first_price")              # S=8, C=16
+    ref = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="fused", interpret=True, block_t=64)
+    # budget where S=8 resident state over-fills but an S-slice fits
+    fits8 = executor.round_fused_bytes(8, N_CAMPAIGNS, 64)
+    fits1 = executor.round_fused_bytes(1, N_CAMPAIGNS, 64)
+    monkeypatch.setattr(executor, "ONE_LAUNCH_VMEM_BYTES",
+                        (fits8 + fits1) // 2)
+    auto = planned_scenario_chunk(
+        SweepPlan(resolve="fused", interpret=True, block_t=64), 8,
+        N_CAMPAIGNS)
+    assert auto is not None and auto < 8 and 8 % auto == 0
+    assert executor.round_fused_fits(auto, N_CAMPAIGNS, 64)
+    sweep_state_machine.clear_cache()   # same statics must re-plan
+    out = sweep_state_machine(env.values, grid.budgets, grid.rules,
+                              resolve="fused", interpret=True, block_t=64)
+    for name, a, b in zip(("final_spend", "cap_times", "retired",
+                           "boundaries", "num_rounds", "n_hat"), out, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
 # engine-level API
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,241 @@
+"""Golden convergence + accounting contracts for the scenario-space search.
+
+Two families:
+
+* unit contracts on the search primitives — the box algebra of
+  :class:`~repro.search.space.SearchSpace`, the charge-before-evaluate
+  exactness of :class:`~repro.search.ledger.EvaluationLedger`, and the
+  feasibility-first scoring of :mod:`repro.search.objectives`;
+* golden convergence — a synthetic log whose revenue-maximizing reserve is
+  known analytically, on which BOTH optimizers must land within tolerance
+  while spending measurably fewer scenario evaluations than the exhaustive
+  grid at the resolution they reached, with the evaluation ledger exact.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AuctionRule, CounterfactualEngine
+from repro.search import (BudgetExhausted, CapRateCeiling, EvaluationLedger,
+                          SEARCH_METHODS, SearchSpace, as_objective,
+                          coordinate_hillclimb, revenue_objective,
+                          score_sweep, successive_halving)
+
+# ---------------------------------------------------------------------------
+# the golden log: revenue(r) is known in closed form
+# ---------------------------------------------------------------------------
+
+_GOLDEN_N, _GOLDEN_C = 512, 2
+_R_STAR = 0.5          # argmax of r * #{v > r} for v ~ linspace(1/N, 1)
+_R_TOL = 0.05
+
+
+@pytest.fixture(scope="module")
+def golden_engine():
+    """Second-price log where campaign 0 bids ``linspace(1/N, 1)`` and
+    campaign 1 never bids: with unconstrained budgets every sale is a
+    single-eligible-bidder sale paying exactly the reserve, so
+
+        revenue(r) = r * #{v > r}  ~=  N * r * (1 - r),
+
+    maximized at the interior point r* = 1/2 — no budget dynamics, no
+    ties, analytically checkable."""
+    values = np.zeros((_GOLDEN_N, _GOLDEN_C), np.float32)
+    values[:, 0] = np.linspace(1.0 / _GOLDEN_N, 1.0, _GOLDEN_N)
+    budgets = np.full((_GOLDEN_C,), 1e9, np.float32)
+    return CounterfactualEngine(
+        jnp.asarray(values), jnp.asarray(budgets),
+        base_rule=AuctionRule.second_price(_GOLDEN_C))
+
+
+# ---------------------------------------------------------------------------
+# SearchSpace
+# ---------------------------------------------------------------------------
+
+def test_space_requires_a_bounded_axis():
+    with pytest.raises(ValueError, match="at least one bounded axis"):
+        SearchSpace()
+    with pytest.raises(ValueError, match="lo=0.4 > hi=0.1"):
+        SearchSpace(reserve=(0.4, 0.1))
+
+
+def test_space_grid_counts_and_bounds():
+    s1 = SearchSpace(reserve=(0.0, 1.0))
+    pts = s1.grid(7)
+    assert len(pts) == 7                      # 1-D: exactly num points
+    assert pts[0] == {"reserve": 0.0} and pts[-1] == {"reserve": 1.0}
+    s2 = SearchSpace(reserve=(0.0, 1.0), budget_scale=(0.5, 2.0))
+    pts2 = s2.grid(16)
+    assert len(pts2) == 16                    # 2-D: 4x4 cartesian
+    assert all(set(p) == {"reserve", "budget_scale"} for p in pts2)
+    assert len(s2.grid(15)) == 9              # largest k**2 <= 15
+
+
+def test_space_clip_and_shrink_stay_inside():
+    s = SearchSpace(reserve=(0.1, 0.9))
+    assert s.clip({"reserve": 5.0}) == {"reserve": 0.9}
+    assert s.clip({}) == {"reserve": 0.5}     # missing axis -> box center
+    # shrinking around an edge point slides inward, keeping full width
+    box = s.shrink_around({"reserve": 0.1}, 0.25)
+    lo, hi = box["reserve"]
+    assert lo == pytest.approx(0.1) and hi - lo == pytest.approx(0.2)
+    assert hi <= 0.9
+
+
+# ---------------------------------------------------------------------------
+# EvaluationLedger
+# ---------------------------------------------------------------------------
+
+def test_ledger_exact_accounting():
+    led = EvaluationLedger(budget=10)
+    led.charge(4, "a")
+    led.charge(6, "b")
+    assert led.spent == 10 and led.remaining == 0
+    assert [n for _, n in led.entries] == [4, 6]
+    with pytest.raises(BudgetExhausted, match="evaluation budget exhausted"):
+        led.charge(1, "c")
+    assert led.spent == 10                    # failed charge records nothing
+    with pytest.raises(ValueError):
+        EvaluationLedger(budget=0)
+    with pytest.raises(ValueError):
+        led.charge(0)
+
+
+def test_ledger_affordable_is_the_gate():
+    led = EvaluationLedger(budget=5)
+    assert led.affordable(5) and not led.affordable(6)
+
+
+# ---------------------------------------------------------------------------
+# objectives / constraints
+# ---------------------------------------------------------------------------
+
+def test_score_sweep_margins(golden_engine):
+    swept = golden_engine.sweep(golden_engine.grid(reserves=[0.1, 0.5]))
+    values, margins = score_sweep(swept, revenue_objective, ())
+    assert values.shape == margins.shape == (2,)
+    assert (margins == 0.0).all()             # unconstrained = feasible
+    # no campaign caps out on the golden log -> cap-rate 0 <= any ceiling
+    _, m = score_sweep(swept, as_objective("revenue"), (CapRateCeiling(0.1),))
+    np.testing.assert_allclose(m, 0.1)
+    with pytest.raises(ValueError, match="unknown objective"):
+        as_objective("profit")
+
+
+# ---------------------------------------------------------------------------
+# golden convergence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", SEARCH_METHODS)
+def test_search_finds_known_optimal_reserve(golden_engine, method):
+    """Acceptance: both optimizers land within _R_TOL of the analytic
+    optimum with measurably fewer evaluations than the exhaustive grid at
+    the resolution the search reached, and the ledger is exact."""
+    space = SearchSpace(reserve=(0.0, 1.0))
+    res = golden_engine.search(space, method=method, budget=64)
+    assert res.converged
+    assert res.best_feasible
+    assert abs(res.best_point["reserve"] - _R_STAR) < _R_TOL
+
+    # ledger exactness: no silent over- or under-spend anywhere
+    assert res.evaluations == res.ledger.spent \
+        == sum(n for _, n in res.ledger.entries) \
+        == sum(h["evaluations"] for h in res.history)
+    assert res.evaluations <= 64
+
+    # fewer evaluations than the exhaustive grid at the resolution the
+    # search reached (xatol=1e-2 over a unit-width axis -> 101 points)
+    k = 101
+    grid = golden_engine.grid(reserves=list(np.linspace(0.0, 1.0, k)))
+    assert res.evaluations < grid.num_scenarios // 2
+    swept = golden_engine.sweep(grid)
+    rev = np.asarray(swept.results.revenue)
+    assert res.best_value >= rev.max() * 0.98  # and no worse an optimum
+
+
+def test_search_respects_constraints(golden_engine):
+    """An unattainable constraint (every scenario violated) must steer
+    selection by least violation, and report infeasibility instead of
+    silently returning the unconstrained optimum."""
+    def impossible(swept):
+        rev = np.asarray(swept.results.revenue, np.float64)
+        return -1.0 - rev / _GOLDEN_N        # least-violating = lowest rev
+
+    space = SearchSpace(reserve=(0.0, 1.0))
+    res = golden_engine.search(space, method="halving", budget=48,
+                               constraints=(impossible,))
+    assert not res.best_feasible
+    # least violation = lowest revenue: the search is pushed to an edge
+    assert min(res.best_point["reserve"], 1 - res.best_point["reserve"]) \
+        < _R_TOL
+    assert res.evaluations <= 48
+
+
+def test_search_stops_at_budget_without_raising(golden_engine):
+    """A budget too small to converge: the optimizer stops with what it
+    has — converged=False, never BudgetExhausted out of the entry point,
+    never an unaccounted sweep."""
+    space = SearchSpace(reserve=(0.0, 1.0))
+    res = golden_engine.search(space, method="halving", budget=17,
+                               num_candidates=16)
+    assert not res.converged
+    assert res.evaluations == res.ledger.spent <= 17
+
+
+def test_search_rejects_unknown_method_and_objective(golden_engine):
+    space = SearchSpace(reserve=(0.0, 1.0))
+    with pytest.raises(ValueError, match="unknown search method"):
+        golden_engine.search(space, method="anneal")
+    with pytest.raises(ValueError, match="unknown objective"):
+        golden_engine.search(space, objective="profit")
+
+
+def test_hillclimb_init_and_trajectory(golden_engine):
+    """Hill-climb from a poor corner still reaches r*; the trajectory log
+    carries per-batch notes and the formatted table renders."""
+    space = SearchSpace(reserve=(0.0, 1.0))
+    res = golden_engine.search(space, method="hillclimb", budget=64,
+                               init={"reserve": 0.05})
+    assert abs(res.best_point["reserve"] - _R_STAR) < _R_TOL
+    assert res.history[0]["note"] == "hillclimb init"
+    assert any(h.get("moved") for h in res.history[1:])
+    table = res.format_trajectory()
+    assert "hillclimb init" in table and "total:" in table
+
+
+def test_optimizers_are_deterministic(golden_engine):
+    """No RNG anywhere: the same search run twice gives the identical
+    trajectory (points, values, ledger trail)."""
+    space = SearchSpace(reserve=(0.0, 1.0))
+    a = golden_engine.search(space, method="halving", budget=48)
+    b = golden_engine.search(space, method="halving", budget=48)
+    assert a.best_point == b.best_point
+    assert a.best_value == b.best_value
+    assert [h["points"] for h in a.history] == \
+        [h["points"] for h in b.history]
+    assert a.ledger.entries == b.ledger.entries
+
+
+def test_direct_optimizer_api_with_synthetic_objective():
+    """The optimizers are engine-independent: drive them with a plain
+    callback (paraboloid with a feasibility cut) and check both respect
+    the charge-before-evaluate contract."""
+    space = SearchSpace(bid_scale=(0.0, 2.0))
+    calls = []
+
+    def evaluate(points, note):
+        calls.append((note, len(points)))
+        xs = np.array([p["bid_scale"] for p in points])
+        return -(xs - 1.3) ** 2, np.where(xs <= 1.8, 0.0, -1.0)
+
+    led = EvaluationLedger(budget=200)
+    res = successive_halving(evaluate, space, led)
+    assert abs(res.best_point["bid_scale"] - 1.3) < 0.02
+    assert sum(n for _, n in calls) == led.spent == res.evaluations
+
+    led2 = EvaluationLedger(budget=200)
+    res2 = coordinate_hillclimb(evaluate, space, led2,
+                                init={"bid_scale": 0.2})
+    assert abs(res2.best_point["bid_scale"] - 1.3) < 0.02
+    assert res2.converged
