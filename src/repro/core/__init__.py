@@ -1,5 +1,8 @@
 """Core library: the paper's contribution as composable JAX modules."""
-from repro.core.types import AuctionRule, Segments, SimResult, never_capped
+from repro.core.types import (AuctionRule, ScenarioOverlay, Segments,
+                              SimResult, never_capped)
+from repro.core.crn import (STREAMS, stream_key, event_campaign_normals,
+                            event_campaign_uniforms, campaign_normals)
 from repro.core.auction import resolve, resolve_row, spend_sums, spend_matrix
 from repro.core.sequential import sequential_replay, naive_sampled_replay, capped_sum
 from repro.core.parallel import (parallel_simulate, parallel_state_machine,
@@ -22,7 +25,10 @@ from repro.core.counterfactual import (CounterfactualEngine,
                                        SweepResult)
 
 __all__ = [
-    "AuctionRule", "Segments", "SimResult", "never_capped",
+    "AuctionRule", "ScenarioOverlay", "Segments", "SimResult",
+    "never_capped",
+    "STREAMS", "stream_key", "event_campaign_normals",
+    "event_campaign_uniforms", "campaign_normals",
     "resolve", "resolve_row", "spend_sums", "spend_matrix",
     "sequential_replay", "naive_sampled_replay", "capped_sum",
     "parallel_simulate", "parallel_state_machine", "pick_resolve",

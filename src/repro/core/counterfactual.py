@@ -240,7 +240,7 @@ class CounterfactualEngine:
         """A :meth:`ScenarioGrid.product` around this engine's base design."""
         return ScenarioGrid.product(self.base_rule, self.budgets, **kwargs)
 
-    def sweep(self, grid: ScenarioGrid,
+    def sweep(self, grid,
               method: str = "parallel",
               base_index: int = 0,
               warm_start="base",
@@ -253,6 +253,13 @@ class CounterfactualEngine:
               scenario_chunks=None,
               key: Optional[jax.Array] = None) -> SweepResult:
         """Evaluate every scenario in ``grid`` in one batched device program.
+
+        ``grid`` is a :class:`ScenarioGrid` — or a
+        :class:`repro.scenarios.CompiledFamily`, in which case the family's
+        extended valuation matrix (entrant columns) and intervention
+        overlay are threaded through the executor; families carrying an
+        overlay (live windows / CRN stochastic axes) run on
+        ``method="parallel"`` only, design-only families on any method.
 
         ``method``: ``"parallel"`` (device-resident Algorithm 2, the
         default), ``"sort2aggregate"`` (vmapped refine+aggregate), or
@@ -314,6 +321,20 @@ class CounterfactualEngine:
         of the whole grid. Composes with ``driver=``, ``resolve=`` and
         event ``chunks=``.
         """
+        # a CompiledFamily bundles (values, grid, overlay); unpack it so
+        # everything below sees the plain grid + the family's event log
+        from repro.scenarios.family import CompiledFamily
+        values, overlay = self.values, None
+        if isinstance(grid, CompiledFamily):
+            family = grid
+            grid, values, overlay = family.grid, family.values, \
+                family.overlay
+            base_index = family.base_index
+        if overlay is not None and method != "parallel":
+            raise ValueError(
+                "scenario families with an intervention overlay (live "
+                "windows / CRN stochastic axes) run on the parallel "
+                f"executor only; use method='parallel', not {method!r}.")
         # one validation path for the (driver, resolve, chunks) triple —
         # the executor raises the same errors for every entry point
         plan = plan_for_driver(driver, resolve=resolve, mesh=mesh,
@@ -339,7 +360,7 @@ class CounterfactualEngine:
             # execute the plan built above — sweep_parallel would rebuild
             # the identical one from the raw strings
             s_hat, cap_times, _, _, _, _ = execute_sweep(
-                self.values, grid.budgets, grid.rules, plan)
+                values, grid.budgets, grid.rules, plan, overlay=overlay)
             results = SimResult(final_spend=s_hat, cap_times=cap_times,
                                 winners=None, prices=None, segments=None)
         elif method == "sort2aggregate":
@@ -348,12 +369,13 @@ class CounterfactualEngine:
             check_s2a_options(plan, record_events)
             caps0 = None
             if warm_start == "per_scenario":
-                caps0 = self._per_scenario_warm_caps(grid, key)
+                caps0 = self._per_scenario_warm_caps(values, grid, key)
             elif warm_start == "base":
-                caps0 = self._base_warm_caps(grid, base_index, driver, mesh,
-                                             refine_iters, key)
+                caps0 = self._base_warm_caps(values, grid, base_index,
+                                             driver, mesh, refine_iters,
+                                             key)
             results, gaps, iters = execute_s2a_sweep(
-                self.values, grid.budgets, grid.rules, plan,
+                values, grid.budgets, grid.rules, plan,
                 cap_times_init=caps0, refine_iters=refine_iters,
                 record_events=record_events)
         elif method == "sequential":
@@ -364,7 +386,7 @@ class CounterfactualEngine:
                     "driver='batched', or method='parallel'/"
                     "'sort2aggregate' to scale out.")
             results = sweep_lib.sweep_sequential(
-                self.values, grid.budgets, grid.rules,
+                values, grid.budgets, grid.rules,
                 record_events=record_events)
         else:
             raise ValueError(f"unknown sweep method: {method}")
@@ -378,18 +400,31 @@ class CounterfactualEngine:
         ``budget_scale``, applied to this engine's base design (missing axes
         stay at the base — the same semantics as
         :meth:`ScenarioGrid.product`, for an arbitrary point set instead of
-        a cartesian product)."""
+        a cartesian product). Per-campaign ``boost[c]`` axes (from a
+        :class:`repro.search.SearchSpace` with ``campaign_boost`` bounds)
+        multiply campaign ``c``'s bid multiplier on top of ``bid_scale``."""
         scenarios, labels = [], []
         for p in points:
             bid = float(p.get("bid_scale", 1.0))
             res = float(p.get("reserve", float(self.base_rule.reserve)))
             bud = float(p.get("budget_scale", 1.0))
+            mult = self.base_rule.multipliers * jnp.float32(bid)
+            label = f"bid×{bid:g} res={res:g} bud×{bud:g}"
+            for axis in sorted(p):
+                if axis.startswith("boost[") and axis.endswith("]"):
+                    c, scale = int(axis[6:-1]), float(p[axis])
+                    mult = mult.at[c].multiply(jnp.float32(scale))
+                    label += f" boost[{c}]×{scale:g}"
+                elif axis not in ("bid_scale", "reserve", "budget_scale"):
+                    raise ValueError(
+                        f"unknown grid axis: {axis!r} (use bid_scale / "
+                        "reserve / budget_scale / boost[c])")
             rule = AuctionRule(
-                multipliers=self.base_rule.multipliers * jnp.float32(bid),
+                multipliers=mult,
                 reserve=jnp.asarray(res, jnp.float32),
                 kind=self.base_rule.kind)
             scenarios.append((rule, self.budgets * jnp.float32(bud)))
-            labels.append(f"bid×{bid:g} res={res:g} bud×{bud:g}")
+            labels.append(label)
         return ScenarioGrid.from_scenarios(scenarios, labels)
 
     def search(self, space, *,
@@ -456,33 +491,52 @@ class CounterfactualEngine:
         raise ValueError(
             f"unknown search method: {method!r} (choose from {names})")
 
-    def _base_warm_caps(self, grid: ScenarioGrid, base_index: int,
-                        driver: str, mesh, refine_iters: int,
+    def attribute(self, axes, *, objective="revenue",
+                  key: Optional[jax.Array] = None, **sweep_kwargs):
+        """Shapley-attribute a revenue delta across intervention axes.
+
+        ``axes`` maps axis names to intervention specs (see
+        :func:`repro.scenarios.attribute` — this is its engine-method
+        form): the full 2^k subset lattice is compiled into one CRN-shared
+        family and swept in one batched program, and the total delta is
+        decomposed into per-axis Shapley values satisfying the efficiency
+        axiom exactly. Returns a
+        :class:`repro.scenarios.ShapleyAttribution`.
+        """
+        from repro.scenarios import attribution as attribution_lib
+        return attribution_lib.attribute(self, axes, objective=objective,
+                                         key=key, **sweep_kwargs)
+
+    def _base_warm_caps(self, values: jax.Array, grid: ScenarioGrid,
+                        base_index: int, driver: str, mesh,
+                        refine_iters: int,
                         key: Optional[jax.Array]) -> jax.Array:
         """(C,) warm-start cap times from the base design (the paper's
         previous-day trick), computed on the same placement as the sweep:
         on the mesh the Algorithm-4 pi estimate (psum'd residuals) and the
         base refine both run sharded end-to-end."""
+        n_events = values.shape[0]
         base_rule, base_budgets = grid.scenario(base_index)
         key = key if key is not None else jax.random.PRNGKey(0)
         if driver == "sharded":
             from repro.core import sharded as sharded_lib
             from repro.core import vi as vi_lib
             pi = sharded_lib.estimate_pi_sharded(
-                mesh.mesh, self.values, base_budgets, base_rule, key,
+                mesh.mesh, values, base_budgets, base_rule, key,
                 event_axes=mesh.event_axes)
-            caps_pi = vi_lib.pi_to_cap_times(pi, self.n_events)
+            caps_pi = vi_lib.pi_to_cap_times(pi, n_events)
             base_mesh = dataclasses.replace(mesh, scenario_axis=None)
             base_res, _, _ = sharded_lib.sweep_sort2aggregate_sharded(
-                self.values, base_budgets[None, :],
+                values, base_budgets[None, :],
                 sweep_lib.stack_rules([base_rule]), base_mesh,
                 cap_times_init=caps_pi, refine_iters=refine_iters)
-            return jnp.minimum(base_res.cap_times[0], self.n_events + 1)
-        base = _sort2aggregate(self.values, base_budgets, base_rule, key,
+            return jnp.minimum(base_res.cap_times[0], n_events + 1)
+        base = _sort2aggregate(values, base_budgets, base_rule, key,
                                refine_iters=refine_iters)
         return base.result.cap_times
 
-    def _per_scenario_warm_caps(self, grid: ScenarioGrid,
+    def _per_scenario_warm_caps(self, values: jax.Array,
+                                grid: ScenarioGrid,
                                 key: Optional[jax.Array],
                                 sample_rate: float = 0.1,
                                 vi_iters: int = 80,
@@ -497,11 +551,12 @@ class CounterfactualEngine:
         late-capping campaign costs more refine iterations than a cold
         start."""
         from repro.core import vi as vi_lib
-        sample_size = max(int(round(self.n_events * sample_rate)),
+        n_events = values.shape[0]
+        sample_size = max(int(round(n_events * sample_rate)),
                           vi_batch_size)
         est = vi_lib.estimate_pi_sweep(
-            self.values, grid.budgets, grid.rules,
+            values, grid.budgets, grid.rules,
             key if key is not None else jax.random.PRNGKey(0),
             sample_size=sample_size, num_iters=vi_iters,
             batch_size=vi_batch_size, eta_decay=vi_eta_decay)
-        return vi_lib.pi_to_cap_times(est.pi, self.n_events)
+        return vi_lib.pi_to_cap_times(est.pi, n_events)

@@ -1,0 +1,85 @@
+"""Common-random-numbers (CRN) streams for scenario families.
+
+Counterfactual scenario deltas are only trustworthy when every scenario sees
+the SAME random world and differs only through its intervention — the CRN
+discipline of Bottou et al.'s counterfactual ad-system analysis (PAPERS.md)
+and of vivarium's public-health simulations (SNIPPETS.md Snippet 1: "each
+simulant in the baseline scenario stays the same simulant, with the same
+randomness, in the counterfactual").
+
+The contract here: one keyed PRNG stream per **(event, campaign)** cell,
+derived purely from
+
+    fold_in(fold_in(fold_in(family_key, STREAM), global_event_index), campaign)
+
+so a draw depends only on the family key, the stream name, and the cell's
+*global* identity — never on the scenario index, the device layout, the
+chunk schedule, or how many scenarios ride in the batch. Every scenario lane
+therefore reuses the identical draws (deltas are intervention-only by
+construction), and sharded / chunked executions reproduce the single-device
+bits (the executor's bit-for-bit contract extends to stochastic families).
+
+Streams are namespaced by :data:`STREAMS` so e.g. bid noise and
+participation jitter never collide even at the same (event, campaign) cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Stream namespace: stable small ints folded into the family key first.
+# Append-only — renumbering silently changes every downstream draw.
+STREAMS = {
+    "bid_noise": 0,          # multiplicative log-normal bid perturbations
+    "participation": 1,      # per-(event, campaign) participation coin
+    "entrant_value": 2,      # synthetic valuation columns for AddEntrant
+    "multiplier_jitter": 3,  # per-campaign design jitter (compile-time)
+}
+
+
+def stream_key(key: jax.Array, stream: str) -> jax.Array:
+    """The family key specialised to one named stream."""
+    if stream not in STREAMS:
+        names = ", ".join(sorted(STREAMS))
+        raise ValueError(f"unknown CRN stream: {stream!r} (one of {names})")
+    return jax.random.fold_in(key, STREAMS[stream])
+
+
+def _cell_keys(key: jax.Array, event_idx: jax.Array,
+               n_campaigns: int) -> jax.Array:
+    """(T, C, key_words) per-cell keys from global event indices."""
+    cvec = jnp.arange(n_campaigns, dtype=jnp.int32)
+
+    def per_event(g):
+        kg = jax.random.fold_in(key, g)
+        return jax.vmap(lambda c: jax.random.fold_in(kg, c))(cvec)
+
+    return jax.vmap(per_event)(event_idx.astype(jnp.int32))
+
+
+def event_campaign_normals(key: jax.Array, event_idx: jax.Array,
+                           n_campaigns: int) -> jax.Array:
+    """(T, C) standard normals, one independent draw per (event, campaign)
+    cell. Bitwise identical for a cell regardless of which slice of the
+    event log (shard, chunk) asks for it."""
+    ks = _cell_keys(key, event_idx, n_campaigns)
+    flat = ks.reshape((-1,) + ks.shape[2:])
+    draws = jax.vmap(lambda k: jax.random.normal(k, ()))(flat)
+    return draws.reshape(event_idx.shape[0], n_campaigns)
+
+
+def event_campaign_uniforms(key: jax.Array, event_idx: jax.Array,
+                            n_campaigns: int) -> jax.Array:
+    """(T, C) uniforms in [0, 1), one per (event, campaign) cell."""
+    ks = _cell_keys(key, event_idx, n_campaigns)
+    flat = ks.reshape((-1,) + ks.shape[2:])
+    draws = jax.vmap(lambda k: jax.random.uniform(k, ()))(flat)
+    return draws.reshape(event_idx.shape[0], n_campaigns)
+
+
+def campaign_normals(key: jax.Array, n_campaigns: int) -> jax.Array:
+    """(C,) standard normals, one per campaign — the per-campaign design
+    streams (e.g. multiplier jitter), shared across all scenarios."""
+    cvec = jnp.arange(n_campaigns, dtype=jnp.int32)
+    return jax.vmap(
+        lambda c: jax.random.normal(jax.random.fold_in(key, c), ()))(cvec)

@@ -72,8 +72,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import axis_size as compat_axis_size, shard_map
 from repro.core import auction
+from repro.core import crn
 from repro.core import segments as seg_lib
-from repro.core.types import AuctionRule, never_capped
+from repro.core.types import AuctionRule, ScenarioOverlay, never_capped
 from repro.kernels.auction_resolve import ops as resolve_ops
 from repro.launch.mesh import SweepMeshSpec
 
@@ -409,6 +410,80 @@ def check_scenario_chunks(scenario_chunks: Optional[ScenarioChunkSpec], *,
             "the per-device scenario count, or drop scenario_chunks=.")
 
 
+def check_overlay(overlay: Optional[ScenarioOverlay], *, n_scenarios: int,
+                  n_campaigns: int, resolve: str,
+                  interpret: Optional[bool]) -> None:
+    """The :class:`~repro.core.types.ScenarioOverlay` contract.
+
+    Shapes are (S, C); live windows come in pairs; stochastic fields need
+    the family key for their CRN streams; and per-event overlays (bid
+    noise, participation jitter, time-varying windows) are a jnp-resolve
+    feature — a plan that would dispatch an actual Pallas kernel per round
+    fails fast here rather than silently ignoring the overlay. Static
+    pause/window overlays (``time_varying=False``) fold into the
+    activation mask and compose with every kernel back-end.
+    """
+    if overlay is None:
+        return
+    shape = (n_scenarios, n_campaigns)
+    for name in ("live_start", "live_stop", "bid_sigma", "part_prob"):
+        arr = getattr(overlay, name)
+        if arr is not None and tuple(arr.shape) != shape:
+            raise ValueError(
+                f"ScenarioOverlay.{name} must be (S, C)={shape}, got "
+                f"{tuple(arr.shape)}")
+    if (overlay.live_start is None) != (overlay.live_stop is None):
+        raise ValueError(
+            "ScenarioOverlay live windows need BOTH live_start and "
+            "live_stop (half-open [start, stop) per scenario×campaign)")
+    if overlay.time_varying and overlay.live_start is None:
+        raise ValueError(
+            "ScenarioOverlay.time_varying=True without live windows; "
+            "time_varying only qualifies live_start/live_stop")
+    if (overlay.bid_sigma is not None or overlay.part_prob is not None) \
+            and overlay.key is None:
+        raise ValueError(
+            "stochastic overlay fields (bid_sigma / part_prob) need "
+            "ScenarioOverlay.key — the family PRNG key their CRN streams "
+            "derive from (repro.core.crn)")
+    if overlay.per_event and (
+            resolve == "pallas"
+            or (resolve == "fused" and fused_runs_kernel(interpret))):
+        raise ValueError(
+            "per-event scenario overlays (bid noise, participation jitter, "
+            "time-varying live windows) run on the jnp resolve path only; "
+            "use resolve='jnp' (or 'auto'/'fused' off-TPU, which lower to "
+            "the identical jnp program). Static pause/boost overlays "
+            "compose with every kernel back-end.")
+
+
+def _overlay_noise(overlay: Optional[ScenarioOverlay], n_events: int,
+                   n_campaigns: int):
+    """The overlay's (N, C) CRN noise fields, drawn ONCE over global event
+    indices (scenario-independent — every lane shares them; sharded and
+    chunked executions slice the identical arrays)."""
+    if overlay is None:
+        return None, None
+    gidx = jnp.arange(n_events, dtype=jnp.int32)
+    z = u = None
+    if overlay.bid_sigma is not None:
+        z = crn.event_campaign_normals(
+            crn.stream_key(overlay.key, "bid_noise"), gidx, n_campaigns)
+    if overlay.part_prob is not None:
+        u = crn.event_campaign_uniforms(
+            crn.stream_key(overlay.key, "participation"), gidx, n_campaigns)
+    return z, u
+
+
+def _local_overlay(overlay: Optional[ScenarioOverlay]):
+    """The overlay without its key — the per-lane form threaded through the
+    round program (noise is already drawn; only (S, C) fields remain, so
+    scenario-axis sharding/chunking can slice every leaf uniformly)."""
+    if overlay is None:
+        return None
+    return dataclasses.replace(overlay, key=None)
+
+
 # One-launch fused-round VMEM budget: the kernel keeps TWO (S, G, C_pad)
 # float32 partials blocks + a (block_t, C_pad) values tile + ~6 (S, C_pad)
 # scenario-state blocks resident (docs/ALGORITHMS.md budget table: S=32
@@ -556,14 +631,19 @@ def lane_round(winners, prices, b, s_hat, active, cap, n_hat, rnd, retired,
 
 def _make_round_body(plan: SweepPlan, resolve: str, *, values_local,
                      rules_local, budgets_f32, n_events: int,
-                     n_campaigns: int, offset_fn, psum, use_interpret: bool):
+                     n_campaigns: int, offset_fn, psum, use_interpret: bool,
+                     overlay: Optional[ScenarioOverlay] = None,
+                     noise=(None, None)):
     """Build the per-round body for any (placement, resolve, chunks) cell.
 
     ``values_local`` is this device's event rows, ``offset_fn()`` the global
     index of its first row (0 off-mesh), ``psum`` the cross-device combiner
-    (identity off-mesh). The returned ``round_body(core, keep)`` maps the
-    carried Algorithm-2 state to the next round's state via
-    :func:`lane_commit`; the loop scaffolding freezes finished lanes.
+    (identity off-mesh). ``overlay`` carries this lane slice's (S_local, C)
+    intervention fields (key already stripped), ``noise`` the (local_n, C)
+    CRN draws aligned with ``values_local``. The returned
+    ``round_body(core, keep)`` maps the carried Algorithm-2 state to the
+    next round's state via :func:`lane_commit`; the loop scaffolding
+    freezes finished lanes.
     """
     sentinel = jnp.int32(never_capped(n_events))
     lane_pred = functools.partial(lane_predict, n_events=n_events)
@@ -580,17 +660,58 @@ def _make_round_body(plan: SweepPlan, resolve: str, *, values_local,
                              plan.block_t)
     two_pass = chunks is not None or (fused_kernel and not one_launch)
 
-    def resolve_all(v, active):
+    ol = overlay
+    z_local, u_local = noise if noise is not None else (None, None)
+    per_event = ol is not None and ol.per_event
+    live_static = None
+    if ol is not None and ol.live_start is not None and not per_event:
+        # time_varying=False promises every window is empty-or-full, so the
+        # windows fold into the activation mask once per round and every
+        # kernel back-end keeps working
+        live_static = ol.live_stop > ol.live_start
+    if per_event:
+        # placeholder rows for absent fields — the static presence gates in
+        # resolve_all keep them out of the generated program
+        shape = budgets_f32.shape
+        start_rows = (ol.live_start if ol.live_start is not None
+                      else jnp.zeros(shape, jnp.int32))
+        stop_rows = (ol.live_stop if ol.live_stop is not None
+                     else jnp.full(shape, n_events, jnp.int32))
+        sig_rows = (ol.bid_sigma if ol.bid_sigma is not None
+                    else jnp.zeros(shape, jnp.float32))
+        prob_rows = (ol.part_prob if ol.part_prob is not None
+                     else jnp.ones(shape, jnp.float32))
+
+    def resolve_all(v, act, offset, z, u):
         """(S_local, T) winners/prices of the rows in ``v`` — purely local,
-        no collectives (the auction is per-event)."""
-        if resolve == "pallas":
-            winners, prices, _ = resolve_ops.sweep_resolve(
-                v, rules_local.multipliers, active, rules_local.reserve,
-                second_price=second, block_t=plan.block_t,
-                interpret=use_interpret)
-            return winners, prices
-        return jax.vmap(lambda a, r: auction.resolve(v, a, r),
-                        in_axes=(0, 0))(active, rules_local)
+        no collectives (the auction is per-event). ``offset``/``z``/``u``
+        feed the per-event overlay path; the overlay-free program ignores
+        them."""
+        if not per_event:
+            if resolve == "pallas":
+                winners, prices, _ = resolve_ops.sweep_resolve(
+                    v, rules_local.multipliers, act, rules_local.reserve,
+                    second_price=second, block_t=plan.block_t,
+                    interpret=use_interpret)
+                return winners, prices
+            return jax.vmap(lambda a, r: auction.resolve(v, a, r),
+                            in_axes=(0, 0))(act, rules_local)
+        gidx = offset + jnp.arange(v.shape[0], dtype=jnp.int32)
+
+        def one(a, r, start, stop, sig, prob):
+            vv = v
+            if ol.bid_sigma is not None:
+                vv = vv * jnp.exp(sig[None, :] * z)
+            m = jnp.broadcast_to(a[None, :], vv.shape)
+            if ol.live_start is not None:
+                m = m & (gidx[:, None] >= start[None, :]) \
+                      & (gidx[:, None] < stop[None, :])
+            if ol.part_prob is not None:
+                m = m & (u < prob[None, :])
+            return auction.resolve(vv, m, r)
+
+        return jax.vmap(one)(act, rules_local, start_rows, stop_rows,
+                             sig_rows, prob_rows)
 
     def weighted_partials(winners, prices, lo, hi, offset):
         """(S_l, G, C) canonical partials of events in global ``[lo, hi)``,
@@ -614,35 +735,38 @@ def _make_round_body(plan: SweepPlan, resolve: str, *, values_local,
             skip_retired=plan.skip_retired, block_t=plan.block_t,
             interpret=use_interpret)
 
-    def window_partials(active, keep, lo, hi):
+    def window_partials(act, keep, lo, hi):
         """The two-pass reduction: psum'd (S_l, G, C) partials of the global
         window [lo, hi) — whole-shard kernel pass, or a chunk scan."""
         offset = offset_fn()
         if chunks is None:
-            return psum(kernel_partials(values_local, active, keep, lo, hi,
+            return psum(kernel_partials(values_local, act, keep, lo, hi,
                                         offset))
         epc = chunks.events_per_chunk
         n_chunks = local_n // epc
         v_chunks = values_local.reshape(n_chunks, epc,
                                         values_local.shape[1])
+        chunked = lambda x: None if x is None else x.reshape(
+            n_chunks, epc, n_campaigns)
 
         def step(acc, xs):
-            v_k, k = xs
+            v_k, z_k, u_k, k = xs
             off_k = offset + k * epc
             if fused_kernel:
-                parts_k = kernel_partials(v_k, active, keep, lo, hi, off_k)
+                parts_k = kernel_partials(v_k, act, keep, lo, hi, off_k)
             else:
-                winners, prices = resolve_all(v_k, active)
+                winners, prices = resolve_all(v_k, act, off_k, z_k, u_k)
                 parts_k = weighted_partials(winners, prices, lo, hi, off_k)
             # every canonical block is owned by exactly one chunk, so this
             # accumulation only ever adds exact zeros to a block's partial —
             # the chunk-scan analogue of the mesh psum's exactness
             return acc + parts_k, None
 
-        acc0 = jnp.zeros((active.shape[0], seg_lib.REDUCE_BLOCKS,
+        acc0 = jnp.zeros((act.shape[0], seg_lib.REDUCE_BLOCKS,
                           n_campaigns), jnp.float32)
         parts, _ = jax.lax.scan(
-            step, acc0, (v_chunks, jnp.arange(n_chunks, dtype=jnp.int32)))
+            step, acc0, (v_chunks, chunked(z_local), chunked(u_local),
+                         jnp.arange(n_chunks, dtype=jnp.int32)))
         return psum(parts)
 
     def rate_of(parts_s, nh):
@@ -652,11 +776,16 @@ def _make_round_body(plan: SweepPlan, resolve: str, *, values_local,
 
     def round_body(core, keep):
         s_hat, active, cap, n_hat, rnd, retired, bnds = core
+        # static live windows AND into the mask every resolve sees;
+        # lane_predict keeps the carried `active` (a masked-off campaign
+        # never wins, so its rate is 0 and its ttl is inf either way —
+        # bitwise identical across the two conventions)
+        act = active if live_static is None else active & live_static
         if one_launch:
             # resolve + rate partials + in-kernel prediction + block
             # partials in ONE launch; winners/prices never reach HBM
             _, block_parts, c_next, no_cap, n_next = resolve_ops.round_fused(
-                values_local, rules_local.multipliers, active,
+                values_local, rules_local.multipliers, act,
                 rules_local.reserve, b, s_hat, n_hat, keep,
                 reduce_blocks=seg_lib.REDUCE_BLOCKS, second_price=second,
                 skip_retired=plan.skip_retired, block_t=plan.block_t,
@@ -665,16 +794,17 @@ def _make_round_body(plan: SweepPlan, resolve: str, *, values_local,
         else:
             hi_all = jnp.full_like(n_hat, n_events)
             if two_pass:
-                rate_parts = window_partials(active, keep, n_hat, hi_all)
+                rate_parts = window_partials(act, keep, n_hat, hi_all)
             else:
-                winners, prices = resolve_all(values_local, active)
+                winners, prices = resolve_all(values_local, act, offset_fn(),
+                                              z_local, u_local)
                 rate_parts = psum(weighted_partials(winners, prices, n_hat,
                                                     hi_all, offset_fn()))
             rates = jax.vmap(rate_of)(rate_parts, n_hat)
             c_next, no_cap, n_next = jax.vmap(lane_pred)(rates, b, s_hat,
                                                          active, n_hat)
             if two_pass:
-                block_parts = window_partials(active, keep, n_hat, n_next)
+                block_parts = window_partials(act, keep, n_hat, n_next)
             else:
                 block_parts = psum(weighted_partials(winners, prices, n_hat,
                                                      n_next, offset_fn()))
@@ -742,7 +872,8 @@ def _unpack(core):
 def _run_lanes(plan: SweepPlan, resolve: str, *, values_local, mult_local,
                res_local, kind, budgets_f32, n_events: int,
                n_campaigns: int, offset_fn, psum, use_interpret: bool,
-               scenario_axis=None):
+               scenario_axis=None, overlay: Optional[ScenarioOverlay] = None,
+               noise=(None, None)):
     """Run the local scenario lanes through the round program, scanning
     fixed scenario chunks when the plan asks for (or auto-picks) them.
 
@@ -756,51 +887,62 @@ def _run_lanes(plan: SweepPlan, resolve: str, *, values_local, mult_local,
     """
     s_local = budgets_f32.shape[0]
 
-    def run(b_c, mult_c, res_c):
+    def run(b_c, mult_c, res_c, ol_c):
         rules_c = AuctionRule(multipliers=mult_c, reserve=res_c, kind=kind)
         round_body = _make_round_body(
             plan, resolve, values_local=values_local, rules_local=rules_c,
             budgets_f32=b_c, n_events=n_events, n_campaigns=n_campaigns,
-            offset_fn=offset_fn, psum=psum, use_interpret=use_interpret)
+            offset_fn=offset_fn, psum=psum, use_interpret=use_interpret,
+            overlay=ol_c, noise=noise)
         return _run_loop(round_body, s_local=b_c.shape[0],
                          n_events=n_events, n_campaigns=n_campaigns,
                          scenario_axis=scenario_axis)
 
     spc = planned_scenario_chunk(plan, s_local, n_campaigns, resolve)
     if spc is None or spc == s_local:
-        return run(budgets_f32, mult_local, res_local)
+        return run(budgets_f32, mult_local, res_local, overlay)
     n_chunks = s_local // spc
+    # the overlay's (S_local, C) fields slice along scenarios exactly like
+    # budgets/rules; the (local_n, C) noise fields are event-axis and stay
+    # closure-captured (shared by every scenario chunk — the CRN contract)
+    ol_chunks = None if overlay is None else jax.tree.map(
+        lambda x: x.reshape((n_chunks, spc) + x.shape[1:]), overlay)
     out = jax.lax.map(
         lambda xs: run(*xs),
         (budgets_f32.reshape(n_chunks, spc, n_campaigns),
          mult_local.reshape(n_chunks, spc, n_campaigns),
-         res_local.reshape(n_chunks, spc)))
+         res_local.reshape(n_chunks, spc),
+         ol_chunks))
     return jax.tree.map(lambda x: x.reshape((s_local,) + x.shape[2:]), out)
 
 
 @functools.partial(jax.jit, static_argnames=("plan",))
-def _sweep_batched(values, budgets, rules, plan: SweepPlan):
+def _sweep_batched(values, budgets, rules, overlay, plan: SweepPlan):
     """The scenario-batched Algorithm-2 loop on one device."""
     check_batch_shapes(values, budgets, rules)
     resolve = pick_resolve(plan.resolve)
     n_events, n_campaigns = values.shape
     n_scenarios = budgets.shape[0]
+    check_overlay(overlay, n_scenarios=n_scenarios, n_campaigns=n_campaigns,
+                  resolve=resolve, interpret=plan.interpret)
     check_chunks(plan.chunks, n_events=n_events, local_n=n_events)
     check_scenario_chunks(plan.scenario_chunks, n_scenarios=n_scenarios,
                           local_s=n_scenarios)
     use_interpret = (plan.interpret if plan.interpret is not None
                      else not resolve_ops.ON_TPU)
+    noise = _overlay_noise(overlay, n_events, n_campaigns)
     core = _run_lanes(
         plan, resolve, values_local=values, mult_local=rules.multipliers,
         res_local=jnp.asarray(rules.reserve, jnp.float32), kind=rules.kind,
         budgets_f32=budgets.astype(jnp.float32), n_events=n_events,
         n_campaigns=n_campaigns, offset_fn=lambda: 0, psum=lambda x: x,
-        use_interpret=use_interpret)
+        use_interpret=use_interpret, overlay=_local_overlay(overlay),
+        noise=noise)
     return _unpack(core)
 
 
 @functools.partial(jax.jit, static_argnames=("plan",))
-def _sweep_sharded(values, budgets, rules, plan: SweepPlan):
+def _sweep_sharded(values, budgets, rules, overlay, plan: SweepPlan):
     """The same loop under ``shard_map`` on ``plan.mesh``: events sharded
     over ``spec.event_axes``, scenarios vmapped per device or sharded over
     ``spec.scenario_axis``; two psums per round (one per reduction)."""
@@ -809,6 +951,9 @@ def _sweep_sharded(values, budgets, rules, plan: SweepPlan):
     resolve = pick_resolve(plan.resolve)
     n_events, n_campaigns = values.shape
     local_n = n_events // spec.event_device_count
+    check_overlay(overlay, n_scenarios=budgets.shape[0],
+                  n_campaigns=n_campaigns, resolve=resolve,
+                  interpret=plan.interpret)
     check_chunks(plan.chunks, n_events=n_events, local_n=local_n)
     check_scenario_chunks(
         plan.scenario_chunks, n_scenarios=budgets.shape[0],
@@ -822,12 +967,23 @@ def _sweep_sharded(values, budgets, rules, plan: SweepPlan):
     spec_sc2 = P(sc, None)        # (S, ...) arrays; sc=None -> replicated
     spec_sc1 = P(sc)
 
+    # the overlay's CRN noise is drawn ONCE on global indices and sharded
+    # like the event log, so every device sees the identical draws its rows
+    # would see on one device; the (S, C) overlay fields shard with the
+    # scenario arrays
+    z, u = _overlay_noise(overlay, n_events, n_campaigns)
+    ol_local = _local_overlay(overlay)
+    ol_spec = jax.tree.map(lambda _: spec_sc2, ol_local)
+    noise_spec = jax.tree.map(lambda _: spec_vals, (z, u))
+
     @functools.partial(
         shard_map, mesh=spec.mesh,
-        in_specs=(spec_vals, spec_sc2, spec_sc2, spec_sc1),
+        in_specs=(spec_vals, spec_sc2, spec_sc2, spec_sc1, ol_spec,
+                  noise_spec),
         out_specs=(spec_sc2, spec_sc2, spec_sc2, spec_sc2, spec_sc1,
                    spec_sc1))
-    def _driver(values_local, b_local, mult_local, res_local):
+    def _driver(values_local, b_local, mult_local, res_local, ol_shard,
+                noise_shard):
         core = _run_lanes(
             plan, resolve, values_local=values_local,
             mult_local=mult_local, res_local=res_local, kind=rules.kind,
@@ -835,14 +991,17 @@ def _sweep_sharded(values, budgets, rules, plan: SweepPlan):
             n_campaigns=n_campaigns,
             offset_fn=lambda: global_event_offset(axes, local_n),
             psum=lambda x: jax.lax.psum(x, axes),
-            use_interpret=use_interpret, scenario_axis=sc)
+            use_interpret=use_interpret, scenario_axis=sc,
+            overlay=ol_shard, noise=noise_shard)
         return _unpack(core)
 
     return _driver(values, budgets, rules.multipliers,
-                   jnp.asarray(rules.reserve, jnp.float32))
+                   jnp.asarray(rules.reserve, jnp.float32), ol_local,
+                   (z, u))
 
 
-def execute_sweep(values, budgets, rules, plan: SweepPlan):
+def execute_sweep(values, budgets, rules, plan: SweepPlan, *,
+                  overlay: Optional[ScenarioOverlay] = None):
     """Run the Algorithm-2 sweep program described by ``plan``.
 
     ``placement="batched"``/``"sharded"`` take batched inputs (budgets
@@ -850,18 +1009,32 @@ def execute_sweep(values, budgets, rules, plan: SweepPlan):
     cap_times (S, C), retired (S, C+1), boundaries (S, C+2), num_rounds
     (S,), n_hat (S,))``; ``placement="device"`` takes ONE scenario
     (budgets (C,), unstacked rule) and returns the unbatched tuple.
+
+    ``overlay`` threads a :class:`~repro.core.types.ScenarioOverlay`
+    (per-scenario live windows, CRN bid noise / participation jitter —
+    the lowering target of :mod:`repro.scenarios`) through the round body;
+    ``None`` generates the exact overlay-free program. For
+    ``placement="device"`` the overlay's array fields are unbatched
+    ``(C,)`` rows, matching the unbatched budgets/rule.
     """
     if plan.placement == "sharded":
-        return _sweep_sharded(values, budgets, rules, plan)
+        return _sweep_sharded(values, budgets, rules, overlay, plan)
     if plan.placement == "device":
         rules_b = AuctionRule(
             multipliers=rules.multipliers[None, :],
             reserve=jnp.asarray(rules.reserve, jnp.float32)[None],
             kind=rules.kind)
-        out = _sweep_batched(values, budgets[None, :], rules_b,
+        if overlay is not None:
+            expand = lambda x: None if x is None else x[None]
+            overlay = dataclasses.replace(
+                overlay, live_start=expand(overlay.live_start),
+                live_stop=expand(overlay.live_stop),
+                bid_sigma=expand(overlay.bid_sigma),
+                part_prob=expand(overlay.part_prob))
+        out = _sweep_batched(values, budgets[None, :], rules_b, overlay,
                              dataclasses.replace(plan, placement="batched"))
         return tuple(x[0] for x in out)
-    return _sweep_batched(values, budgets, rules, plan)
+    return _sweep_batched(values, budgets, rules, overlay, plan)
 
 
 def check_s2a_options(plan: SweepPlan, record_events: bool = False) -> None:

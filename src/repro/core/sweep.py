@@ -114,6 +114,7 @@ def sweep_parallel(
     skip_retired: bool = True,
     chunks=None,                  # int | ChunkSpec — event-chunked streaming
     scenario_chunks=None,         # int | ScenarioChunkSpec — S-axis chunks
+    overlay=None,                 # ScenarioOverlay — intervention overlay
 ) -> SimResult:
     """Algorithm 2 over a scenario batch: one device program, serial depth
     ``max_s K_s``. The batched while_loop runs until the slowest scenario
@@ -147,13 +148,18 @@ def sweep_parallel(
       unchunked sweep for any size dividing the per-device scenario count
       (pad-or-error otherwise). Composes with both drivers, every resolve
       back-end, and event ``chunks=``.
+    * ``overlay`` (a :class:`~repro.core.types.ScenarioOverlay`) threads
+      per-scenario interventions — live windows, CRN bid noise,
+      participation jitter (:mod:`repro.scenarios`) — through the round
+      body. ``None`` generates the exact overlay-free program; a null
+      overlay is bitwise the base sweep.
     """
     plan = plan_for_driver(driver, resolve=resolve, block_t=block_t,
                            interpret=interpret, skip_retired=skip_retired,
                            mesh=mesh, chunks=chunks,
                            scenario_chunks=scenario_chunks)
     s_hat, cap_times, _, _, _, _ = execute_sweep(values, budgets, rules,
-                                                 plan)
+                                                 plan, overlay=overlay)
     return SimResult(final_spend=s_hat, cap_times=cap_times,
                      winners=None, prices=None, segments=None)
 
@@ -172,6 +178,7 @@ def sweep_state_machine(
     skip_retired: bool = True,
     chunks=None,
     scenario_chunks=None,
+    overlay=None,
 ):
     """The Algorithm-2 loop over an explicit scenario batch: ONE resolve of
     the shared event log per round for ALL scenarios.
@@ -195,7 +202,7 @@ def sweep_state_machine(
                      interpret=interpret, skip_retired=skip_retired,
                      chunks=as_chunk_spec(chunks),
                      scenario_chunks=as_scenario_chunk_spec(scenario_chunks))
-    return execute_sweep(values, budgets, rules, plan)
+    return execute_sweep(values, budgets, rules, plan, overlay=overlay)
 
 
 @functools.partial(jax.jit,

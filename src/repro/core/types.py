@@ -66,6 +66,67 @@ class AuctionRule:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class ScenarioOverlay:
+    """Per-scenario intervention overlay for the sweep executor.
+
+    A :class:`~repro.core.counterfactual.ScenarioGrid` carries per-scenario
+    *designs* (multipliers, reserves, budgets); an overlay carries what a
+    design cannot: per-scenario **eligibility** and **stochastic bid
+    perturbations**, the lowering target of :mod:`repro.scenarios`. All
+    array fields are optional (``None`` = axis absent, zero cost) and
+    scenario-batched ``(S, C)``:
+
+    * ``live_start`` / ``live_stop`` — half-open global event window
+      ``[start, stop)`` outside which campaign ``c`` is ineligible in
+      scenario ``s``. ``(0, 0)`` pauses a campaign for the whole log,
+      ``(0, N)`` is the identity, ``(t0, N)`` a delayed start, ``(t0, t1)``
+      a pacing window. Present together or not at all.
+    * ``bid_sigma`` — multiplicative log-normal bid noise: effective values
+      are ``values * exp(sigma[s, c] * z[n, c])`` with ``z`` drawn from the
+      family ``key``'s ``"bid_noise"`` CRN stream (:mod:`repro.core.crn`) —
+      one draw per (event, campaign), shared by every scenario.
+    * ``part_prob`` — participation probability: campaign ``c`` is eligible
+      at event ``n`` iff ``u[n, c] < prob[s, c]``, ``u`` from the
+      ``"participation"`` CRN stream (again shared across scenarios).
+    * ``key`` — the family PRNG key the CRN streams derive from (required
+      when ``bid_sigma`` or ``part_prob`` is present).
+    * ``time_varying`` (static) — promises whether any live window is a
+      *proper* subrange of the log. ``False`` asserts every window is empty
+      or full, letting the executor fold the windows into the activation
+      mask once (kernel back-ends keep working); ``True`` forces the
+      per-event jnp eligibility path.
+
+    The executor's contract (tests/test_scenarios.py): a null overlay
+    (full windows, ``sigma=0``, ``prob=1``) is bitwise the no-overlay
+    program, and overlays compose bit-for-bit with every placement /
+    resolve / chunking axis.
+    """
+
+    live_start: Optional[jax.Array] = None   # (S, C) int32
+    live_stop: Optional[jax.Array] = None    # (S, C) int32
+    bid_sigma: Optional[jax.Array] = None    # (S, C) float32
+    part_prob: Optional[jax.Array] = None    # (S, C) float32
+    key: Optional[jax.Array] = None          # PRNG key for the CRN streams
+    time_varying: bool = dataclasses.field(default=False,
+                                           metadata=dict(static=True))
+
+    @property
+    def per_event(self) -> bool:
+        """Whether this overlay needs per-event eligibility/noise (the jnp
+        resolve path) rather than a static activation-mask fold."""
+        return (self.bid_sigma is not None or self.part_prob is not None
+                or self.time_varying)
+
+    @property
+    def num_scenarios(self) -> Optional[int]:
+        for f in (self.live_start, self.bid_sigma, self.part_prob):
+            if f is not None:
+                return f.shape[0]
+        return None
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class Segments:
     """A piecewise-constant activation history.
 

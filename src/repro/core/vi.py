@@ -28,8 +28,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import auction
-from repro.core.types import AuctionRule, never_capped
+from repro.core import auction, crn
+from repro.core.types import AuctionRule, ScenarioOverlay, never_capped
 
 
 @jax.tree_util.register_dataclass
@@ -73,9 +73,17 @@ def estimate_pi(
     pi0: Optional[jax.Array] = None,
     track_every: int = 0,         # record pi every `track_every` batches
     coupling: str = "shared",     # "shared" (comonotone) | "independent"
+    overlay_row: Optional[ScenarioOverlay] = None,   # (C,) fields
 ) -> PiEstimate:
-    """See module docstring. ``coupling`` picks how the Bernoulli activations
-    are drawn:
+    """See module docstring. ``overlay_row`` is a single scenario's slice of
+    a :class:`~repro.core.types.ScenarioOverlay` ((C,) fields): the VI then
+    estimates pi under the scenario's intervention semantics — sampled bids
+    perturbed by the ``"bid_noise"`` CRN stream at the sampled events'
+    *global* indices, eligibility masked by the live window and the
+    ``"participation"`` stream — so the estimate sees the same random world
+    the sweep executor replays (:mod:`repro.core.crn`).
+
+    ``coupling`` picks how the Bernoulli activations are drawn:
 
     * ``"shared"`` — ONE uniform per event, ``a_c = 1{u < pi_c}`` (the paper's
       "Draw u ~ Uniform(0,1)", read literally as a scalar). The active set is
@@ -93,12 +101,37 @@ def estimate_pi(
     sampled = values[idx]                                     # (k, C)
     btilde = budgets.astype(jnp.float32) / n_events
 
+    elig = None
+    if overlay_row is not None:
+        ol = overlay_row
+        if (ol.bid_sigma is not None or ol.part_prob is not None) \
+                and ol.key is None:
+            raise ValueError(
+                "overlay_row carries stochastic fields but no CRN key")
+        if ol.bid_sigma is not None:
+            z = crn.event_campaign_normals(
+                crn.stream_key(ol.key, "bid_noise"), idx, n_campaigns)
+            sampled = sampled * jnp.exp(ol.bid_sigma[None, :] * z)
+        elig = jnp.ones((sample_size, n_campaigns), bool)
+        if ol.live_start is not None:
+            gi = idx.astype(jnp.int32)[:, None]
+            elig = elig & (gi >= ol.live_start[None, :]) \
+                & (gi < ol.live_stop[None, :])
+        if ol.part_prob is not None:
+            u_p = crn.event_campaign_uniforms(
+                crn.stream_key(ol.key, "participation"), idx, n_campaigns)
+            elig = elig & (u_p < ol.part_prob[None, :])
+
     pad = (-sample_size) % batch_size
     sampled = jnp.pad(sampled, ((0, pad), (0, 0)))
     live = jnp.pad(jnp.ones((sample_size,), jnp.float32), (0, pad))
     n_batches = sampled.shape[0] // batch_size
     batches = sampled.reshape(n_batches, batch_size, n_campaigns)
     live = live.reshape(n_batches, batch_size)
+    e_batches = None
+    if elig is not None:
+        elig = jnp.pad(elig, ((0, pad), (0, 0)))
+        e_batches = elig.reshape(n_batches, batch_size, n_campaigns)
 
     pi = jnp.ones((n_campaigns,), jnp.float32) if pi0 is None else pi0
     total_batches = num_iters * n_batches
@@ -108,11 +141,13 @@ def estimate_pi(
 
     def body(carry, inp):
         pi, step = carry
-        vblock, w_live, k = inp
+        vblock, w_live, eblock, k = inp
         u_shape = ((batch_size, 1) if coupling == "shared"
                    else (batch_size, vblock.shape[-1]))
         u = jax.random.uniform(k, u_shape)
         active = u < pi[None, :]
+        if eblock is not None:
+            active = active & eblock
         winners, prices = auction.resolve(vblock, active, rule)
         prices = prices * w_live            # padded rows contribute nothing
         denom = jnp.maximum(w_live.sum(), 1.0)
@@ -128,8 +163,10 @@ def estimate_pi(
     keys = jax.random.split(k_events, total_batches)
     vseq = jnp.tile(batches, (num_iters, 1, 1))
     lseq = jnp.tile(live, (num_iters, 1))
+    eseq = None if e_batches is None else jnp.tile(e_batches,
+                                                  (num_iters, 1, 1))
     (pi, n_updates), hist = jax.lax.scan(body, (pi, jnp.int32(0)),
-                                         (vseq, lseq, keys))
+                                         (vseq, lseq, eseq, keys))
     history = None
     if track_every:
         history = hist[::track_every]
@@ -152,6 +189,7 @@ def estimate_pi_sweep(
     batch_size: int = 1,
     pi0: Optional[jax.Array] = None,   # (S, C) or None
     coupling: str = "shared",
+    overlay: Optional[ScenarioOverlay] = None,   # (S, C) fields
 ) -> PiEstimate:
     """Algorithm 4 over a scenario batch: :func:`estimate_pi` vmapped along
     the scenario axis with ONE shared PRNG key, so every scenario's VI sees
@@ -161,14 +199,30 @@ def estimate_pi_sweep(
     a far-from-base scenario gets cap times estimated under ITS OWN design,
     not the base design's (which can be many refine iterations away).
 
-    Returns a :class:`PiEstimate` whose ``pi`` is (S, C)."""
-    in_axes = (0, 0) if pi0 is None else (0, 0, 0)
-    args = (budgets, rules) if pi0 is None else (budgets, rules, pi0)
+    ``overlay`` (a scenario-batched
+    :class:`~repro.core.types.ScenarioOverlay`) estimates each scenario
+    under its intervention semantics; the overlay's CRN ``key`` is shared
+    across lanes (broadcast, not vmapped), so the per-(event, campaign)
+    noise draws are common to every scenario exactly as in the executor.
 
-    def one(b, r, *p0):
+    Returns a :class:`PiEstimate` whose ``pi`` is (S, C)."""
+    ol_axes = None
+    if overlay is not None:
+        present = lambda f: 0 if f is not None else None
+        ol_axes = ScenarioOverlay(
+            live_start=present(overlay.live_start),
+            live_stop=present(overlay.live_stop),
+            bid_sigma=present(overlay.bid_sigma),
+            part_prob=present(overlay.part_prob),
+            key=None, time_varying=overlay.time_varying)
+    in_axes = (0, 0, ol_axes) if pi0 is None else (0, 0, ol_axes, 0)
+    args = (budgets, rules, overlay) if pi0 is None \
+        else (budgets, rules, overlay, pi0)
+
+    def one(b, r, ol, *p0):
         return estimate_pi(
             values, b, r, key, sample_size=sample_size, num_iters=num_iters,
             eta=eta, eta_decay=eta_decay, batch_size=batch_size,
-            pi0=p0[0] if p0 else None, coupling=coupling)
+            pi0=p0[0] if p0 else None, coupling=coupling, overlay_row=ol)
 
     return jax.vmap(one, in_axes=in_axes)(*args)

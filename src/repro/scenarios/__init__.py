@@ -1,0 +1,33 @@
+"""Scenario families: targeted interventions under a CRN contract.
+
+The layer above the cartesian :class:`~repro.core.counterfactual.ScenarioGrid`
+(ROADMAP's "scenario diversity beyond the cartesian grid"): typed
+interventions (:mod:`~repro.scenarios.interventions`) compile
+(:func:`compile_family`) to the design arrays + eligibility/stochastic
+overlay the sweep executor consumes, with every random quantity drawn from
+per-(event, campaign) common-random-number streams (:mod:`repro.core.crn`)
+so scenario deltas isolate the intervention by construction. Shapley
+attribution (:func:`attribute`) decomposes the resulting deltas across named
+axes. See docs/ALGORITHMS.md "Scenario families and the CRN contract".
+"""
+from repro.scenarios.interventions import (AddEntrant, BidNoise,
+                                           BoostCampaign, BudgetPacing,
+                                           FamilyContext, Intervention,
+                                           MultiplierJitter,
+                                           ParticipationJitter,
+                                           PauseCampaign, ScaleBids,
+                                           ScaleBudget, ScaleBudgets,
+                                           ScenarioLane, SetReserve,
+                                           as_interventions)
+from repro.scenarios.family import CompiledFamily, compile_family
+from repro.scenarios.attribution import (ShapleyAttribution, attribute,
+                                         shapley_values)
+
+__all__ = [
+    "Intervention", "PauseCampaign", "BoostCampaign", "ScaleBids",
+    "ScaleBudget", "ScaleBudgets", "SetReserve", "BudgetPacing",
+    "AddEntrant", "BidNoise", "ParticipationJitter", "MultiplierJitter",
+    "ScenarioLane", "FamilyContext", "as_interventions",
+    "CompiledFamily", "compile_family",
+    "ShapleyAttribution", "attribute", "shapley_values",
+]

@@ -1,0 +1,202 @@
+"""Compile an intervention family down to the sweep executor's inputs.
+
+:func:`compile_family` takes a base design plus a list of scenario specs
+(each a sequence of :mod:`~repro.scenarios.interventions`) and lowers them to
+the three things the executor already understands:
+
+* a (possibly extended) valuation matrix — base campaigns plus one shared
+  column per distinct :class:`~repro.scenarios.interventions.AddEntrant`
+  slot;
+* a :class:`~repro.core.counterfactual.ScenarioGrid` of per-scenario design
+  arrays (multipliers, reserves, budgets);
+* an optional :class:`~repro.core.types.ScenarioOverlay` carrying what a
+  design cannot — per-scenario live windows and CRN stochastic axes.
+
+Scenario 0 is always the untouched base design, so every family is its own
+control: ``delta_table()`` rows and Shapley attributions are measured
+against a lane that is *bitwise* the overlay-free base program (the
+metamorphic contract in tests/test_scenarios.py).
+
+The compiler is deliberately eager about staying on the cheap path: a family
+whose interventions are all design-only (boosts, scalings, reserves,
+multiplier jitter) compiles to ``overlay=None`` — indistinguishable from a
+hand-built grid, every estimator and warm start available. Live windows are
+folded statically (``time_varying=False``) whenever every window is empty or
+full, which keeps the kernel resolve back-ends eligible; only proper
+sub-windows, bid noise, or participation jitter force the per-event jnp
+eligibility path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.counterfactual import ScenarioGrid
+from repro.core.types import AuctionRule, ScenarioOverlay
+from repro.scenarios.interventions import (AddEntrant, FamilyContext,
+                                           Intervention, ScenarioLane,
+                                           as_interventions)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledFamily:
+    """A scenario family lowered to executor inputs.
+
+    ``values`` spans the extended campaign axis (base + entrant slots);
+    ``grid`` / ``overlay`` are scenario-batched over it. Pass the family
+    straight to :meth:`repro.core.counterfactual.CounterfactualEngine.sweep`
+    in place of a grid.
+    """
+
+    values: jax.Array                    # (N, C_total)
+    grid: ScenarioGrid
+    overlay: Optional[ScenarioOverlay]
+    entrant_slots: dict                  # slot label -> extended column
+    base_index: int = 0
+
+    @property
+    def num_scenarios(self) -> int:
+        return self.grid.num_scenarios
+
+    @property
+    def num_entrants(self) -> int:
+        return len(self.entrant_slots)
+
+    @property
+    def labels(self) -> Tuple[str, ...]:
+        return self.grid.labels
+
+
+def _scenario_label(interventions: Sequence[Intervention]) -> str:
+    return " + ".join(i.label() for i in interventions) if interventions \
+        else "base"
+
+
+def compile_family(
+    values: jax.Array,                   # (N, C) base valuation matrix
+    budgets: jax.Array,                  # (C,) base budgets
+    rule: AuctionRule,                   # base design (single-scenario)
+    scenarios: Sequence,                 # specs accepted by as_interventions
+    *,
+    key: Optional[jax.Array] = None,     # family CRN root key
+    labels: Optional[Sequence[str]] = None,
+    include_base: bool = True,
+) -> CompiledFamily:
+    """Lower intervention scenarios to a :class:`CompiledFamily`.
+
+    ``scenarios`` is a sequence of scenario specs — each a single
+    :class:`~repro.scenarios.interventions.Intervention`, a sequence of them
+    (applied in order), or the grid-axis dict sugar. With ``include_base``
+    (default) an untouched base scenario is prepended at index 0, the
+    comparison lane for delta tables and the metamorphic tests.
+
+    ``key`` roots every CRN stream of the family (:mod:`repro.core.crn`):
+    bid noise, participation jitter, entrant values, multiplier jitter all
+    derive from it, so two families with the same key share their random
+    world draw-for-draw. Required iff any intervention is stochastic.
+    """
+    values = jnp.asarray(values)
+    n_events, n_base = values.shape
+    specs = [tuple(as_interventions(s)) for s in scenarios]
+    if include_base:
+        specs.insert(0, ())
+    if not specs:
+        raise ValueError("compile_family needs at least one scenario")
+
+    # Allocate one extended column per distinct AddEntrant slot label, in
+    # order of first appearance across the family.
+    entrant_slots: dict = {}
+    entrant_specs: dict = {}
+    for spec in specs:
+        for iv in spec:
+            if isinstance(iv, AddEntrant):
+                if iv.slot not in entrant_slots:
+                    entrant_slots[iv.slot] = n_base + len(entrant_slots)
+                    entrant_specs[iv.slot] = iv
+    n_total = n_base + len(entrant_slots)
+    ctx = FamilyContext(n_events=n_events, n_base=n_base, n_total=n_total,
+                        entrant_slots=entrant_slots, key=key)
+
+    # One shared valuation column per slot (CRN: the same entrant sees the
+    # same per-event values in every scenario it appears in).
+    if entrant_slots:
+        cols = [entrant_specs[slot].column_values(ctx)
+                for slot in entrant_slots]
+        values = jnp.concatenate(
+            [values, jnp.stack(cols, axis=1).astype(values.dtype)], axis=1)
+
+    base_budgets = np.zeros((n_total,), np.float64)
+    base_budgets[:n_base] = np.asarray(budgets, np.float64)
+    base_mult = np.zeros((n_total,), np.float64)
+    base_mult[:n_base] = np.asarray(rule.multipliers, np.float64)
+    base_reserve = float(rule.reserve)
+
+    lanes = []
+    for spec in specs:
+        lane = ScenarioLane(
+            budgets=base_budgets.copy(),
+            multipliers=base_mult.copy(),
+            reserve=base_reserve,
+            # base campaigns live for the whole log; entrant slots paused
+            # until an AddEntrant opens their window
+            live_start=np.zeros((n_total,), np.int64),
+            live_stop=np.concatenate([
+                np.full((n_base,), n_events, np.int64),
+                np.zeros((len(entrant_slots),), np.int64)]),
+            bid_sigma=np.zeros((n_total,), np.float64),
+            part_prob=np.ones((n_total,), np.float64),
+        )
+        for iv in spec:
+            iv.apply(lane, ctx)
+        lanes.append(lane)
+
+    stack = lambda field: np.stack([getattr(l, field) for l in lanes])
+    start, stop = stack("live_start"), stack("live_stop")
+    sigma, prob = stack("bid_sigma"), stack("part_prob")
+
+    empty = stop <= start
+    full = (start == 0) & (stop == n_events)
+    windows_deviate = bool(np.any(~full))
+    time_varying = bool(np.any(~empty & ~full))
+    sigma_any = bool(np.any(sigma != 0.0))
+    prob_any = bool(np.any(prob != 1.0))
+
+    overlay = None
+    if windows_deviate or sigma_any or prob_any:
+        if (sigma_any or prob_any) and key is None:
+            raise ValueError(
+                "stochastic interventions (BidNoise / ParticipationJitter) "
+                "draw from the family CRN streams; pass key= to "
+                "compile_family")
+        overlay = ScenarioOverlay(
+            live_start=jnp.asarray(start, jnp.int32)
+            if windows_deviate else None,
+            live_stop=jnp.asarray(stop, jnp.int32)
+            if windows_deviate else None,
+            bid_sigma=jnp.asarray(sigma, jnp.float32) if sigma_any else None,
+            part_prob=jnp.asarray(prob, jnp.float32) if prob_any else None,
+            key=key if (sigma_any or prob_any) else None,
+            time_varying=time_varying)
+
+    rules = AuctionRule(
+        multipliers=jnp.asarray(stack("multipliers"), jnp.float32),
+        reserve=jnp.asarray([l.reserve for l in lanes], jnp.float32),
+        kind=rule.kind)
+    if labels is not None:
+        labels = tuple(labels)
+        if include_base:
+            labels = ("base",) + labels
+        if len(labels) != len(specs):
+            raise ValueError(
+                f"{len(labels)} labels for {len(specs)} scenarios")
+    else:
+        labels = tuple(_scenario_label(spec) for spec in specs)
+    grid = ScenarioGrid(rules=rules,
+                        budgets=jnp.asarray(stack("budgets"), jnp.float32),
+                        labels=labels)
+    return CompiledFamily(values=values, grid=grid, overlay=overlay,
+                          entrant_slots=entrant_slots, base_index=0)

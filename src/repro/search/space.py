@@ -3,10 +3,13 @@
 A :class:`SearchSpace` bounds any subset of the three
 :meth:`~repro.core.counterfactual.ScenarioGrid.product` axes — ``bid_scale``
 (multiplies every campaign's bid multiplier), ``reserve`` (the auction
-reserve price), ``budget_scale`` (scales every campaign's budget). A *point*
-is a plain ``{axis: float}`` dict over the bounded axes; axes left unbounded
-stay at the engine's base design. A *box* is a ``{axis: (lo, hi)}`` dict —
-the optimizers shrink boxes, the space clips them to its bounds.
+reserve price), ``budget_scale`` (scales every campaign's budget) — plus
+per-campaign ``boost[c]`` axes declared via ``campaign_boost`` (campaign ``c``'s
+individual multiplier scaling, the search-side face of
+:class:`repro.scenarios.BoostCampaign`). A *point* is a plain
+``{axis: float}`` dict over the bounded axes; axes left unbounded stay at
+the engine's base design. A *box* is a ``{axis: (lo, hi)}`` dict — the
+optimizers shrink boxes, the space clips them to its bounds.
 """
 from __future__ import annotations
 
@@ -22,28 +25,59 @@ Box = Dict[str, Tuple[float, float]]
 
 @dataclasses.dataclass(frozen=True)
 class SearchSpace:
-    """Box bounds over the scenario-design axes (``None`` = not searched)."""
+    """Box bounds over the scenario-design axes (``None`` = not searched).
+
+    ``campaign_boost`` maps campaign indices to ``(lo, hi)`` bounds for that
+    campaign's ``boost[c]`` axis — a dict or a sequence of ``(c, (lo, hi))``
+    pairs, normalized to a sorted tuple so the space stays hashable.
+    """
 
     bid_scale: Optional[Tuple[float, float]] = None
     reserve: Optional[Tuple[float, float]] = None
     budget_scale: Optional[Tuple[float, float]] = None
+    campaign_boost: Optional[Tuple] = None
 
     def __post_init__(self):
+        if self.campaign_boost is not None:
+            items = (self.campaign_boost.items()
+                     if isinstance(self.campaign_boost, dict)
+                     else self.campaign_boost)
+            norm = tuple(sorted(
+                (int(c), (float(lo), float(hi))) for c, (lo, hi) in items))
+            if len({c for c, _ in norm}) != len(norm):
+                raise ValueError(
+                    "campaign_boost bounds the same campaign twice")
+            object.__setattr__(self, "campaign_boost", norm or None)
         if not self.axes:
             raise ValueError(
                 "SearchSpace needs at least one bounded axis; give (lo, hi) "
-                f"bounds for one of {SEARCH_AXES}")
+                f"bounds for one of {SEARCH_AXES} or a campaign_boost entry")
         for a in self.axes:
-            lo, hi = getattr(self, a)
+            lo, hi = self._bounds_of(a)
             if not (lo <= hi):
                 raise ValueError(f"SearchSpace.{a}: lo={lo} > hi={hi}")
 
+    def _bounds_of(self, axis: str) -> Tuple[float, float]:
+        if axis in SEARCH_AXES:
+            b = getattr(self, axis)
+            if b is None:
+                raise KeyError(f"axis {axis!r} is not bounded")
+            return b
+        if axis.startswith("boost[") and axis.endswith("]"):
+            c = int(axis[6:-1])
+            for cc, b in (self.campaign_boost or ()):
+                if cc == c:
+                    return b
+        raise KeyError(f"axis {axis!r} is not bounded by this space")
+
     @property
     def axes(self) -> Tuple[str, ...]:
-        return tuple(a for a in SEARCH_AXES if getattr(self, a) is not None)
+        base = tuple(a for a in SEARCH_AXES if getattr(self, a) is not None)
+        boost = tuple(f"boost[{c}]" for c, _ in (self.campaign_boost or ()))
+        return base + boost
 
     def bounds(self) -> Box:
-        return {a: tuple(map(float, getattr(self, a))) for a in self.axes}
+        return {a: tuple(map(float, self._bounds_of(a))) for a in self.axes}
 
     def widths(self, box: Optional[Box] = None) -> Dict[str, float]:
         box = self.bounds() if box is None else box
@@ -56,7 +90,7 @@ class SearchSpace:
     def clip(self, point: Point) -> Point:
         out = {}
         for a in self.axes:
-            lo, hi = getattr(self, a)
+            lo, hi = self._bounds_of(a)
             out[a] = min(max(float(point.get(a, 0.5 * (lo + hi))), lo), hi)
         return out
 
@@ -95,7 +129,7 @@ class SearchSpace:
         box = self.bounds() if box is None else box
         out = {}
         for a, (lo, hi) in box.items():
-            s_lo, s_hi = getattr(self, a)
+            s_lo, s_hi = self._bounds_of(a)
             half = 0.5 * (hi - lo) * factor
             c = min(max(float(point[a]), s_lo + half), s_hi - half) \
                 if s_hi - s_lo >= 2 * half else 0.5 * (s_lo + s_hi)

@@ -117,6 +117,8 @@ def estimate_exit_steps(
     """
     rng = key or np.random.default_rng(0)
     b = token_budgets.shape[0]
+    if b == 0:
+        return np.zeros((0,), np.float64)
     u = rng.random((n_samples, 1, token_budgets.max()))
     # shared across requests (axis 1 broadcast): comonotone coupling
     alive = np.cumprod(u < eos_survival, axis=2)          # (S, 1, T)
@@ -131,6 +133,9 @@ def plan_compactions(exit_estimates: np.ndarray, max_segments: int = 4,
     points that minimise wasted slot-steps (batch slots kept alive past their
     request's exit), aggregate into fixed-shape segments."""
     b = exit_estimates.shape[0]
+    if b == 0:
+        return ServePlan(exit_estimates=exit_estimates,
+                         compaction_points=[], segments=[])
     total = int(total_steps or exit_estimates.max())
     order = np.sort(exit_estimates.astype(np.int64))
     # candidate compaction at each distinct exit; greedy pick the K with the

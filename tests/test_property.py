@@ -187,6 +187,44 @@ def test_scenario_chunked_sweep_bitwise_any_aligned_chunk(
                                   np.asarray(ref.cap_times), err_msg=label)
 
 
+@given(st.floats(0.05, 0.5), st.floats(0.5, 0.95),
+       st.sampled_from([None, 64, 128]),
+       st.sampled_from(["batched", "sharded"]))
+def test_crn_overlay_sweep_bitwise_any_layout(sigma, prob, epc, placement):
+    """The CRN contract at the executor layer: a stochastic overlay family
+    (bid noise + participation jitter) is bitwise invariant across event
+    chunks, scenario chunks, and sharding — noise draws depend only on the
+    global (event, campaign) cell, never on the execution layout. Runs the
+    mesh over however many devices are visible (4 in the forced-host CI
+    step)."""
+    from repro.core import CounterfactualEngine
+    from repro.launch.mesh import SweepMeshSpec
+    from repro.scenarios import (BidNoise, ParticipationJitter,
+                                 PauseCampaign, compile_family)
+    env = _sweep_env()
+    eng = CounterfactualEngine(env.values, env.budgets,
+                               AuctionRule.first_price(_SWEEP_C))
+    fam = compile_family(
+        env.values, env.budgets, eng.base_rule,
+        [BidNoise(sigma), [ParticipationJitter(prob), PauseCampaign(2)],
+         [BidNoise(sigma), ParticipationJitter(prob)]],
+        key=jax.random.PRNGKey(5))
+    ref = eng.sweep(fam)
+    kwargs = dict(chunks=epc, scenario_chunks=2)
+    if placement == "sharded":
+        kwargs.update(driver="sharded", mesh=SweepMeshSpec.for_devices())
+    out = eng.sweep(fam, **kwargs)
+    label = f"sigma={sigma} prob={prob} epc={epc} {placement}"
+    np.testing.assert_array_equal(np.asarray(out.results.final_spend),
+                                  np.asarray(ref.results.final_spend),
+                                  err_msg=label)
+    np.testing.assert_array_equal(np.asarray(out.results.cap_times),
+                                  np.asarray(ref.results.cap_times),
+                                  err_msg=label)
+    # the paused lane's campaign is exactly off, noise or not
+    assert np.asarray(out.results.final_spend)[2, 2] == 0.0
+
+
 @given(st.lists(st.integers(1, 100), min_size=1, max_size=8),
        st.integers(50, 200))
 def test_segments_from_cap_times_invariants(caps, n):

@@ -1,0 +1,128 @@
+"""Hypothesis-randomized metamorphic tests for the scenario CRN contract.
+
+The deterministic panel versions of these live in tests/test_scenarios.py;
+here the intervention specs themselves are drawn by hypothesis, so the
+metamorphics are exercised over random compositions of pause / boost /
+pacing / noise / participation interventions and random chunk schedules.
+CI runs this module under the forced multi-device step too (the sweeps
+pick up however many devices are visible).
+"""
+import functools
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import jax
+import numpy as np
+
+from repro.core import AuctionRule, CounterfactualEngine
+from repro.scenarios import (BidNoise, BoostCampaign, BudgetPacing,
+                             ParticipationJitter, PauseCampaign,
+                             compile_family)
+
+settings.register_profile("ci", deadline=None, max_examples=25,
+                          derandomize=True)
+settings.load_profile("ci")
+
+N, C = 512, 8
+
+
+@functools.lru_cache(maxsize=1)
+def _env():
+    from repro.data import make_synthetic_env
+    return make_synthetic_env(jax.random.PRNGKey(3), n_events=N,
+                              n_campaigns=C, emb_dim=6)
+
+
+def _engine():
+    env = _env()
+    return CounterfactualEngine(env.values, env.budgets,
+                                AuctionRule.first_price(C))
+
+
+def _spends_caps(swept):
+    return (np.asarray(swept.results.final_spend),
+            np.asarray(swept.results.cap_times))
+
+
+def _intervention_strategy():
+    pause = st.builds(PauseCampaign, st.integers(0, C - 1))
+    boost = st.builds(BoostCampaign, st.integers(0, C - 1),
+                      st.floats(0.5, 2.5))
+    pacing = st.builds(
+        lambda c, a, w: BudgetPacing(c, start=a, stop=min(a + w, N)),
+        st.integers(0, C - 1), st.integers(0, N - 1), st.integers(1, N))
+    noise = st.builds(BidNoise, st.floats(0.0, 0.5),
+                      st.one_of(st.none(), st.integers(0, C - 1)))
+    part = st.builds(ParticipationJitter, st.floats(0.5, 1.0),
+                     st.one_of(st.none(), st.integers(0, C - 1)))
+    return st.lists(st.one_of(pause, boost, pacing, noise, part),
+                    min_size=1, max_size=3).map(tuple)
+
+
+@given(_intervention_strategy(), st.sampled_from([None, 64, 128]),
+       st.sampled_from([None, 1, 3]))
+def test_crn_identical_specs_identical_lanes_any_chunking(spec, epc, spc):
+    """The SAME random intervention spec in two different lanes produces
+    bitwise identical outcomes, and the whole family is bitwise invariant
+    under every aligned event/scenario chunk schedule."""
+    eng = _engine()
+    fam = compile_family(eng.values, eng.budgets, eng.base_rule,
+                         [spec, spec], key=jax.random.PRNGKey(5))
+    spend, caps = _spends_caps(eng.sweep(fam))
+    np.testing.assert_array_equal(spend[2], spend[1])
+    np.testing.assert_array_equal(caps[2], caps[1])
+    out = eng.sweep(fam, chunks=epc, scenario_chunks=spc)
+    np.testing.assert_array_equal(np.asarray(out.results.final_spend),
+                                  spend, err_msg=f"epc={epc} spc={spc}")
+    np.testing.assert_array_equal(np.asarray(out.results.cap_times),
+                                  caps, err_msg=f"epc={epc} spc={spc}")
+
+
+@given(_intervention_strategy(), _intervention_strategy())
+def test_crn_delta_isolation_across_family_membership(spec_a, spec_b):
+    """Adding a random scenario to a family never changes any other lane's
+    bits: outcomes depend only on (family key, own interventions), so
+    deltas isolate the intervention by construction."""
+    eng = _engine()
+    key = jax.random.PRNGKey(5)
+    fam_a = compile_family(eng.values, eng.budgets, eng.base_rule,
+                           [spec_a], key=key)
+    fam_ab = compile_family(eng.values, eng.budgets, eng.base_rule,
+                            [spec_a, spec_b], key=key)
+    sp_a, ct_a = _spends_caps(eng.sweep(fam_a))
+    sp_ab, ct_ab = _spends_caps(eng.sweep(fam_ab))
+    np.testing.assert_array_equal(sp_ab[:2], sp_a)
+    np.testing.assert_array_equal(ct_ab[:2], ct_a)
+
+
+@given(_intervention_strategy(), _intervention_strategy())
+def test_crn_scenario_order_independence(spec_a, spec_b):
+    """Permuting the scenario list permutes the results bitwise — lane
+    outcomes carry no trace of their scenario index."""
+    eng = _engine()
+    key = jax.random.PRNGKey(5)
+    ab = compile_family(eng.values, eng.budgets, eng.base_rule,
+                        [spec_a, spec_b], key=key)
+    ba = compile_family(eng.values, eng.budgets, eng.base_rule,
+                        [spec_b, spec_a], key=key)
+    sp_ab, ct_ab = _spends_caps(eng.sweep(ab))
+    sp_ba, ct_ba = _spends_caps(eng.sweep(ba))
+    np.testing.assert_array_equal(sp_ab[1], sp_ba[2])
+    np.testing.assert_array_equal(sp_ab[2], sp_ba[1])
+    np.testing.assert_array_equal(ct_ab[1], ct_ba[2])
+
+
+@given(st.integers(0, C - 1), _intervention_strategy())
+def test_pause_property(c, extra):
+    """PauseCampaign(c) composed with ANY random interventions: campaign c
+    spends exactly 0 and never caps out."""
+    eng = _engine()
+    fam = compile_family(eng.values, eng.budgets, eng.base_rule,
+                         [tuple(extra) + (PauseCampaign(c),)],
+                         key=jax.random.PRNGKey(5))
+    spend, caps = _spends_caps(eng.sweep(fam))
+    assert spend[1, c] == 0.0
+    assert caps[1, c] == N + 1

@@ -83,6 +83,39 @@ def test_space_clip_and_shrink_stay_inside():
     assert hi <= 0.9
 
 
+def test_space_campaign_boost_axes():
+    """Per-campaign boost[c] axes: declared via campaign_boost, ordered by
+    campaign index, and handled by bounds/clip/grid exactly like the
+    built-in axes."""
+    s = SearchSpace(reserve=(0.0, 0.4), campaign_boost={3: (0.5, 2.0),
+                                                        1: (0.9, 1.1)})
+    assert s.axes == ("reserve", "boost[1]", "boost[3]")
+    assert s.bounds()["boost[3]"] == (0.5, 2.0)
+    assert "boost[7]" not in s.bounds()
+    assert s.clip({"boost[3]": 9.0})["boost[3]"] == 2.0
+    assert s.clip({})["boost[1]"] == pytest.approx(1.0)
+    pts = s.grid(8)
+    assert all(set(p) == set(s.axes) for p in pts)
+    box = s.shrink_around(s.clip({}), 0.5)
+    lo, hi = box["boost[3]"]
+    assert 0.5 <= lo < hi <= 2.0
+    with pytest.raises(ValueError, match="twice"):
+        SearchSpace(campaign_boost=((2, (0.5, 2.0)), (2, (0.5, 2.0))))
+
+
+def test_grid_from_points_boost_axis(golden_engine):
+    """boost[c] points multiply exactly campaign c's multiplier on top of
+    bid_scale; unknown axes are rejected."""
+    grid = golden_engine.grid_from_points(
+        [{"bid_scale": 1.0}, {"bid_scale": 2.0, "boost[0]": 3.0}])
+    m = np.asarray(grid.rules.multipliers)
+    np.testing.assert_allclose(m[1, 0], m[0, 0] * 6.0)
+    np.testing.assert_allclose(m[1, 1], m[0, 1] * 2.0)
+    assert "boost[0]×3" in grid.labels[1]
+    with pytest.raises(ValueError, match="unknown grid axis"):
+        golden_engine.grid_from_points([{"boost": 2.0}])
+
+
 # ---------------------------------------------------------------------------
 # EvaluationLedger
 # ---------------------------------------------------------------------------
@@ -152,6 +185,25 @@ def test_search_finds_known_optimal_reserve(golden_engine, method):
     swept = golden_engine.sweep(grid)
     rev = np.asarray(swept.results.revenue)
     assert res.best_value >= rev.max() * 0.98  # and no worse an optimum
+
+
+def test_search_over_boost_axis(golden_engine):
+    """A per-campaign boost axis drives the same inner sweep: on a
+    first-price log with unconstrained budgets, revenue is linear in
+    campaign 0's boost, so the search must run to the axis' upper bound —
+    and never step outside it."""
+    eng = CounterfactualEngine(golden_engine.values, golden_engine.budgets,
+                               AuctionRule.first_price(_GOLDEN_C))
+    space = SearchSpace(campaign_boost={0: (0.5, 2.0)})
+    res = eng.search(space, method="hillclimb", budget=64)
+    assert res.converged
+    assert 0.5 <= res.best_point["boost[0]"] <= 2.0
+    assert res.best_point["boost[0]"] > 1.9
+    assert res.evaluations == res.ledger.spent <= 64
+    base_rev = float(np.asarray(
+        eng.sweep(eng.grid_from_points([{}])).results.revenue)[0])
+    assert res.best_value == pytest.approx(
+        base_rev * res.best_point["boost[0]"], rel=1e-5)
 
 
 def test_search_respects_constraints(golden_engine):

@@ -63,3 +63,40 @@ def test_plan_segments_partition_horizon():
     ends = [e for _, e, _ in plan.segments]
     assert starts[0] == 0 and ends[-1] == 40
     assert starts[1:] == ends[:-1]
+
+
+def test_empty_batch():
+    """A drained queue (zero requests) plans to an empty, waste-free
+    schedule instead of crashing on max() of an empty array."""
+    est = estimate_exit_steps(np.zeros((0,), np.int64))
+    assert est.shape == (0,)
+    plan = plan_compactions(est)
+    assert plan.compaction_points == [] and plan.segments == []
+    assert wasted_slot_steps(plan, np.zeros((0,), np.int64)) == 0
+
+
+def test_queue_drain_ordering():
+    """Compaction points are sorted ascending and each segment's planned
+    live count is the number of requests whose estimated exit lies past the
+    segment start — so live counts drain monotonically as the batch
+    empties, and the segments partition the horizon."""
+    rng = np.random.default_rng(7)
+    exits = rng.integers(5, 300, size=48).astype(np.float64)
+    total = int(exits.max())
+    plan = plan_compactions(exits, max_segments=5, total_steps=total)
+    assert plan.compaction_points == sorted(plan.compaction_points)
+    assert len(set(plan.compaction_points)) == len(plan.compaction_points)
+    lives = [live for _, _, live in plan.segments]
+    assert lives == sorted(lives, reverse=True)
+    for start, _, live in plan.segments:
+        assert live == int((exits > start).sum())
+    starts = [s for s, _, _ in plan.segments]
+    ends = [e for _, e, _ in plan.segments]
+    assert starts[0] == 0 and ends[-1] == total
+    assert starts[1:] == ends[:-1]
+
+
+def test_single_request_plan():
+    plan = plan_compactions(np.asarray([17.0]), max_segments=4)
+    assert plan.segments == [(0, 17, 1)]
+    assert plan.compaction_points == []
