@@ -34,6 +34,13 @@ Four layers; the first three for S in a configurable schedule (default
   and reported with the evaluation counts from the search ledger. Written
   to its OWN json section (``sweep_search``) so the CI invocation that runs
   only this layer (``--layers search``) does not clobber the kernel rows.
+* ``service`` — the always-on service's incremental-append streaming fold
+  (``execute_sweep_resumable`` over the newest slab only, the O(new
+  events) causal-frontier update) vs a full-log exact replay
+  (``execute_sweep``) at the same S=8 design batch, for N in {2048, 8192}
+  with quarter-log slabs — ``common.time_pair`` interleaved medians,
+  written to its OWN json section (``sweep_service``) for the same
+  no-clobber reason as ``search``.
 
 ``--layers`` selects a subset (default: all).
 
@@ -57,7 +64,7 @@ from benchmarks.common import (bench_report, emit, sweep_argparser,
                                time_call, time_pair, update_bench_json)
 
 
-LAYERS = ("resolve", "round", "sweep", "stream", "search")
+LAYERS = ("resolve", "round", "sweep", "stream", "search", "service")
 
 
 def main(n_events: int = 2048, n_campaigns: int = 32,
@@ -250,6 +257,56 @@ def main(n_events: int = 2048, n_campaigns: int = 32,
         update_bench_json(out, "sweep_search", bench_report(
             search_records, n_events=n_events, n_campaigns=n_campaigns,
             search_budget=64, xatol=xatol))
+
+    # --- service layer: incremental append fold vs full-log replay --------
+    if "service" in layers:
+        from repro.core import execute_sweep, execute_sweep_resumable
+        from repro.core.executor import SweepPlan
+
+        service_s = 8
+        plan = SweepPlan(placement="batched", resolve="jnp")
+        service_records = []
+        for n_service in (2048, 8192):
+            env_n = make_synthetic_env(jax.random.PRNGKey(0),
+                                       n_events=n_service,
+                                       n_campaigns=n_campaigns, emb_dim=8)
+            grid_n = ScenarioGrid.product(
+                base, env_n.budgets,
+                bid_scales=[1.0 + 0.02 * i for i in range(service_s)])
+            slab = n_service // 4
+            # catch the carry up over the first three slabs off-clock —
+            # the appends a long-lived service has already folded
+            carry = None
+            for k in range(3):
+                _, carry = execute_sweep_resumable(
+                    env_n.values[k * slab:(k + 1) * slab], grid_n.budgets,
+                    grid_n.rules, plan, carry=carry)
+            last = env_n.values[3 * slab:]
+
+            def fold_last():
+                outs, _ = execute_sweep_resumable(last, grid_n.budgets,
+                                                  grid_n.rules, plan,
+                                                  carry=carry)
+                return outs[0]
+
+            def full_replay():
+                return execute_sweep(env_n.values, grid_n.budgets,
+                                     grid_n.rules, plan)[0]
+
+            us_i, us_f = time_pair(fold_last, full_replay, repeats=7,
+                                   warmup=1)
+            for path, us, n_ev in (("incremental_append", us_i, slab),
+                                   ("full_replay", us_f, n_service)):
+                ev_per_sec = n_ev / (us * 1e-6)
+                emit(f"service_N{n_service}_{path}", us,
+                     f"events_per_sec={ev_per_sec:.0f}")
+                service_records.append({
+                    "S": service_s, "N": n_service, "layer": "service",
+                    "path": path, "events_per_slab": slab,
+                    "us_per_call": round(us, 1),
+                    "events_per_sec": round(ev_per_sec, 1)})
+        update_bench_json(out, "sweep_service", bench_report(
+            service_records, n_campaigns=n_campaigns, slabs=4))
 
     if records:
         update_bench_json(out, "sweep_kernel", bench_report(

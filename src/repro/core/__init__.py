@@ -14,7 +14,9 @@ from repro.core.sort2aggregate import (sort2aggregate, refine_segments,
                                        refine_fixed_device,
                                        Sort2AggregateResult)
 from repro.core.executor import (SweepPlan, ChunkSpec, ScenarioChunkSpec,
-                                 execute_sweep, execute_s2a_sweep)
+                                 SweepCarry, execute_sweep,
+                                 execute_sweep_resumable, execute_s2a_sweep,
+                                 initial_carry)
 from repro.core.sweep import (sweep_sequential, sweep_parallel,
                               sweep_sort2aggregate, sweep_state_machine,
                               stack_rules, scenario_rule)
@@ -38,8 +40,9 @@ __all__ = [
     "PiEstimate",
     "sort2aggregate", "refine_segments", "refine_fixed_device",
     "Sort2AggregateResult",
-    "SweepPlan", "ChunkSpec", "ScenarioChunkSpec", "execute_sweep",
-    "execute_s2a_sweep",
+    "SweepPlan", "ChunkSpec", "ScenarioChunkSpec", "SweepCarry",
+    "execute_sweep", "execute_sweep_resumable", "execute_s2a_sweep",
+    "initial_carry",
     "sweep_sequential", "sweep_parallel", "sweep_sort2aggregate",
     "sweep_state_machine",
     "sweep_sharded", "sweep_sort2aggregate_sharded",

@@ -194,11 +194,17 @@ class SweepResult:
 
 class CounterfactualEngine:
     def __init__(self, values: jax.Array, budgets: jax.Array,
-                 base_rule: Optional[AuctionRule] = None):
+                 base_rule: Optional[AuctionRule] = None,
+                 service=None):
         self.values = values
         self.budgets = budgets
         self.n_events, self.n_campaigns = values.shape
         self.base_rule = base_rule or AuctionRule.first_price(self.n_campaigns)
+        # when bound to a serve.CounterfactualService (via service.engine()),
+        # parallel sweeps — and hence search() — route through the service's
+        # admission batch + delta-aware cache; answers stay bitwise identical
+        # (the service replays the same log through the same executor).
+        self.service = service
 
     def simulate(self, rule: Optional[AuctionRule] = None,
                  budgets: Optional[jax.Array] = None,
@@ -324,6 +330,7 @@ class CounterfactualEngine:
         # a CompiledFamily bundles (values, grid, overlay); unpack it so
         # everything below sees the plain grid + the family's event log
         from repro.scenarios.family import CompiledFamily
+        request = grid
         values, overlay = self.values, None
         if isinstance(grid, CompiledFamily):
             family = grid
@@ -350,6 +357,19 @@ class CounterfactualEngine:
                 "scenario_chunks= (scenario-chunked execution) currently "
                 "applies to method='parallel' sweeps only; drop "
                 f"scenario_chunks= for method={method!r}.")
+        if self.service is not None and method == "parallel":
+            # service-bound engine (service.engine()): answer through the
+            # service's admission batch + (log_version, fingerprint) cache.
+            # The service's execution plan wins over driver=/resolve=/
+            # chunks= here — every plan cell is bitwise identical, so this
+            # only changes placement, never answers.
+            if self.service.n_events != self.n_events:
+                raise ValueError(
+                    f"stale service-bound engine: the service log has "
+                    f"{self.service.n_events} events but this engine wraps "
+                    f"{self.n_events}; re-create it via service.engine() "
+                    "after append().")
+            return self.service.sweep(request, base_index=base_index)
         warm_start = {True: "base", False: None}.get(warm_start, warm_start)
         if warm_start not in (None, "base", "per_scenario"):
             raise ValueError(

@@ -388,6 +388,25 @@ def check_chunks(chunks: Optional[ChunkSpec], *, n_events: int,
             "divides the per-device event count, or drop chunks=.")
 
 
+def check_append_alignment(chunks: Optional[ChunkSpec], n_new: int) -> None:
+    """The append-side chunk contract: a slab appended to a growing log must
+    hold whole chunks, so every later chunk-scan step is a full chunk.
+
+    Raises the IDENTICAL "ragged chunk" pad-or-error message as a chunked
+    sweep (:func:`check_chunks`) — one contract text everywhere, asserted by
+    tests/test_scenario_sweep.py. The reduction-grid alignment branch is a
+    property of the *total* log at sweep time, not of one append (the
+    canonical block size grows with N), so this check constructs an
+    ``n_events`` whose block equals the chunk and only the ragged branch
+    can fire.
+    """
+    if chunks is None:
+        return
+    check_chunks(chunks,
+                 n_events=chunks.events_per_chunk * seg_lib.REDUCE_BLOCKS,
+                 local_n=n_new)
+
+
 def check_scenario_chunks(scenario_chunks: Optional[ScenarioChunkSpec], *,
                           n_scenarios: int, local_s: int) -> None:
     """The scenario-chunk alignment contract (the S-axis pad-or-error).
@@ -633,17 +652,21 @@ def _make_round_body(plan: SweepPlan, resolve: str, *, values_local,
                      rules_local, budgets_f32, n_events: int,
                      n_campaigns: int, offset_fn, psum, use_interpret: bool,
                      overlay: Optional[ScenarioOverlay] = None,
-                     noise=(None, None)):
+                     noise=(None, None), resume_offset: int = 0):
     """Build the per-round body for any (placement, resolve, chunks) cell.
 
     ``values_local`` is this device's event rows, ``offset_fn()`` the global
     index of its first row (0 off-mesh), ``psum`` the cross-device combiner
     (identity off-mesh). ``overlay`` carries this lane slice's (S_local, C)
     intervention fields (key already stripped), ``noise`` the (local_n, C)
-    CRN draws aligned with ``values_local``. The returned
-    ``round_body(core, keep)`` maps the carried Algorithm-2 state to the
-    next round's state via :func:`lane_commit`; the loop scaffolding
-    freezes finished lanes.
+    CRN draws aligned with ``values_local``. ``resume_offset`` is the
+    static global index of the first local row in a *resumable* fold
+    (:func:`execute_sweep_resumable`); non-zero offsets disqualify the
+    one-launch fused round, whose kernel assumes its rows start the log —
+    the two-pass shape places rows globally via ``index_offset`` instead.
+    The returned ``round_body(core, keep)`` maps the carried Algorithm-2
+    state to the next round's state via :func:`lane_commit`; the loop
+    scaffolding freezes finished lanes.
     """
     sentinel = jnp.int32(never_capped(n_events))
     lane_pred = functools.partial(lane_predict, n_events=n_events)
@@ -655,7 +678,7 @@ def _make_round_body(plan: SweepPlan, resolve: str, *, values_local,
     chunks = plan.chunks
     fused_kernel = resolve == "fused" and fused_runs_kernel(plan.interpret)
     one_launch = fused_kernel and plan.placement != "sharded" \
-        and chunks is None \
+        and chunks is None and resume_offset == 0 \
         and round_fused_fits(budgets_f32.shape[0], n_campaigns,
                              plan.block_t)
     two_pass = chunks is not None or (fused_kernel and not one_launch)
@@ -816,10 +839,12 @@ def _make_round_body(plan: SweepPlan, resolve: str, *, values_local,
 
 
 def _run_loop(round_body, *, s_local: int, n_events: int, n_campaigns: int,
-              scenario_axis=None):
+              scenario_axis=None, init_core=None):
     """The one while_loop every placement shares: run rounds until every
     lane (everywhere) has retired its last cap-out, freezing finished lanes
-    by select. Returns the carried core state."""
+    by select. Returns the carried core state. ``init_core`` overrides the
+    fresh initial state — the resumable fold seeds it from a
+    :class:`SweepCarry` (carried burnout state, fresh per-fold round log)."""
     sentinel = jnp.int32(never_capped(n_events))
 
     def alive(core):
@@ -846,15 +871,16 @@ def _run_loop(round_body, *, s_local: int, n_events: int, n_campaigns: int,
             new, core)
         return merged, global_any(alive(merged))
 
-    init_core = (
-        jnp.zeros((s_local, n_campaigns), jnp.float32),
-        jnp.ones((s_local, n_campaigns), bool),
-        jnp.full((s_local, n_campaigns), sentinel, jnp.int32),
-        jnp.zeros((s_local,), jnp.int32),
-        jnp.zeros((s_local,), jnp.int32),
-        jnp.full((s_local, n_campaigns + 1), -1, jnp.int32),
-        jnp.zeros((s_local, n_campaigns + 2), jnp.int32),
-    )
+    if init_core is None:
+        init_core = (
+            jnp.zeros((s_local, n_campaigns), jnp.float32),
+            jnp.ones((s_local, n_campaigns), bool),
+            jnp.full((s_local, n_campaigns), sentinel, jnp.int32),
+            jnp.zeros((s_local,), jnp.int32),
+            jnp.zeros((s_local,), jnp.int32),
+            jnp.full((s_local, n_campaigns + 1), -1, jnp.int32),
+            jnp.zeros((s_local, n_campaigns + 2), jnp.int32),
+        )
     core, _ = jax.lax.while_loop(
         lambda st: st[1], body, (init_core, global_any(alive(init_core))))
     return core
@@ -1035,6 +1061,166 @@ def execute_sweep(values, budgets, rules, plan: SweepPlan, *,
                              dataclasses.replace(plan, placement="batched"))
         return tuple(x[0] for x in out)
     return _sweep_batched(values, budgets, rules, overlay, plan)
+
+
+# ---------------------------------------------------------------------------
+# Resumable execution: fold new event slabs into carried burnout state
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SweepCarry:
+    """The per-scenario burnout state carried between resumable folds.
+
+    This is exactly the state the chunk scan already carries across event
+    chunks *within* a sweep — ``(s_hat, active, cap_times, n_hat)`` —
+    promoted to a first-class, persistable value so a long-lived service
+    can fold newly appended event slabs into it
+    (:func:`execute_sweep_resumable`) instead of replaying the whole log.
+
+    ``cap_times`` are GLOBAL event indices; campaigns that have not capped
+    hold the sentinel ``never_capped(n_events_seen)``, which each fold
+    re-maps to the grown log's sentinel (capped campaigns keep their
+    recorded index). ``n_events_seen`` (static metadata, not a leaf) is the
+    total number of events already folded in — the global offset of the
+    next fold's first row.
+
+    A registered pytree dataclass: it rides through ``jax.jit`` /
+    ``jax.device_get`` / ``jax.device_put`` and survives a pickle
+    round-trip with bitwise-identical continuation (tests/test_service.py —
+    the persistence seam multi-host serving needs).
+
+    Semantics note: a fold's round predictions use only the events seen so
+    far (no lookahead — Algorithm 2's remaining-rate estimates are
+    window-sums over the *available* log), so the carried state is the
+    **causal / streaming** estimator of the growing log. It is bitwise the
+    offline full-log sweep when the whole log arrives in one fold; once the
+    log is split across folds the offline estimator may predict different
+    cap-out rounds because it sees future events. The service's exact
+    ``ask`` path answers offline questions by replaying the full stored log
+    (docs/ARCHITECTURE.md "Service layer").
+    """
+
+    s_hat: jax.Array       # (S, C) float32 spend so far
+    active: jax.Array      # (S, C) bool   not-yet-capped mask
+    cap_times: jax.Array   # (S, C) int32  global cap indices / sentinel
+    n_hat: jax.Array       # (S,)   int32  global frontier per lane
+    n_events_seen: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_scenarios(self) -> int:
+        return self.s_hat.shape[0]
+
+    @property
+    def num_campaigns(self) -> int:
+        return self.s_hat.shape[1]
+
+
+def initial_carry(n_scenarios: int, n_campaigns: int) -> SweepCarry:
+    """The empty-log carry: nothing spent, everyone active, frontier at 0."""
+    return SweepCarry(
+        s_hat=jnp.zeros((n_scenarios, n_campaigns), jnp.float32),
+        active=jnp.ones((n_scenarios, n_campaigns), bool),
+        cap_times=jnp.full((n_scenarios, n_campaigns), never_capped(0),
+                           jnp.int32),
+        n_hat=jnp.zeros((n_scenarios,), jnp.int32),
+        n_events_seen=0)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "n_seen"))
+def _resume_batched(values_new, budgets, rules, s_hat0, active0, cap0,
+                    n_hat0, plan: SweepPlan, n_seen: int):
+    """One resumable fold: the batched round program over the NEW rows only,
+    seeded from carried state, with global indexing at offset ``n_seen``."""
+    resolve = pick_resolve(plan.resolve)
+    n_new, n_campaigns = values_new.shape
+    n_total = n_seen + n_new
+    check_chunks(plan.chunks, n_events=n_total, local_n=n_new)
+    use_interpret = (plan.interpret if plan.interpret is not None
+                     else not resolve_ops.ON_TPU)
+    sentinel = jnp.int32(never_capped(n_total))
+    # not-yet-capped campaigns carried the previous fold's sentinel; move
+    # them to the grown log's (capped campaigns keep their global index)
+    cap0 = jnp.where(active0, sentinel, cap0)
+    s_local = budgets.shape[0]
+    rules_c = AuctionRule(multipliers=rules.multipliers,
+                          reserve=jnp.asarray(rules.reserve, jnp.float32),
+                          kind=rules.kind)
+    round_body = _make_round_body(
+        plan, resolve, values_local=values_new, rules_local=rules_c,
+        budgets_f32=budgets.astype(jnp.float32), n_events=n_total,
+        n_campaigns=n_campaigns, offset_fn=lambda: n_seen,
+        psum=lambda x: x, use_interpret=use_interpret,
+        resume_offset=n_seen)
+    # carried burnout state + a FRESH per-fold round log (rnd/retired/bnds):
+    # every fold has the full C+1 round budget, and a fold can never exhaust
+    # it with lanes still active (each cap round retires a campaign; a
+    # no-cap round ends the lane), so active lanes always leave a fold with
+    # n_hat == the events seen — the next fold reads only its new rows
+    init_core = (
+        s_hat0.astype(jnp.float32), active0, cap0,
+        n_hat0.astype(jnp.int32),
+        jnp.zeros((s_local,), jnp.int32),
+        jnp.full((s_local, n_campaigns + 1), -1, jnp.int32),
+        jnp.zeros((s_local, n_campaigns + 2),
+                  jnp.int32).at[:, 0].set(n_hat0),
+    )
+    return _run_loop(round_body, s_local=s_local, n_events=n_total,
+                     n_campaigns=n_campaigns, init_core=init_core)
+
+
+def execute_sweep_resumable(values_new, budgets, rules, plan: SweepPlan, *,
+                            carry: Optional[SweepCarry] = None):
+    """Fold a slab of NEW event rows into carried per-scenario burnout state.
+
+    Returns ``(outputs, new_carry)``: ``outputs`` is the batched 6-tuple of
+    :func:`execute_sweep` for the updated state (``s_hat`` / ``cap_times``
+    are cumulative over every fold so far; ``retired`` / ``boundaries`` /
+    ``num_rounds`` log THIS fold's rounds only), ``new_carry`` the
+    :class:`SweepCarry` to pass back with the next slab. ``carry=None``
+    starts from the empty log, so a single fold over the whole log is
+    *bitwise* ``execute_sweep`` on it (tests/test_service.py); each
+    subsequent fold does O(new events) work per round — the frontier
+    ``n_hat`` sits at the previously seen event count, so rate and block
+    windows touch only the new rows.
+
+    Supported cells: ``placement="batched"`` (the service's streaming path;
+    shard the exact replay path instead to scale out), any resolve
+    back-end, optional event ``chunks=`` *within* a slab. Overlays and
+    ``scenario_chunks=`` are not supported here — register design-only
+    scenarios for streaming and route overlay families through the exact
+    replay path.
+    """
+    if plan.placement != "batched":
+        raise ValueError(
+            "execute_sweep_resumable runs placement='batched' only (the "
+            f"streaming fold is a single-device program), got "
+            f"{plan.placement!r}; use the exact replay path "
+            "(execute_sweep) for sharded placements.")
+    if plan.scenario_chunks is not None:
+        raise ValueError(
+            "scenario_chunks= is not supported by execute_sweep_resumable; "
+            "fold scenario groups separately instead.")
+    check_batch_shapes(values_new, budgets, rules)
+    n_new, n_campaigns = values_new.shape
+    if n_new < 1:
+        raise ValueError("resumable fold needs at least one new event row")
+    n_scenarios = budgets.shape[0]
+    if carry is None:
+        carry = initial_carry(n_scenarios, n_campaigns)
+    if tuple(carry.s_hat.shape) != (n_scenarios, n_campaigns):
+        raise ValueError(
+            f"carry/batch mismatch: carry holds "
+            f"{tuple(carry.s_hat.shape)} lanes but the fold got "
+            f"(S, C)=({n_scenarios}, {n_campaigns})")
+    core = _resume_batched(values_new, budgets, rules, carry.s_hat,
+                           carry.active, carry.cap_times, carry.n_hat,
+                           plan, carry.n_events_seen)
+    s_hat, active, cap, n_hat, _, _, _ = core
+    new_carry = SweepCarry(s_hat=s_hat, active=active, cap_times=cap,
+                           n_hat=n_hat,
+                           n_events_seen=carry.n_events_seen + n_new)
+    return _unpack(core), new_carry
 
 
 def check_s2a_options(plan: SweepPlan, record_events: bool = False) -> None:

@@ -19,7 +19,9 @@ from repro.scenarios.interventions import (AddEntrant, BidNoise,
                                            ScaleBudget, ScaleBudgets,
                                            ScenarioLane, SetReserve,
                                            as_interventions)
-from repro.scenarios.family import CompiledFamily, compile_family
+from repro.scenarios.family import (CompiledFamily, compile_family,
+                                    design_fingerprint, family_fingerprint,
+                                    family_fingerprints, grid_fingerprints)
 from repro.scenarios.attribution import (ShapleyAttribution, attribute,
                                          shapley_values)
 
@@ -28,6 +30,7 @@ __all__ = [
     "ScaleBudget", "ScaleBudgets", "SetReserve", "BudgetPacing",
     "AddEntrant", "BidNoise", "ParticipationJitter", "MultiplierJitter",
     "ScenarioLane", "FamilyContext", "as_interventions",
-    "CompiledFamily", "compile_family",
+    "CompiledFamily", "compile_family", "design_fingerprint",
+    "family_fingerprint", "family_fingerprints", "grid_fingerprints",
     "ShapleyAttribution", "attribute", "shapley_values",
 ]

@@ -29,6 +29,7 @@ eligibility path.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -69,6 +70,116 @@ class CompiledFamily:
     @property
     def labels(self) -> Tuple[str, ...]:
         return self.grid.labels
+
+    def fingerprints(self) -> Tuple[str, ...]:
+        """Per-scenario canonical fingerprints — see
+        :func:`family_fingerprints`."""
+        return family_fingerprints(self)
+
+    def fingerprint(self) -> str:
+        """Whole-family canonical fingerprint — see
+        :func:`family_fingerprint`."""
+        return family_fingerprint(self)
+
+
+# ---------------------------------------------------------------------------
+# Canonical fingerprints (the service cache's scenario identity)
+# ---------------------------------------------------------------------------
+
+def _canon(x, dtype) -> bytes:
+    """Canonical bytes of an array: contiguous, fixed dtype, EXACT bits.
+
+    No rounding anywhere — the service cache may only ever merge requests
+    whose executed programs are bit-identical, and the executed program
+    consumes exactly these float32/int32 values."""
+    return np.ascontiguousarray(np.asarray(jax.device_get(x),
+                                           dtype)).tobytes()
+
+
+def _key_bytes(key) -> bytes:
+    if key is None:
+        return b"no-key"
+    try:
+        data = jax.random.key_data(key)
+    except TypeError:                      # raw uint32 key arrays
+        data = key
+    return _canon(data, np.uint32)
+
+
+def design_fingerprint(*, kind: str, multipliers, reserve, budgets,
+                       extra: bytes = b"") -> str:
+    """Canonical fingerprint of ONE scenario design.
+
+    sha256 over the pricing ``kind`` and the exact float32 bytes of the
+    design arrays (multipliers, reserve, budgets), plus optional ``extra``
+    bytes (the per-scenario overlay row for families). Two designs share a
+    fingerprint iff the sweep executor would run the bit-identical
+    per-lane program for them, which is what makes the service cache key
+    ``(log_version, fingerprint)`` sound.
+    """
+    h = hashlib.sha256()
+    for part in (kind.encode(), b"|", _canon(multipliers, np.float32), b"|",
+                 _canon(reserve, np.float32), b"|",
+                 _canon(budgets, np.float32), b"|", extra):
+        h.update(part)
+    return h.hexdigest()
+
+
+def _overlay_extras(overlay: Optional[ScenarioOverlay],
+                    n_scenarios: int) -> list:
+    """Per-scenario canonical bytes of the overlay rows (empty bytes for
+    ``overlay=None`` — a design-only family fingerprints exactly like the
+    equivalent hand-built grid)."""
+    if overlay is None:
+        return [b""] * n_scenarios
+    rows = []
+    fields = (("live_start", np.int32), ("live_stop", np.int32),
+              ("bid_sigma", np.float32), ("part_prob", np.float32))
+    shared = _key_bytes(overlay.key) + (b"tv" if overlay.time_varying
+                                        else b"")
+    arrs = {name: (None if getattr(overlay, name) is None
+                   else np.asarray(jax.device_get(getattr(overlay, name))))
+            for name, _ in fields}
+    for s in range(n_scenarios):
+        row = b"overlay|" + shared
+        for name, dtype in fields:
+            arr = arrs[name]
+            row += (b"none" if arr is None else _canon(arr[s], dtype)) + b"|"
+        rows.append(row)
+    return rows
+
+
+def grid_fingerprints(grid: ScenarioGrid,
+                      overlay: Optional[ScenarioOverlay] = None
+                      ) -> Tuple[str, ...]:
+    """Per-scenario fingerprints of a grid (+ optional overlay rows)."""
+    extras = _overlay_extras(overlay, grid.num_scenarios)
+    mult = np.asarray(jax.device_get(grid.rules.multipliers))
+    res = np.asarray(jax.device_get(grid.rules.reserve))
+    buds = np.asarray(jax.device_get(grid.budgets))
+    return tuple(
+        design_fingerprint(kind=grid.rules.kind, multipliers=mult[s],
+                           reserve=res[s], budgets=buds[s], extra=extras[s])
+        for s in range(grid.num_scenarios))
+
+
+def family_fingerprints(family: CompiledFamily) -> Tuple[str, ...]:
+    """Per-scenario fingerprints of a :class:`CompiledFamily` — the design
+    row plus the scenario's overlay row (live windows, CRN sigmas/probs and
+    the family key they draw from)."""
+    return grid_fingerprints(family.grid, family.overlay)
+
+
+def family_fingerprint(family: CompiledFamily) -> str:
+    """Whole-family fingerprint: the valuation matrix digest (entrant
+    columns included), the entrant slot layout, and every scenario row."""
+    h = hashlib.sha256()
+    h.update(_canon(family.values, np.float32))
+    h.update(repr(sorted(family.entrant_slots.items())).encode())
+    h.update(str(family.base_index).encode())
+    for fp in family_fingerprints(family):
+        h.update(fp.encode())
+    return h.hexdigest()
 
 
 def _scenario_label(interventions: Sequence[Intervention]) -> str:

@@ -626,6 +626,31 @@ def test_misaligned_chunk_sizes_raise(env):
         sweep_parallel(env.values, grid.budgets, grid.rules, chunks=0)
 
 
+def test_misaligned_append_chunks_same_error_as_sweep(env):
+    """The service's append alignment speaks the executor's pad-or-error
+    contract VERBATIM: a slab that does not divide into whole chunks
+    raises the identical "ragged chunk" message sweep_parallel(chunks=...)
+    raises for the same misalignment."""
+    from repro.serve.counterfactual import CounterfactualService
+    grid = _grid(env, "first_price")
+
+    def msg(fn):
+        with pytest.raises(ValueError) as e:
+            fn()
+        return str(e.value)
+
+    msgs = {
+        msg(lambda: sweep_parallel(env.values, grid.budgets, grid.rules,
+                                   chunks=1536)),
+        msg(lambda: CounterfactualService(
+            env.budgets, events_per_chunk=1536).append(env.values)),
+        msg(lambda: CounterfactualService(
+            env.budgets, events_per_chunk=1536, events=env.values)),
+    }
+    assert len(msgs) == 1, msgs
+    assert "ragged chunk" in next(iter(msgs))
+
+
 def test_engine_chunks_require_parallel_method(env):
     engine = CounterfactualEngine(env.values, env.budgets)
     grid = engine.grid(bid_scales=[1.0, 1.1])

@@ -100,3 +100,72 @@ def test_single_request_plan():
     plan = plan_compactions(np.asarray([17.0]), max_segments=4)
     assert plan.segments == [(0, 17, 1)]
     assert plan.compaction_points == []
+
+
+def _wasted_loop(plan, true_exits):
+    """The original O(B*T) per-step recount — the vectorized
+    wasted_slot_steps must reproduce it exactly."""
+    waste = 0
+    for start, end, live in plan.segments:
+        for t in range(start, end):
+            active = int((true_exits > t).sum())
+            waste += max(live - active, 0)
+    return waste
+
+
+def test_wasted_slot_steps_matches_loop_reference():
+    """The searchsorted vectorization is golden against the per-step loop
+    across random batches, including float exits, ties, and misestimates
+    in both directions."""
+    rng = np.random.default_rng(11)
+    for trial in range(20):
+        b = int(rng.integers(1, 40))
+        exits = rng.integers(1, 120, size=b).astype(np.float64)
+        if trial % 3 == 0:
+            exits += rng.uniform(0.0, 0.9, size=b)  # fractional exits
+        est = exits * rng.uniform(0.6, 1.5, size=b)  # misestimated plan
+        total = int(max(exits.max(), est.max())) + 1
+        plan = plan_compactions(est, max_segments=int(rng.integers(1, 6)),
+                                total_steps=total)
+        assert wasted_slot_steps(plan, exits) == _wasted_loop(plan, exits), \
+            f"trial {trial}"
+
+
+def test_wasted_slot_steps_edge_cases():
+    assert wasted_slot_steps(plan_compactions(np.zeros((0,))),
+                             np.zeros((0,))) == 0
+    # single request, exact estimate: zero waste
+    plan = plan_compactions(np.asarray([10.0]), max_segments=3)
+    assert wasted_slot_steps(plan, np.asarray([10.0])) == 0
+    assert wasted_slot_steps(plan, np.asarray([10.0])) == \
+        _wasted_loop(plan, np.asarray([10.0]))
+    # all-tied exits collapse to one segment; early true exits leak waste
+    tied = np.full((6,), 20.0)
+    plan = plan_compactions(tied, max_segments=4, total_steps=20)
+    early = np.full((6,), 5.0)
+    assert wasted_slot_steps(plan, early) == _wasted_loop(plan, early) > 0
+
+
+def test_plan_compactions_invariants():
+    """Structural invariants for any input: segments tile [0, total),
+    live counts equal the planned survivor count at each segment start and
+    never increase, and the segment count respects max_segments."""
+    rng = np.random.default_rng(13)
+    for trial in range(20):
+        b = int(rng.integers(1, 60))
+        exits = rng.integers(1, 400, size=b).astype(np.float64)
+        max_segments = int(rng.integers(1, 7))
+        total = int(exits.max())
+        plan = plan_compactions(exits, max_segments=max_segments,
+                                total_steps=total)
+        starts = [s for s, _, _ in plan.segments]
+        ends = [e for _, e, _ in plan.segments]
+        assert starts[0] == 0 and ends[-1] == total, f"trial {trial}"
+        assert starts[1:] == ends[:-1], f"trial {trial}"
+        assert len(plan.segments) <= max_segments, f"trial {trial}"
+        lives = [live for _, _, live in plan.segments]
+        assert lives == sorted(lives, reverse=True), f"trial {trial}"
+        for start, _, live in plan.segments:
+            assert live == int((exits > start).sum()), f"trial {trial}"
+        assert plan.compaction_points == sorted(plan.compaction_points)
+        assert all(p > 0 for p in plan.compaction_points)

@@ -1,0 +1,140 @@
+"""Hypothesis properties for the always-on counterfactual service.
+
+The exact-path invariant, quantified: for ANY aligned append partition of
+the log and ANY executor plan cell (placement × resolve × scenario_chunks),
+asking the service after the final append is bitwise a one-shot
+``engine.sweep`` of the full log. Plus the streaming carry's contract: a
+whole-log single fold is bitwise the batch run for random designs, and any
+aligned multi-fold partition is deterministic (same partition, same bits).
+
+Runs in CI's forced-4-device property step alongside tests/test_property.py
+(the ``sharded`` placement draws exercise a real multi-device mesh there).
+"""
+import functools
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import jax
+import numpy as np
+
+from repro.core import (AuctionRule, CounterfactualEngine, ScenarioGrid,
+                        execute_sweep_resumable, stack_rules)
+from repro.core.executor import SweepPlan
+from repro.serve import CounterfactualService
+
+settings.register_profile("ci", deadline=None, max_examples=25,
+                          derandomize=True)
+settings.load_profile("ci")
+
+_N, _C = 512, 8
+_EPC = 64          # append granularity: all partitions are multiples of 64
+
+
+@functools.lru_cache(maxsize=1)
+def _env():
+    from repro.data import make_synthetic_env
+    return make_synthetic_env(jax.random.PRNGKey(3), n_events=_N,
+                              n_campaigns=_C, emb_dim=6)
+
+
+def _partition(boundaries):
+    """Sorted unique multiples of _EPC in (0, _N) -> slab lengths."""
+    cuts = sorted(set(boundaries))
+    edges = [0] + cuts + [_N]
+    return [b - a for a, b in zip(edges, edges[1:])]
+
+
+boundaries_strat = st.lists(
+    st.integers(1, _N // _EPC - 1).map(lambda k: k * _EPC),
+    min_size=0, max_size=6)
+
+
+@given(boundaries_strat,
+       st.sampled_from(["batched", "sharded"]),
+       st.sampled_from(["jnp", "fused"]),
+       st.sampled_from([None, 1, 2, 4]),
+       st.floats(0.7, 1.4), st.floats(0.2, 2.0))
+def test_service_ask_after_appends_bitwise_full_sweep(
+        boundaries, placement, resolve, spc, bid, bud):
+    """Incremental append + ask == one-shot sweep, for every aligned
+    partition × plan cell: the service's headline equivalence, quantified
+    over random split points and random scenario designs."""
+    env = _env()
+    grid = ScenarioGrid.product(AuctionRule.first_price(_C), env.budgets,
+                                bid_scales=[1.0, bid],
+                                budget_scales=[1.0, bud])
+    ref = CounterfactualEngine(env.values, env.budgets).sweep(grid)
+    kwargs = dict(resolve=resolve,
+                  interpret=True if resolve == "fused" else None,
+                  scenario_chunks=spc)
+    if placement == "sharded":
+        from repro.launch.mesh import SweepMeshSpec
+        kwargs.update(placement="sharded", mesh=SweepMeshSpec.for_devices())
+    svc = CounterfactualService(env.budgets, events_per_chunk=_EPC,
+                                **kwargs)
+    start = 0
+    for n in _partition(boundaries):
+        svc.append(env.values[start:start + n])
+        start += n
+    got = svc.sweep(grid)
+    label = (f"partition={_partition(boundaries)} {placement}/{resolve} "
+             f"spc={spc}")
+    np.testing.assert_array_equal(np.asarray(got.results.final_spend),
+                                  np.asarray(ref.results.final_spend),
+                                  err_msg=label)
+    np.testing.assert_array_equal(np.asarray(got.results.cap_times),
+                                  np.asarray(ref.results.cap_times),
+                                  err_msg=label)
+    assert svc.stats["appends"] == len(_partition(boundaries))
+
+
+@given(st.floats(0.5, 2.0), st.floats(0.2, 2.0), st.floats(0.0, 0.15))
+def test_streaming_single_fold_bitwise_batch(bid, bud, reserve):
+    """A whole-log single fold IS one full Algorithm-2 run: the streaming
+    carry matches the batch sweep bitwise for random designs."""
+    env = _env()
+    rule = AuctionRule(
+        multipliers=np.full((_C,), np.float32(bid)),
+        reserve=np.float32(reserve), kind="first_price")
+    budgets = env.budgets * np.float32(bud)
+    ref = CounterfactualEngine(env.values, env.budgets).sweep(
+        ScenarioGrid.from_scenarios([(rule, budgets)]))
+    svc = CounterfactualService(env.budgets, events_per_chunk=_EPC)
+    svc.register("x", rule, budgets)
+    svc.append(env.values)
+    got = svc.streaming("x")
+    np.testing.assert_array_equal(got.final_spend,
+                                  np.asarray(ref.results.final_spend)[0])
+    np.testing.assert_array_equal(got.cap_times,
+                                  np.asarray(ref.results.cap_times)[0])
+
+
+@given(boundaries_strat, st.floats(0.5, 2.0), st.floats(0.2, 2.0))
+def test_streaming_fold_partition_deterministic(boundaries, bid, bud):
+    """The causal frontier is a pure function of the fold partition: the
+    service's per-append folds reproduce a manual resumable fold of the
+    same slabs bitwise."""
+    env = _env()
+    rule = AuctionRule(
+        multipliers=np.full((_C,), np.float32(bid)),
+        reserve=np.float32(0.0), kind="first_price")
+    budgets = env.budgets * np.float32(bud)
+    svc = CounterfactualService(env.budgets, events_per_chunk=_EPC)
+    svc.register("x", rule, budgets)
+    carry, start = None, 0
+    for n in _partition(boundaries):
+        slab = env.values[start:start + n]
+        svc.append(slab)
+        _, carry = execute_sweep_resumable(
+            slab, budgets[None, :], stack_rules([rule]),
+            SweepPlan(placement="batched"), carry=carry)
+        start += n
+    got = svc.streaming("x")
+    np.testing.assert_array_equal(got.final_spend,
+                                  np.asarray(carry.s_hat)[0])
+    np.testing.assert_array_equal(got.cap_times,
+                                  np.asarray(carry.cap_times)[0])
+    assert carry.n_events_seen == _N
