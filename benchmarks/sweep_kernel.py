@@ -28,6 +28,19 @@ Four layers; the first three for S in a configurable schedule (default
   N grows — the chunked path re-resolves each chunk once per reduction
   window, so CPU numbers are an upper bound on the TPU story (where the
   chunk scan is what lets N outgrow HBM at all).
+* ``hoststream`` — memory-unbounded sweeps: the host-streamed executor
+  (``ChunkSpec(source="host")``, log resident in host RAM, chunks fed
+  through per-chunk ``jax.device_put``) at N = 32× a simulated device
+  budget of one chunk, comparing the double-buffered pipeline (next
+  chunk's transfer issued while the current chunk's step is in flight)
+  against synchronous per-chunk puts (``prefetch=False``: block on every
+  put and step) and against the device-resident batched driver —
+  ``common.time_pair`` interleaved medians, written to its OWN json
+  section (``sweep_hoststream``). All three paths are bitwise identical;
+  only the wall clock differs. On CPU the H2D put is a near-no-op, so the
+  double-buffered margin tracks dispatch pipelining only — a lower bound
+  on the accelerator story, where the put is a real transfer the pipeline
+  hides behind compute.
 * ``search`` — scenario-space search (``engine.search``, successive halving
   over the reserve axis) vs the exhaustive grid at the resolution the
   search converges to, timed with ``common.time_pair`` interleaved medians
@@ -64,7 +77,8 @@ from benchmarks.common import (bench_report, emit, sweep_argparser,
                                time_call, time_pair, update_bench_json)
 
 
-LAYERS = ("resolve", "round", "sweep", "stream", "search", "service")
+LAYERS = ("resolve", "round", "sweep", "stream", "hoststream", "search",
+          "service")
 
 
 def main(n_events: int = 2048, n_campaigns: int = 32,
@@ -72,6 +86,7 @@ def main(n_events: int = 2048, n_campaigns: int = 32,
          out: str = "BENCH_sweep.json",
          stream_n_values=(2048, 4096, 8192),
          stream_chunk: int = 1024,
+         hoststream_n_values=(8192, 16384, 32768),
          layers=LAYERS) -> None:
     import jax
     import jax.numpy as jnp
@@ -217,6 +232,67 @@ def main(n_events: int = 2048, n_campaigns: int = 32,
                 "path": path, "events_per_chunk": stream_chunk,
                 "us_per_call": round(us, 1),
                 "events_per_sec": round(ev_per_sec, 1)})
+
+    # --- hoststream layer: double-buffered vs synchronous-put vs resident --
+    if "hoststream" in layers:
+        from repro.core import execute_sweep
+        from repro.core.executor import ChunkSpec, HostStream, SweepPlan
+
+        hs_s = 8
+        hs_records = []
+        for n_hs in hoststream_n_values:
+            # simulated device budget: one chunk resident = N/32 events
+            # (the smallest aligned chunk — whole canonical blocks), so the
+            # log is 32x past what the "device" holds
+            hs_chunk = n_hs // 32
+            env_n = make_synthetic_env(jax.random.PRNGKey(0),
+                                       n_events=n_hs,
+                                       n_campaigns=n_campaigns, emb_dim=8)
+            grid_n = ScenarioGrid.product(
+                base, env_n.budgets,
+                bid_scales=[1.0 + 0.02 * i for i in range(hs_s)])
+            stream = HostStream.from_array(env_n.values)
+
+            def hs_run(prefetch):
+                plan = SweepPlan(placement="batched", resolve="jnp",
+                                 chunks=ChunkSpec(hs_chunk, source="host",
+                                                  prefetch=prefetch))
+                return execute_sweep(stream, grid_n.budgets, grid_n.rules,
+                                     plan)[0]
+
+            def hs_resident():
+                return execute_sweep(env_n.values, grid_n.budgets,
+                                     grid_n.rules,
+                                     SweepPlan(placement="batched",
+                                               resolve="jnp"))[0]
+
+            us_db, us_sync = time_pair(lambda: hs_run(True),
+                                       lambda: hs_run(False), repeats=5,
+                                       warmup=1)
+            us_db2, us_res = time_pair(lambda: hs_run(True), hs_resident,
+                                       repeats=5, warmup=1)
+            pipeline_speedup = us_sync / us_db
+            for path, us in (("double_buffered", us_db),
+                             ("synchronous_put", us_sync),
+                             ("device_resident", us_res)):
+                ev_per_sec = n_hs / (us * 1e-6)
+                emit(f"hoststream_N{n_hs}_{path}", us,
+                     f"events_per_sec={ev_per_sec:.0f}")
+                hs_records.append({
+                    "S": hs_s, "N": n_hs, "layer": "hoststream",
+                    "path": path, "events_per_chunk": hs_chunk,
+                    "us_per_call": round(us, 1),
+                    "events_per_sec": round(ev_per_sec, 1)})
+            hs_records[-3]["pipeline_speedup_vs_sync"] = round(
+                pipeline_speedup, 3)
+            hs_records[-3]["us_vs_resident"] = round(us_db2, 1)
+            print(f"hoststream N={n_hs}: double-buffered "
+                  f"{pipeline_speedup:.2f}x the synchronous-put pipeline "
+                  f"({us_db / 1e3:.0f}ms vs {us_sync / 1e3:.0f}ms; "
+                  f"device-resident {us_res / 1e3:.0f}ms)")
+        update_bench_json(out, "sweep_hoststream", bench_report(
+            hs_records, n_campaigns=n_campaigns,
+            simulated_device_budget_chunks=32))
 
     # --- search layer: optimizer vs exhaustive grid at equal resolution ----
     if "search" in layers:

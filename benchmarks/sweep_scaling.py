@@ -10,7 +10,12 @@ For S in a doubling schedule, measure scenarios/sec of
 * ``batched``     — one vmapped ``parallel_state_machine`` over all S;
 * ``sharded``     — (multi-device runs only) ``driver="sharded"``: the same
   batched loop under ``shard_map`` with the event axis sharded over every
-  visible device.
+  visible device;
+* ``host_stream`` — (``--host-stream``) the double-buffered host-streamed
+  pipeline: the log lives in host RAM as a :class:`HostStream` and is fed
+  chunk-by-chunk via ``jax.device_put`` (chunk size = one canonical
+  reduction block, i.e. a simulated device budget of N/32 events), bitwise
+  identical to ``batched`` by the host-stream contract.
 
 Emits ``sweep_S{S}_{path},us_per_sweep,scn_per_sec`` rows and merges a
 ``sweep_scaling`` section — tagged with ``device_count`` so the perf
@@ -33,12 +38,15 @@ from benchmarks.common import (bench_report, emit, force_host_devices,
 
 
 def main(n_events: int = 16_384, n_campaigns: int = 16,
-         max_scenarios: int = 16, out: str = "BENCH_sweep.json") -> None:
+         max_scenarios: int = 16, host_stream: bool = False,
+         out: str = "BENCH_sweep.json") -> None:
     # deferred so --device-count can still grow the platform (see common.py)
     import jax
 
     from repro.core import CounterfactualEngine, parallel_simulate, \
         sweep_parallel
+    from repro.core.executor import (ChunkSpec, HostStream, SweepPlan,
+                                     execute_sweep)
     from repro.data import make_synthetic_env
     from repro.launch.mesh import SweepMeshSpec
 
@@ -96,6 +104,15 @@ def main(n_events: int = 16_384, n_campaigns: int = 16,
                 spec = None
             else:
                 record(s_count, "sharded", us)
+        if host_stream:
+            stream = HostStream.from_array(env.values)
+            plan = SweepPlan(placement="batched",
+                             chunks=ChunkSpec(n_events // 32,
+                                              source="host"))
+            _, us = time_call(
+                lambda: execute_sweep(stream, grid.budgets, grid.rules,
+                                      plan)[0], repeats=1, warmup=1)
+            record(s_count, "host_stream", us)
 
     update_bench_json(out, "sweep_scaling", bench_report(
         records, n_events=n_events, n_campaigns=n_campaigns))
@@ -106,7 +123,10 @@ if __name__ == "__main__":
                          n_campaigns=16, out="BENCH_sweep.json",
                          device_count=True)
     ap.add_argument("--max-scenarios", type=int, default=16)
+    ap.add_argument("--host-stream", action="store_true",
+                    help="also time the host-streamed double-buffered path")
     args = ap.parse_args()
     force_host_devices(args.device_count)
     main(n_events=args.n_events, n_campaigns=args.n_campaigns,
-         max_scenarios=args.max_scenarios, out=args.out)
+         max_scenarios=args.max_scenarios, host_stream=args.host_stream,
+         out=args.out)

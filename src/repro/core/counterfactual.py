@@ -251,6 +251,7 @@ class CounterfactualEngine:
               base_index: int = 0,
               warm_start="base",
               refine_iters: int = 8,
+              crossing_block: int = 4096,
               record_events: bool = False,
               resolve: str = "auto",
               driver: str = "batched",
@@ -305,19 +306,37 @@ class CounterfactualEngine:
         ``method="parallel"`` the results are bit-for-bit the single-device
         sweep's; for ``method="sort2aggregate"`` the Algorithm-4 warm start
         (``estimate_pi_sharded``) and every refine/aggregate pass run on the
-        mesh too. See docs/SCALING.md.
+        mesh too. ``driver="multihost"`` (``method="parallel"`` only) lifts
+        the same sharded program onto a ``jax.distributed`` process mesh
+        (``mesh=SweepMeshSpec.for_processes()``): ``values`` is this
+        process's contiguous row-slice of the global log, and the answers
+        are bit-for-bit the single-process sharded run. See
+        docs/SCALING.md.
 
-        ``chunks`` (``method="parallel"`` only; an int or
-        :class:`~repro.core.executor.ChunkSpec`) turns on event-chunked
-        streaming: each Algorithm-2 round scans the log in fixed chunks,
-        accumulating the canonical spend partials chunk-by-chunk, so the
-        per-device working set stays O(events_per_chunk · C) and N scales
-        past what a resident round allows. Bit-for-bit the in-memory
-        result on aligned chunk sizes (pad-or-error otherwise); composes
-        with ``driver="sharded"`` — each device scans its own shard's
-        chunks. The (driver, resolve, chunks) triple is executed by the
-        unified plan layer (:mod:`repro.core.executor`,
-        docs/ARCHITECTURE.md).
+        ``chunks`` (an int or :class:`~repro.core.executor.ChunkSpec`)
+        turns on event-chunked streaming: each Algorithm-2 round scans the
+        log in fixed chunks, accumulating the canonical spend partials
+        chunk-by-chunk, so the per-device working set stays
+        O(events_per_chunk · C) and N scales past what a resident round
+        allows. Bit-for-bit the in-memory result on aligned chunk sizes
+        (pad-or-error otherwise); composes with ``driver="sharded"`` —
+        each device scans its own shard's chunks.
+        ``ChunkSpec(..., source="host")`` goes further: the log stays in
+        host RAM (or an out-of-core :class:`~repro.core.executor.HostStream`
+        of slabs) and chunks are streamed to the device through a
+        double-buffered ``device_put`` pipeline, so device residency is
+        O(events_per_chunk · C) too — still bitwise the device-resident
+        sweep. For ``method="sort2aggregate"`` (device source only)
+        chunking rechunks the refine/replay spine — cap times stay bitwise
+        the unchunked refinement when ``events_per_chunk`` is a multiple
+        of ``crossing_block`` (pad-or-error otherwise). The (driver,
+        resolve, chunks) triple is executed by the unified plan layer
+        (:mod:`repro.core.executor`, docs/ARCHITECTURE.md).
+
+        ``crossing_block`` (``method="sort2aggregate"`` only) sizes the
+        blockwise first-crossing scan; the default keeps the historical
+        decomposition. Cap times are bitwise across chunkings only at a
+        fixed ``crossing_block``.
 
         ``scenario_chunks`` (``method="parallel"`` only; an int or
         :class:`~repro.core.executor.ScenarioChunkSpec`) runs the loop
@@ -347,11 +366,12 @@ class CounterfactualEngine:
         plan = plan_for_driver(driver, resolve=resolve, mesh=mesh,
                                chunks=chunks,
                                scenario_chunks=scenario_chunks)
-        if chunks is not None and method != "parallel":
+        if chunks is not None and method not in ("parallel",
+                                                 "sort2aggregate"):
             raise ValueError(
-                "chunks= (event-chunked streaming) currently applies to "
-                "method='parallel' sweeps only; drop chunks= for "
-                f"method={method!r}.")
+                "chunks= (event-chunked streaming) applies to "
+                "method='parallel' and method='sort2aggregate' sweeps; "
+                f"drop chunks= for method={method!r}.")
         if scenario_chunks is not None and method != "parallel":
             raise ValueError(
                 "scenario_chunks= (scenario-chunked execution) currently "
@@ -397,12 +417,12 @@ class CounterfactualEngine:
             results, gaps, iters = execute_s2a_sweep(
                 values, grid.budgets, grid.rules, plan,
                 cap_times_init=caps0, refine_iters=refine_iters,
-                record_events=record_events)
+                record_events=record_events, crossing_block=crossing_block)
         elif method == "sequential":
-            if driver == "sharded":
+            if driver in ("sharded", "multihost"):
                 raise ValueError(
                     "method='sequential' is the O(N)-serial validation "
-                    "oracle and has no sharded driver; use "
+                    "oracle and has no sharded/multihost driver; use "
                     "driver='batched', or method='parallel'/"
                     "'sort2aggregate' to scale out.")
             results = sweep_lib.sweep_sequential(

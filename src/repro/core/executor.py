@@ -9,7 +9,9 @@ axis of the execution —
 
 * **placement** — where the loop runs: ``"device"`` (one unbatched lane),
   ``"batched"`` (the S-lane loop on one device), ``"sharded"`` (the same
-  loop under ``shard_map`` on ``plan.mesh``);
+  loop under ``shard_map`` on ``plan.mesh``), ``"multihost"`` (the sharded
+  program on a ``jax.distributed`` process mesh: each process feeds its own
+  event shard, the two per-round psums cross processes unchanged);
 * **resolve** — the per-round back-end: ``"jnp"``, ``"pallas"``,
   ``"fused"``, or ``"auto"`` (fused on TPU, jnp elsewhere — never an
   interpret-mode Pallas kernel, see :func:`pick_resolve`);
@@ -20,7 +22,11 @@ axis of the execution —
   round scans the event log in fixed chunks, accumulating the canonical
   ``(S, 32, C)`` spend partials chunk-by-chunk via the same ``index_offset``
   mechanism the mesh shards use, so only one chunk's per-event intermediates
-  are live at a time;
+  are live at a time. ``source="device"`` scans a device-resident log
+  (``lax.scan``); ``source="host"`` streams each chunk from host RAM
+  through a double-buffered ``device_put`` pipeline (:class:`HostStream`,
+  :func:`_sweep_hoststream`), so the log itself never has to fit device
+  memory;
 * **scenario_chunks** — optional scenario-chunked execution
   (:class:`ScenarioChunkSpec`): the whole round program is scanned over
   fixed slices of the scenario axis. Lanes are independent (carried burnout
@@ -68,9 +74,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.compat import axis_size as compat_axis_size, shard_map
+from repro.compat import (axis_size as compat_axis_size,
+                          host_local_to_global, shard_map)
 from repro.core import auction
 from repro.core import crn
 from repro.core import segments as seg_lib
@@ -79,9 +87,10 @@ from repro.kernels.auction_resolve import ops as resolve_ops
 from repro.launch.mesh import SweepMeshSpec
 
 RESOLVE_BACKENDS = ("jnp", "pallas", "fused")
-SWEEP_DRIVERS = ("batched", "sharded")
+SWEEP_DRIVERS = ("batched", "sharded", "multihost")
 SIM_DRIVERS = ("auto", "device", "host")
-PLACEMENTS = ("device", "batched", "sharded")
+PLACEMENTS = ("device", "batched", "sharded", "multihost")
+CHUNK_SOURCES = ("device", "host")
 
 
 def _unknown(kind: str, got, known) -> ValueError:
@@ -155,15 +164,37 @@ class ChunkSpec:
     ``placement="sharded"`` each device scans its own shard's chunks before
     the per-round psum (chunking × sharding), and ``resolve="fused"`` uses
     the ``sweep_partials`` kernel per chunk where Pallas compiles.
+
+    ``source`` picks where the chunk data lives between rounds:
+
+    * ``"device"`` (default) — the whole log is device-resident and each
+      round is a ``lax.scan`` over its chunks (bounds per-event
+      *intermediates*, not the log itself);
+    * ``"host"`` — the log lives in host RAM (:class:`HostStream`, or any
+      array the executor pulls back once) and every round streams it chunk
+      by chunk through per-chunk ``jax.device_put``, so device memory holds
+      one or two chunks plus the O(S·C) carried state and N is bounded by
+      host RAM, not HBM. ``prefetch=True`` double-buffers the pipeline:
+      chunk k+1's H2D copy is issued right after chunk k's jitted partials
+      step is dispatched, so (by JAX's async dispatch) transfer overlaps
+      compute; ``prefetch=False`` is the synchronous-put baseline the
+      ``hoststream`` benchmark layer times it against. Both orders run the
+      identical per-chunk program, so results are bit-for-bit the
+      device-resident driver either way (same alignment contract, checked
+      by the same :func:`check_chunks`).
     """
 
     events_per_chunk: int
+    source: str = "device"
+    prefetch: bool = True
 
     def __post_init__(self):
         if self.events_per_chunk < 1:
             raise ValueError(
                 f"ChunkSpec.events_per_chunk must be >= 1, got "
                 f"{self.events_per_chunk}")
+        if self.source not in CHUNK_SOURCES:
+            raise _unknown("chunk source", self.source, CHUNK_SOURCES)
 
 
 def as_chunk_spec(chunks) -> Optional[ChunkSpec]:
@@ -171,6 +202,77 @@ def as_chunk_spec(chunks) -> Optional[ChunkSpec]:
     if chunks is None or isinstance(chunks, ChunkSpec):
         return chunks
     return ChunkSpec(events_per_chunk=int(chunks))
+
+
+class HostStream:
+    """A host-resident event log: numpy slabs, streamed to device chunkwise.
+
+    The "events pytree" of a log that outgrows device memory. Rows live in
+    host RAM as a list of float32 slabs (the service's append slabs,
+    verbatim — no concatenated copy is ever materialised, on host or
+    device); :meth:`chunk` hands the executor's double-buffered pipeline
+    ``[start, stop)`` row windows, a zero-copy view whenever the window
+    sits inside one slab. Passing a ``HostStream`` to
+    :func:`execute_sweep` / :func:`execute_sweep_resumable` (with
+    ``chunks=ChunkSpec(..., source="host")`` or any aligned chunk size)
+    selects the host-streamed driver; results are bit-for-bit the
+    device-resident program on aligned sizes.
+    """
+
+    def __init__(self, slabs):
+        slabs = [np.asarray(s, dtype=np.float32) for s in slabs]
+        if not slabs:
+            raise ValueError("HostStream needs at least one event slab")
+        n_campaigns = slabs[0].shape[1] if slabs[0].ndim == 2 else -1
+        for s in slabs:
+            if s.ndim != 2 or s.shape[1] != n_campaigns or s.shape[0] < 1:
+                raise ValueError(
+                    "HostStream slabs must be non-empty (n, C) valuation "
+                    f"blocks with one shared C; got shapes "
+                    f"{[tuple(x.shape) for x in slabs]}")
+        self._slabs = slabs
+        self._starts = np.concatenate(
+            ([0], np.cumsum([s.shape[0] for s in slabs])))
+
+    @classmethod
+    def from_array(cls, values) -> "HostStream":
+        """Wrap an in-memory (N, C) log (pulled back to host once)."""
+        return cls([np.asarray(jax.device_get(values), np.float32)])
+
+    @property
+    def shape(self):
+        return (int(self._starts[-1]), int(self._slabs[0].shape[1]))
+
+    @property
+    def ndim(self) -> int:
+        return 2
+
+    @property
+    def n_events(self) -> int:
+        return int(self._starts[-1])
+
+    @property
+    def n_campaigns(self) -> int:
+        return int(self._slabs[0].shape[1])
+
+    def chunk(self, start: int, stop: int) -> np.ndarray:
+        """Rows ``[start, stop)`` — a view when one slab covers the window
+        (guaranteed under the service's whole-chunk append contract when
+        slab sizes are chunk multiples), else a host-side concatenation."""
+        if not 0 <= start < stop <= self.n_events:
+            raise ValueError(
+                f"chunk window [{start}, {stop}) outside the stream's "
+                f"{self.n_events} events")
+        i = int(np.searchsorted(self._starts, start, side="right")) - 1
+        pieces = []
+        while start < stop:
+            s0 = int(self._starts[i])
+            slab = self._slabs[i]
+            take = min(stop, s0 + slab.shape[0])
+            pieces.append(slab[start - s0:take - s0])
+            start = take
+            i += 1
+        return pieces[0] if len(pieces) == 1 else np.concatenate(pieces)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -225,8 +327,11 @@ class SweepPlan:
     argument. Fields:
 
     * ``placement`` — ``"device"`` (one unbatched lane; the executor runs
-      the batched program at S=1 and unstacks), ``"batched"`` (default), or
-      ``"sharded"`` (requires ``mesh``);
+      the batched program at S=1 and unstacks), ``"batched"`` (default),
+      ``"sharded"`` (requires ``mesh``), or ``"multihost"`` (the sharded
+      program on a ``jax.distributed`` process mesh — requires ``mesh``,
+      normally :meth:`repro.launch.mesh.SweepMeshSpec.for_processes`; each
+      process passes its own event shard to :func:`execute_sweep`);
     * ``resolve`` — ``"jnp" | "pallas" | "fused" | "auto"``;
     * ``block_t`` — Pallas event-tile size;
     * ``interpret`` — force (True) / suppress (False) Pallas interpret mode;
@@ -257,10 +362,11 @@ class SweepPlan:
         if self.resolve not in RESOLVE_BACKENDS + ("auto",):
             raise _unknown("resolve back-end", self.resolve,
                            RESOLVE_BACKENDS + ("auto",))
-        if self.placement == "sharded" and self.mesh is None:
+        if self.placement in ("sharded", "multihost") and self.mesh is None:
             raise ValueError(
-                "placement='sharded' needs mesh=SweepMeshSpec(...); see "
-                "repro.launch.mesh.SweepMeshSpec.for_devices")
+                f"placement={self.placement!r} needs mesh=SweepMeshSpec(...);"
+                " see repro.launch.mesh.SweepMeshSpec.for_devices (sharded) "
+                "/ .for_processes (multihost)")
         object.__setattr__(self, "chunks", as_chunk_spec(self.chunks))
         object.__setattr__(self, "scenario_chunks",
                            as_scenario_chunk_spec(self.scenario_chunks))
@@ -274,13 +380,15 @@ def plan_for_driver(driver: str, *, resolve: str = "auto",
     ``engine.sweep``), with the one consistent unknown-driver error."""
     if driver not in SWEEP_DRIVERS:
         raise _unknown("sweep driver", driver, SWEEP_DRIVERS)
-    if driver == "sharded" and mesh is None:
+    meshed = driver in ("sharded", "multihost")
+    if meshed and mesh is None:
         raise ValueError(
-            "driver='sharded' needs mesh=SweepMeshSpec(...); see "
-            "repro.launch.mesh.SweepMeshSpec.for_devices")
+            f"driver={driver!r} needs mesh=SweepMeshSpec(...); see "
+            "repro.launch.mesh.SweepMeshSpec.for_devices (sharded) / "
+            ".for_processes (multihost)")
     return SweepPlan(placement=driver, resolve=resolve, block_t=block_t,
                      interpret=interpret, skip_retired=skip_retired,
-                     mesh=mesh if driver == "sharded" else None,
+                     mesh=mesh if meshed else None,
                      chunks=as_chunk_spec(chunks),
                      scenario_chunks=as_scenario_chunk_spec(scenario_chunks))
 
@@ -405,6 +513,39 @@ def check_append_alignment(chunks: Optional[ChunkSpec], n_new: int) -> None:
     check_chunks(chunks,
                  n_events=chunks.events_per_chunk * seg_lib.REDUCE_BLOCKS,
                  local_n=n_new)
+
+
+def check_host_stream(plan: SweepPlan, *,
+                      overlay: Optional[ScenarioOverlay] = None) -> None:
+    """The host-streamed execution contract (callable up front).
+
+    Host-streamed chunks feed ONE device's pipeline, so the plan must be a
+    single-device placement with an explicit chunk size; alignment itself
+    is :func:`check_chunks`, verbatim.
+    """
+    if plan.chunks is None:
+        raise ValueError(
+            "host-streamed execution needs chunks=: the log is fed to the "
+            "device one chunk at a time, so ChunkSpec(events_per_chunk=..., "
+            "source='host') (or an aligned int chunk size alongside a "
+            "HostStream log) must state the working-set size.")
+    if plan.placement not in ("device", "batched"):
+        raise ValueError(
+            "host-streamed chunks run placement='device'/'batched' only "
+            f"(the host feeds one device's pipeline), got "
+            f"{plan.placement!r}; device-resident logs scale out via "
+            "placement='sharded'/'multihost' instead.")
+    if plan.scenario_chunks is not None:
+        raise ValueError(
+            "scenario_chunks= does not compose with host-streamed chunks; "
+            "drop scenario_chunks= (the host pipeline already bounds "
+            "per-round intermediates by the event chunk).")
+    if overlay is not None:
+        raise ValueError(
+            "overlays are not supported with host-streamed chunks; replay "
+            "overlay families from a device-resident log "
+            "(ChunkSpec(source='device') bounds their per-event "
+            "intermediates the same way).")
 
 
 def check_scenario_chunks(scenario_chunks: Optional[ScenarioChunkSpec], *,
@@ -1026,6 +1167,256 @@ def _sweep_sharded(values, budgets, rules, overlay, plan: SweepPlan):
                    (z, u))
 
 
+# ---------------------------------------------------------------------------
+# Host-streamed placement: the log lives in host RAM, chunks flow H2D
+# ---------------------------------------------------------------------------
+
+def _hs_use_interpret(plan: SweepPlan) -> bool:
+    return (plan.interpret if plan.interpret is not None
+            else not resolve_ops.ON_TPU)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "resolve", "kind",
+                                             "n_events", "n_campaigns"))
+def _hs_chunk_partials(acc, v_k, mult, res, act, keep, lo, hi, off_k, *,
+                       plan: SweepPlan, resolve: str, kind: str,
+                       n_events: int, n_campaigns: int):
+    """One pipeline step: fold chunk ``v_k`` (global rows from ``off_k``)
+    into the (S, G, C) canonical-partials accumulator.
+
+    This is the IDENTICAL per-chunk program as the device-resident chunk
+    scan's step (``window_partials`` in :func:`_make_round_body`) — same
+    resolve, same weighted canonical partials on the global grid, same
+    in-order accumulate — jitted standalone so the host round loop can
+    interleave its dispatch with the next chunk's H2D copy. ``off_k`` is a
+    traced scalar, so every chunk reuses one compiled program.
+    """
+    second = kind == "second_price"
+    use_interpret = _hs_use_interpret(plan)
+    if resolve == "fused" and fused_runs_kernel(plan.interpret):
+        parts_k = resolve_ops.sweep_partials(
+            v_k, mult, act, res, lo, hi, keep, off_k,
+            n_events_global=n_events, reduce_blocks=seg_lib.REDUCE_BLOCKS,
+            second_price=second, skip_retired=plan.skip_retired,
+            block_t=plan.block_t, interpret=use_interpret)
+    else:
+        if resolve == "pallas":
+            winners, prices, _ = resolve_ops.sweep_resolve(
+                v_k, mult, act, res, second_price=second,
+                block_t=plan.block_t, interpret=use_interpret)
+        else:
+            rules_local = AuctionRule(multipliers=mult, reserve=res,
+                                      kind=kind)
+            winners, prices = jax.vmap(
+                lambda a, r: auction.resolve(v_k, a, r),
+                in_axes=(0, 0))(act, rules_local)
+        gidx = off_k + jnp.arange(v_k.shape[0], dtype=jnp.int32)
+        block = seg_lib.reduce_block_size(n_events)
+
+        def one(w, p, lo_s, hi_s):
+            weight = ((gidx >= lo_s) & (gidx < hi_s)).astype(p.dtype)
+            return seg_lib.partial_spend_sums(
+                w, p, n_campaigns, weight, block_size=block,
+                index_offset=off_k)
+
+        parts_k = jax.vmap(one)(winners, prices, lo, hi)
+    # same exactness argument as the device-resident chunk scan: every
+    # canonical block is owned by exactly one chunk, so this add only ever
+    # contributes exact zeros to blocks other chunks own
+    return acc + parts_k
+
+
+@functools.partial(jax.jit, static_argnames=("n_events",))
+def _hs_predict(rate_parts, b, s_hat, active, n_hat, *, n_events: int):
+    """Scalar half 1 between the two streamed passes (per-lane, O(S·C))."""
+    def rate_of(parts_s, nh):
+        sums = parts_s.sum(axis=0)
+        denom = jnp.maximum(n_events - nh, 1).astype(sums.dtype)
+        return sums / denom
+
+    rates = jax.vmap(rate_of)(rate_parts, n_hat)
+    return jax.vmap(functools.partial(lane_predict, n_events=n_events))(
+        rates, b, s_hat, active, n_hat)
+
+
+@functools.partial(jax.jit, static_argnames=("n_events",))
+def _hs_commit(core, keep, block_parts, c_next, no_cap, n_next, *,
+               n_events: int):
+    """Scalar half 2 plus the loop scaffolding's frozen-lane select: commit
+    the block partials into the carried core exactly as ``_run_loop``'s
+    body merges a round, and report which lanes stay alive."""
+    s_hat, active, cap, n_hat, rnd, retired, bnds = core
+    blk = block_parts.sum(axis=1)
+    lane_comm = functools.partial(
+        lane_commit, sentinel=jnp.int32(never_capped(n_events)))
+    new = jax.vmap(lane_comm)(blk, c_next, no_cap, n_next, s_hat, active,
+                              cap, rnd, retired, bnds)
+    merged = jax.tree.map(
+        lambda n, o: jnp.where(
+            keep.reshape(keep.shape + (1,) * (n.ndim - 1)), n, o),
+        new, core)
+    n_campaigns = s_hat.shape[1]
+    _, active_m, _, n_hat_m, rnd_m, _, _ = merged
+    alive = (rnd_m < n_campaigns + 1) & (n_hat_m < n_events) \
+        & active_m.any(-1)
+    return merged, alive
+
+
+@functools.partial(jax.jit, static_argnames=("n_events",))
+def _hs_alive(core, *, n_events: int):
+    _, active, _, n_hat, rnd, _, _ = core
+    n_campaigns = active.shape[1]
+    return (rnd < n_campaigns + 1) & (n_hat < n_events) & active.any(-1)
+
+
+def _sweep_hoststream(stream: HostStream, budgets, rules, plan: SweepPlan,
+                      *, carry=None):
+    """The host-streamed Algorithm-2 loop: one device, log in host RAM.
+
+    Runs the device-resident chunked two-pass round program — same
+    per-chunk canonical partials, same predict/commit scalars, same
+    frozen-lane merge, so results are bit-for-bit identical on aligned
+    sizes — but the round loop lives on the host, and each reduction
+    window streams the log chunk-by-chunk through ``jax.device_put``.
+    With ``plan.chunks.prefetch`` the pipeline is double-buffered: chunk
+    k's jitted partials step is dispatched (async), then chunk k+1's H2D
+    copy is issued immediately, so transfer overlaps compute;
+    ``prefetch=False`` serialises copy → compute per chunk (the benchmark
+    baseline). ``carry`` seeds a resumable fold at global offset
+    ``carry.n_events_seen`` exactly as :func:`_resume_batched` does.
+    Returns the raw core state tuple (callers ``_unpack``).
+    """
+    resolve = pick_resolve(plan.resolve)
+    check_batch_shapes(stream, budgets, rules)
+    n_new, n_campaigns = stream.shape
+    n_seen = 0 if carry is None else carry.n_events_seen
+    n_events = n_seen + n_new
+    check_chunks(plan.chunks, n_events=n_events, local_n=n_new)
+    epc = plan.chunks.events_per_chunk
+    prefetch = plan.chunks.prefetch
+    n_chunks = n_new // epc
+    s_local = budgets.shape[0]
+    sentinel = jnp.int32(never_capped(n_events))
+
+    b = jnp.asarray(budgets).astype(jnp.float32)
+    mult = jnp.asarray(rules.multipliers)
+    res = jnp.asarray(rules.reserve, jnp.float32)
+    statics = dict(plan=plan, resolve=resolve, kind=rules.kind,
+                   n_events=n_events, n_campaigns=n_campaigns)
+
+    if carry is None:
+        core = (
+            jnp.zeros((s_local, n_campaigns), jnp.float32),
+            jnp.ones((s_local, n_campaigns), bool),
+            jnp.full((s_local, n_campaigns), sentinel, jnp.int32),
+            jnp.zeros((s_local,), jnp.int32),
+            jnp.zeros((s_local,), jnp.int32),
+            jnp.full((s_local, n_campaigns + 1), -1, jnp.int32),
+            jnp.zeros((s_local, n_campaigns + 2), jnp.int32),
+        )
+    else:
+        # carried burnout state + a fresh per-fold round log, with
+        # not-yet-capped sentinels moved to the grown log's — the exact
+        # seeding _resume_batched performs
+        active0 = jnp.asarray(carry.active)
+        n_hat0 = jnp.asarray(carry.n_hat).astype(jnp.int32)
+        core = (
+            jnp.asarray(carry.s_hat).astype(jnp.float32),
+            active0,
+            jnp.where(active0, sentinel,
+                      jnp.asarray(carry.cap_times, jnp.int32)),
+            n_hat0,
+            jnp.zeros((s_local,), jnp.int32),
+            jnp.full((s_local, n_campaigns + 1), -1, jnp.int32),
+            jnp.zeros((s_local, n_campaigns + 2),
+                      jnp.int32).at[:, 0].set(n_hat0),
+        )
+
+    def stream_pass(act, keep, lo, hi):
+        acc = jnp.zeros((s_local, seg_lib.REDUCE_BLOCKS, n_campaigns),
+                        jnp.float32)
+        if not prefetch:
+            # synchronous baseline: wait out each copy, then each step
+            for k in range(n_chunks):
+                cur = jax.block_until_ready(
+                    jax.device_put(stream.chunk(k * epc, (k + 1) * epc)))
+                acc = jax.block_until_ready(_hs_chunk_partials(
+                    acc, cur, mult, res, act, keep, lo, hi,
+                    jnp.int32(n_seen + k * epc), **statics))
+            return acc
+        # double-buffered: dispatch chunk k's step (async), then
+        # immediately issue chunk k+1's H2D copy so it overlaps
+        buf = jax.device_put(stream.chunk(0, epc))
+        for k in range(n_chunks):
+            cur = buf
+            acc = _hs_chunk_partials(acc, cur, mult, res, act, keep, lo,
+                                     hi, jnp.int32(n_seen + k * epc),
+                                     **statics)
+            if k + 1 < n_chunks:
+                buf = jax.device_put(
+                    stream.chunk((k + 1) * epc, (k + 2) * epc))
+        return acc
+
+    keep = _hs_alive(core, n_events=n_events)
+    while bool(jax.device_get(jnp.any(keep))):
+        s_hat, active, cap, n_hat, rnd, retired, bnds = core
+        hi_all = jnp.full_like(n_hat, n_events)
+        rate_parts = stream_pass(active, keep, n_hat, hi_all)
+        c_next, no_cap, n_next = _hs_predict(rate_parts, b, s_hat, active,
+                                             n_hat, n_events=n_events)
+        block_parts = stream_pass(active, keep, n_hat, n_next)
+        core, keep = _hs_commit(core, keep, block_parts, c_next, no_cap,
+                                n_next, n_events=n_events)
+    return core
+
+
+# ---------------------------------------------------------------------------
+# Multi-host placement: the sharded program on a jax.distributed mesh
+# ---------------------------------------------------------------------------
+
+def _sweep_multihost(values_local, budgets, rules, overlay,
+                     plan: SweepPlan):
+    """The sharded program on a ``jax.distributed`` process mesh.
+
+    Each process passes its own contiguous event shard (``values_local``)
+    plus full replicated copies of budgets/rules; the shards are assembled
+    into one global array (:func:`repro.compat.host_local_to_global`) whose
+    row-major device placement matches
+    :meth:`~repro.launch.mesh.SweepMeshSpec.for_processes`'s
+    ``index_offset`` contract, and the IDENTICAL :func:`_sweep_sharded`
+    program runs on it — the same two per-round psums now cross processes,
+    still moving only the O(S·G·C) canonical partials per round. Outputs
+    come back replicated on every process. Under one process this
+    degenerates exactly to ``_sweep_sharded``, which is also the
+    bit-for-bit bridge: multihost == single-process sharded == batched on
+    aligned shapes (tests/test_multihost.py pins the 2-process case).
+    """
+    spec = plan.mesh
+    if spec.scenario_axis is not None:
+        raise ValueError(
+            "placement='multihost' shards events over processes only; "
+            "scenario-axis process meshes are not supported (shard "
+            "scenarios within one process via placement='sharded').")
+    if overlay is not None:
+        raise ValueError(
+            "overlays are not supported with placement='multihost' yet; "
+            "run overlay families on placement='sharded' or 'batched'.")
+    mesh = spec.mesh
+    axes = tuple(spec.event_axes)
+    rep2, rep1 = P(None, None), P(None)
+    g_values = host_local_to_global(jnp.asarray(values_local), mesh,
+                                    P(axes, None))
+    g_budgets = host_local_to_global(jnp.asarray(budgets), mesh, rep2)
+    g_rules = AuctionRule(
+        multipliers=host_local_to_global(jnp.asarray(rules.multipliers),
+                                         mesh, rep2),
+        reserve=host_local_to_global(
+            jnp.asarray(rules.reserve, jnp.float32), mesh, rep1),
+        kind=rules.kind)
+    return _sweep_sharded(g_values, g_budgets, g_rules, None,
+                          dataclasses.replace(plan, placement="sharded"))
+
+
 def execute_sweep(values, budgets, rules, plan: SweepPlan, *,
                   overlay: Optional[ScenarioOverlay] = None):
     """Run the Algorithm-2 sweep program described by ``plan``.
@@ -1042,7 +1433,33 @@ def execute_sweep(values, budgets, rules, plan: SweepPlan, *,
     ``None`` generates the exact overlay-free program. For
     ``placement="device"`` the overlay's array fields are unbatched
     ``(C,)`` rows, matching the unbatched budgets/rule.
+
+    A :class:`HostStream` ``values`` (or ``chunks.source="host"``, which
+    pulls an in-memory ``values`` back to host once) selects the
+    host-streamed driver: the log stays in host RAM and every round
+    streams it through the double-buffered ``device_put`` pipeline —
+    bit-for-bit the device-resident program on aligned chunk sizes.
+    ``placement="multihost"`` takes THIS PROCESS's event shard as
+    ``values`` (the full log under a single process) and returns
+    replicated outputs on every process.
     """
+    if isinstance(values, HostStream) or (
+            plan.chunks is not None and plan.chunks.source == "host"):
+        check_host_stream(plan, overlay=overlay)
+        stream = values if isinstance(values, HostStream) \
+            else HostStream.from_array(values)
+        if plan.placement == "device":
+            rules_b = AuctionRule(
+                multipliers=rules.multipliers[None, :],
+                reserve=jnp.asarray(rules.reserve, jnp.float32)[None],
+                kind=rules.kind)
+            core = _sweep_hoststream(
+                stream, jnp.asarray(budgets)[None, :], rules_b,
+                dataclasses.replace(plan, placement="batched"))
+            return tuple(x[0] for x in _unpack(core))
+        return _unpack(_sweep_hoststream(stream, budgets, rules, plan))
+    if plan.placement == "multihost":
+        return _sweep_multihost(values, budgets, rules, overlay, plan)
     if plan.placement == "sharded":
         return _sweep_sharded(values, budgets, rules, overlay, plan)
     if plan.placement == "device":
@@ -1186,10 +1603,13 @@ def execute_sweep_resumable(values_new, budgets, rules, plan: SweepPlan, *,
 
     Supported cells: ``placement="batched"`` (the service's streaming path;
     shard the exact replay path instead to scale out), any resolve
-    back-end, optional event ``chunks=`` *within* a slab. Overlays and
-    ``scenario_chunks=`` are not supported here — register design-only
-    scenarios for streaming and route overlay families through the exact
-    replay path.
+    back-end, optional event ``chunks=`` *within* a slab — including
+    host-streamed chunks: a :class:`HostStream` slab (or
+    ``chunks.source="host"``) folds without the new rows ever being
+    resident on device at once, bit-for-bit the device fold on aligned
+    sizes. Overlays and ``scenario_chunks=`` are not supported here —
+    register design-only scenarios for streaming and route overlay
+    families through the exact replay path.
     """
     if plan.placement != "batched":
         raise ValueError(
@@ -1201,6 +1621,12 @@ def execute_sweep_resumable(values_new, budgets, rules, plan: SweepPlan, *,
         raise ValueError(
             "scenario_chunks= is not supported by execute_sweep_resumable; "
             "fold scenario groups separately instead.")
+    host = isinstance(values_new, HostStream) or (
+        plan.chunks is not None and plan.chunks.source == "host")
+    if host:
+        check_host_stream(plan)
+        values_new = values_new if isinstance(values_new, HostStream) \
+            else HostStream.from_array(values_new)
     check_batch_shapes(values_new, budgets, rules)
     n_new, n_campaigns = values_new.shape
     if n_new < 1:
@@ -1213,9 +1639,13 @@ def execute_sweep_resumable(values_new, budgets, rules, plan: SweepPlan, *,
             f"carry/batch mismatch: carry holds "
             f"{tuple(carry.s_hat.shape)} lanes but the fold got "
             f"(S, C)=({n_scenarios}, {n_campaigns})")
-    core = _resume_batched(values_new, budgets, rules, carry.s_hat,
-                           carry.active, carry.cap_times, carry.n_hat,
-                           plan, carry.n_events_seen)
+    if host:
+        core = _sweep_hoststream(values_new, budgets, rules, plan,
+                                 carry=carry)
+    else:
+        core = _resume_batched(values_new, budgets, rules, carry.s_hat,
+                               carry.active, carry.cap_times, carry.n_hat,
+                               plan, carry.n_events_seen)
     s_hat, active, cap, n_hat, _, _, _ = core
     new_carry = SweepCarry(s_hat=s_hat, active=active, cap_times=cap,
                            n_hat=n_hat,
@@ -1226,11 +1656,30 @@ def execute_sweep_resumable(values_new, budgets, rules, plan: SweepPlan, *,
 def check_s2a_options(plan: SweepPlan, record_events: bool = False) -> None:
     """Validate the SORT2AGGREGATE sweep's plan (callable up front, so an
     engine can fail fast before paying for a warm start)."""
-    if plan.chunks is not None:
+    if plan.placement == "multihost":
         raise ValueError(
-            "chunks= (event-chunked streaming) currently applies to "
-            "method='parallel' sweeps only; drop chunks= for the "
-            "sort2aggregate sweep.")
+            "placement='multihost' runs method='parallel' sweeps only; the "
+            "sort2aggregate estimator scales out via placement='sharded' "
+            "within one process.")
+    if plan.chunks is not None:
+        if plan.placement == "sharded":
+            raise ValueError(
+                "chunks= does not compose with the sharded sort2aggregate "
+                "sweep (its first-crossing prefix is an all_gather'd "
+                "cross-shard scan); use driver='batched' for chunked "
+                "replays, or drop chunks=.")
+        if plan.chunks.source == "host":
+            raise ValueError(
+                "host-streamed chunks apply to method='parallel' sweeps "
+                "only; the chunked sort2aggregate replay scans a "
+                "device-resident log (ChunkSpec(source='device')).")
+        if record_events:
+            raise ValueError(
+                "record_events is not supported with chunks= on the "
+                "sort2aggregate sweep: per-event winners/prices of the "
+                "whole log are the O(N·C) residency chunking avoids. Drop "
+                "record_events (spends/cap times stream fine) or drop "
+                "chunks=.")
     if plan.scenario_chunks is not None:
         raise ValueError(
             "scenario_chunks= (scenario-chunked execution) currently "
@@ -1246,17 +1695,18 @@ def check_s2a_options(plan: SweepPlan, record_events: bool = False) -> None:
 
 def execute_s2a_sweep(values, budgets, rules, plan: SweepPlan, *,
                       cap_times_init=None, refine_iters: int = 8,
-                      record_events: bool = False):
+                      record_events: bool = False,
+                      crossing_block: int = 4096):
     """Dispatch the SORT2AGGREGATE scenario sweep to ``plan.placement``.
 
     Returns ``(SimResult, consistency_gaps, refine_iters_used)`` from
-    :func:`repro.core.sweep.sweep_sort2aggregate` (batched) or
+    :func:`repro.core.sweep.sweep_sort2aggregate` (batched, optionally with
+    ``plan.chunks`` streaming each refine/aggregate pass through the
+    chunk-carried first-crossing prefix —
+    :func:`repro.core.sort2aggregate.refine_fixed_chunked`) or
     :func:`repro.core.sharded.sweep_sort2aggregate_sharded` (sharded) — the
     executor owns the placement dispatch and its validation
     (:func:`check_s2a_options`), the estimator modules own the algorithm.
-    (Chunked streaming applies to the Algorithm-2 ``method="parallel"``
-    sweep; a chunked refine/aggregate pass would need the same two-pass
-    treatment of ``first_crossing`` — rejected until built.)
     """
     check_s2a_options(plan, record_events)
     if plan.placement == "sharded":
@@ -1267,4 +1717,5 @@ def execute_s2a_sweep(values, budgets, rules, plan: SweepPlan, *,
     from repro.core.sweep import sweep_sort2aggregate
     return sweep_sort2aggregate(
         values, budgets, rules, cap_times_init=cap_times_init,
-        refine_iters=refine_iters, record_events=record_events)
+        refine_iters=refine_iters, record_events=record_events,
+        chunks=plan.chunks, crossing_block=crossing_block)

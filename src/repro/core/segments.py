@@ -27,13 +27,15 @@ from repro.core import auction
 from repro.core.types import AuctionRule, Segments, SimResult, never_capped
 
 
-@functools.partial(jax.jit, static_argnames=("record_events",))
+@functools.partial(jax.jit, static_argnames=("record_events",
+                                             "crossing_block"))
 def aggregate(
     values: jax.Array,            # (N, C)
     segments: Segments,
     budgets: jax.Array,           # (C,)
     rule: AuctionRule,
     record_events: bool = True,
+    crossing_block: int = 4096,
 ) -> SimResult:
     """Replay the whole log under a fixed segment history in one parallel pass.
 
@@ -41,14 +43,18 @@ def aggregate(
     resolution is a batched map; totals are segment sums. Cap times are
     *diagnosed* from the replay (first budget crossing) rather than assumed,
     which is the paper's built-in inconsistency check between Step 2 and
-    Step 3.
+    Step 3. ``crossing_block`` sizes :func:`first_crossing_times`' blockwise
+    scan (the default keeps the historical decomposition; the chunked
+    SORT2AGGREGATE spine matches it to its chunk grid for the bitwise
+    contract — see :func:`repro.core.sort2aggregate.refine_fixed_chunked`).
     """
     n_events, n_campaigns = values.shape
     seg_ids = segments.seg_ids(n_events)
     masks = segments.masks[seg_ids]               # (N, C) bool
     winners, prices = auction.resolve(values, masks, rule)
     final_spend = auction.spend_sums(winners, prices, n_campaigns)
-    cap_times = first_crossing_times(winners, prices, budgets, n_campaigns)
+    cap_times = first_crossing_times(winners, prices, budgets, n_campaigns,
+                                     block=crossing_block)
     return SimResult(
         final_spend=final_spend, cap_times=cap_times,
         winners=winners if record_events else None,

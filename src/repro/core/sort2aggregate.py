@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import auction
 from repro.core import segments as seg_lib
 from repro.core import vi as vi_lib
 from repro.core.types import AuctionRule, Segments, SimResult
@@ -87,7 +88,8 @@ def refine_segments(
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("refine_iters", "record_events"))
+                   static_argnames=("refine_iters", "record_events",
+                                    "crossing_block"))
 def refine_fixed_device(
     values: jax.Array,
     budgets: jax.Array,
@@ -96,6 +98,7 @@ def refine_fixed_device(
     *,
     refine_iters: int = 8,
     record_events: bool = False,
+    crossing_block: int = 4096,
 ):
     """Step 2 + Step 3 as one device program: a fixed number of fixed-point
     iterations on the cap times (no host-side cycle detection — ties damp out
@@ -117,7 +120,8 @@ def refine_fixed_device(
         caps, moved = carry
         segs = Segments.from_cap_times(caps, n_events)
         rep = seg_lib.aggregate(values, segs, budgets, rule,
-                                record_events=False)
+                                record_events=False,
+                                crossing_block=crossing_block)
         new = jnp.minimum(rep.cap_times, sentinel)
         moved = moved + jnp.any(new != caps).astype(jnp.int32)
         return (new, moved), None
@@ -129,7 +133,132 @@ def refine_fixed_device(
                                              length=refine_iters)
     segs = Segments.from_cap_times(caps, n_events)
     final = seg_lib.aggregate(values, segs, budgets, rule,
-                              record_events=record_events)
+                              record_events=record_events,
+                              crossing_block=crossing_block)
+    gap = jnp.max(jnp.abs(jnp.minimum(final.cap_times, sentinel) - caps)
+                  .astype(jnp.float32))
+    return final, gap, iters_used
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk_events", "refine_iters",
+                                    "crossing_block"))
+def refine_fixed_chunked(
+    values: jax.Array,
+    budgets: jax.Array,
+    rule: AuctionRule,
+    cap_times0: jax.Array,
+    *,
+    chunk_events: int,
+    refine_iters: int = 8,
+    crossing_block: int = 4096,
+):
+    """Step 2 + Step 3 with every replay pass chunk-scanned over the log.
+
+    The chunked treatment of the Algorithm-2 executor applied to the
+    SORT2AGGREGATE first-crossing prefix: each fixed-point iteration (and
+    the final aggregate pass) is a ``lax.scan`` over fixed event chunks
+    carrying the budget-crossing prefix state — the (C,) running spend
+    totals and first-crossing times — across chunk boundaries exactly as
+    :func:`repro.core.segments.first_crossing_times` carries them across
+    its internal blocks. Per-event intermediates (segment-mask gathers,
+    winners/prices, spend one-hots) exist for one chunk at a time, so the
+    working set is O(chunk_events · C), not O(N · C).
+
+    Alignment contract (pad-or-error, mirroring ``check_chunks``): chunks
+    must hold whole crossing blocks (``chunk_events % crossing_block ==
+    0``) and tile the log (``N % chunk_events == 0``). Under it every
+    chunk runs the IDENTICAL blockwise crossing steps as the unchunked
+    scan with the same ``crossing_block``, so ``cap_times`` (the whole
+    fixed-point trajectory, in fact) and the consistency gap are
+    bit-for-bit the unchunked :func:`refine_fixed_device`, for EVERY
+    aligned chunk size including the trivial single-chunk log.
+    ``final_spend`` is the crossing scan's carried running total —
+    bit-for-bit identical across all aligned chunk sizes, equal to the
+    unchunked aggregate's flat per-event segment sum up to float
+    associativity (the one quantity the two decompositions sum in a
+    different order). ``record_events`` is unsupported: per-event
+    winners/prices of the whole log are exactly the O(N) residency this
+    path exists to avoid.
+    """
+    n_events, n_campaigns = values.shape
+    if chunk_events % crossing_block != 0:
+        raise ValueError(
+            f"chunk/grid misalignment: chunks of {chunk_events} events do "
+            f"not hold whole crossing blocks of {crossing_block} "
+            "(first_crossing_times' blockwise scan); chunks must cover "
+            "whole blocks for the bit-for-bit crossing contract. Use a "
+            f"chunk size that is a multiple of {crossing_block}, or pass a "
+            "crossing_block= that divides your chunk (both paths must use "
+            "the same block).")
+    if n_events % chunk_events != 0:
+        raise ValueError(
+            f"ragged chunk: {n_events} events do not divide into chunks of "
+            f"{chunk_events} (remainder {n_events % chunk_events}). Pad the "
+            "event log so every chunk is full, pick a chunk size that "
+            "divides the event count, or drop chunks=.")
+    sentinel = jnp.int32(n_events + 1)
+    n_chunks = n_events // chunk_events
+    blocks_per_chunk = chunk_events // crossing_block
+    v_chunks = values.reshape(n_chunks, chunk_events, n_campaigns)
+
+    def replay_pass(caps):
+        """One chunk-scanned replay under ``Segments.from_cap_times(caps)``:
+        returns the carried (total_spend, crossing cap times)."""
+        segs = Segments.from_cap_times(caps, n_events)
+        inner = segs.boundaries[1:-1]
+
+        def chunk_step(carry, xs):
+            v_k, k = xs
+            gidx = k * chunk_events + jnp.arange(chunk_events,
+                                                 dtype=jnp.int32)
+            seg_ids = jnp.searchsorted(inner, gidx,
+                                       side="right").astype(jnp.int32)
+            masks = segs.masks[seg_ids]                 # (chunk, C) bool
+            winners, prices = auction.resolve(v_k, masks, rule)
+            w = winners.reshape(blocks_per_chunk, crossing_block)
+            p = prices.reshape(blocks_per_chunk, crossing_block)
+
+            def block_step(bcarry, binp):
+                s0, cap = bcarry
+                wb, pb, b_idx = binp
+                sm = auction.spend_matrix(wb, pb, n_campaigns)
+                cum = s0[None, :] + jnp.cumsum(sm, axis=0)
+                crossed = cum >= budgets[None, :]
+                any_cross = crossed.any(axis=0)
+                t_first = jnp.argmax(crossed, axis=0)
+                t_global = b_idx * crossing_block + t_first + 1
+                cap = jnp.where((cap == sentinel) & any_cross,
+                                t_global.astype(jnp.int32), cap)
+                return (cum[-1], cap), None
+
+            b_idx = k * blocks_per_chunk + jnp.arange(blocks_per_chunk,
+                                                      dtype=jnp.int32)
+            return jax.lax.scan(block_step, carry, (w, p, b_idx))[0], None
+
+        init = (jnp.zeros((n_campaigns,), jnp.float32),
+                jnp.full((n_campaigns,), sentinel, jnp.int32))
+        (s_final, cap), _ = jax.lax.scan(
+            chunk_step, init,
+            (v_chunks, jnp.arange(n_chunks, dtype=jnp.int32)))
+        return s_final, jnp.minimum(cap, sentinel)
+
+    def body(carry, _):
+        caps, moved = carry
+        _, new_caps = replay_pass(caps)
+        new = jnp.minimum(new_caps, sentinel)
+        moved = moved + jnp.any(new != caps).astype(jnp.int32)
+        return (new, moved), None
+
+    caps = jnp.minimum(jnp.asarray(cap_times0, jnp.int32), sentinel)
+    iters_used = jnp.int32(0)
+    if refine_iters > 0:
+        (caps, iters_used), _ = jax.lax.scan(body, (caps, iters_used), None,
+                                             length=refine_iters)
+    final_spend, cap_replay = replay_pass(caps)
+    final = SimResult(final_spend=final_spend, cap_times=cap_replay,
+                      winners=None, prices=None,
+                      segments=Segments.from_cap_times(caps, n_events))
     gap = jnp.max(jnp.abs(jnp.minimum(final.cap_times, sentinel) - caps)
                   .astype(jnp.float32))
     return final, gap, iters_used

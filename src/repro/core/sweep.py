@@ -38,7 +38,13 @@ place their rows on the global reduction grid — so per-event intermediates
 exist for one chunk at a time and results stay bit-for-bit equal to the
 in-memory drivers on any aligned chunk size (misaligned sizes raise the same
 pad-or-error contract as misaligned meshes). Chunking composes with both
-drivers and all resolve back-ends.
+drivers and all resolve back-ends, and is no longer an in-memory-only
+feature: ``ChunkSpec(source="host")`` (or a
+:class:`~repro.core.executor.HostStream` log) streams each chunk from host
+RAM through the executor's double-buffered ``device_put`` pipeline, so the
+log itself never has to fit device memory; the chunked SORT2AGGREGATE
+spine gives :func:`sweep_sort2aggregate` the same treatment for its
+first-crossing prefix (``chunks=``).
 """
 from __future__ import annotations
 
@@ -52,7 +58,8 @@ from repro.core.executor import (SweepPlan, as_chunk_spec,
                                  as_scenario_chunk_spec, check_batch_shapes,
                                  execute_sweep, plan_for_driver)
 from repro.core.sequential import sequential_replay
-from repro.core.sort2aggregate import refine_fixed_device
+from repro.core.sort2aggregate import (refine_fixed_chunked,
+                                       refine_fixed_device)
 from repro.core.types import AuctionRule, SimResult
 
 
@@ -206,7 +213,8 @@ def sweep_state_machine(
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("refine_iters", "record_events"))
+                   static_argnames=("refine_iters", "record_events",
+                                    "chunks", "crossing_block"))
 def sweep_sort2aggregate(
     values: jax.Array,            # (N, C)
     budgets: jax.Array,           # (S, C)
@@ -214,6 +222,8 @@ def sweep_sort2aggregate(
     cap_times_init: Optional[jax.Array] = None,   # (S, C) or (C,) warm start
     refine_iters: int = 8,
     record_events: bool = False,
+    chunks=None,                  # int | ChunkSpec — event-chunked replays
+    crossing_block: int = 4096,
 ) -> Tuple[SimResult, jax.Array, jax.Array]:
     """SORT2AGGREGATE over a scenario batch: per-scenario fixed-point
     refinement of the segment history + one aggregate pass, all vmapped.
@@ -228,6 +238,19 @@ def sweep_sort2aggregate(
     :func:`repro.core.vi.estimate_pi_sweep` (each scenario's caps estimated
     under its own design, no serial base pre-pass), or default to the
     optimistic all-active start.
+
+    ``chunks`` gives the refine/aggregate passes the executor's chunked
+    treatment (:func:`repro.core.sort2aggregate.refine_fixed_chunked`):
+    every replay scans the log ``events_per_chunk`` events at a time,
+    carrying the first-crossing prefix state across chunks, so per-event
+    intermediates are O(chunk · C). Chunks must hold whole
+    ``crossing_block``s and tile the log (pad-or-error); ``cap_times`` and
+    the gaps are bit-for-bit the unchunked path at the same
+    ``crossing_block``, and ``final_spend`` is bit-for-bit stable across
+    aligned chunk sizes (vs. the unchunked flat segment sum it can differ
+    in the last ulp — its blockwise association is the streaming one).
+    ``record_events`` is unsupported with chunks (the (S, N) winners/prices
+    gather is exactly the residency chunking avoids).
     """
     check_batch_shapes(values, budgets, rules)
     n_events, n_campaigns = values.shape
@@ -237,10 +260,30 @@ def sweep_sort2aggregate(
     cap_times_init = jnp.broadcast_to(
         jnp.asarray(cap_times_init, jnp.int32),
         (n_scenarios, n_campaigns))
+    chunks = as_chunk_spec(chunks)
+
+    if chunks is not None:
+        if record_events:
+            raise ValueError(
+                "record_events is not supported with chunks= on the "
+                "sort2aggregate sweep: per-event winners/prices of the "
+                "whole log are the O(N·C) residency chunking avoids. Drop "
+                "record_events (spends/cap times stream fine) or drop "
+                "chunks=.")
+
+        def one_chunked(b, r, caps0):
+            return refine_fixed_chunked(
+                values, b, r, caps0,
+                chunk_events=chunks.events_per_chunk,
+                refine_iters=refine_iters, crossing_block=crossing_block)
+
+        return jax.vmap(one_chunked, in_axes=(0, 0, 0))(budgets, rules,
+                                                        cap_times_init)
 
     def one(b, r, caps0):
         return refine_fixed_device(values, b, r, caps0,
                                    refine_iters=refine_iters,
-                                   record_events=record_events)
+                                   record_events=record_events,
+                                   crossing_block=crossing_block)
 
     return jax.vmap(one, in_axes=(0, 0, 0))(budgets, rules, cap_times_init)

@@ -134,6 +134,37 @@ class SweepMeshSpec:
                          scenario_chunks=as_scenario_chunk_spec(
                              scenario_chunks))
 
+    @property
+    def is_multiprocess(self) -> bool:
+        """Whether this spec's mesh spans more than one jax process."""
+        return len({d.process_index for d in self.mesh.devices.flat}) > 1
+
+    @staticmethod
+    def for_processes() -> "SweepMeshSpec":
+        """A multi-host sweep mesh: EVERY process's devices on one event axis.
+
+        The contract ``placement="multihost"`` consumes: ``jax.devices()``
+        enumerates devices process-major (process 0's devices first), so
+        process ``r``'s event shard is the ``r``-th contiguous row-slice of
+        the global log — the identical row-major ``index_offset`` placement
+        a single-process mesh gives its devices, which is what makes the
+        multihost run bit-for-bit the single-process sharded run on the
+        same log. Degenerates to :meth:`for_devices` under one process
+        (the wiring/bitwise tests run there). Call
+        :func:`repro.compat.distributed_initialize` first on a real
+        multi-process job; scenario-axis process meshes are not supported
+        (shard scenarios *within* a process via ``placement="sharded"``).
+        """
+        devices = jax.devices()
+        ranks = [d.process_index for d in devices]
+        if ranks != sorted(ranks):  # pragma: no cover - jax orders by rank
+            raise ValueError(
+                "jax.devices() is not process-major on this backend; the "
+                "multihost event-offset contract needs process r's devices "
+                "to form the r-th contiguous slice of the mesh")
+        mesh = _make_mesh((len(devices),), ("data",))
+        return SweepMeshSpec(mesh, event_axes=("data",))
+
     @staticmethod
     def for_devices(num_event_devices: Optional[int] = None,
                     num_scenario_devices: int = 1) -> "SweepMeshSpec":

@@ -27,7 +27,16 @@ away:
   design_fingerprint` — exact design bytes, no rounding), so overlapping
   grids from :meth:`CounterfactualEngine.search` or repeated callers dedupe
   exactly; appends invalidate the cache (version bump + drop), and
-  hit/miss counters are surfaced via :attr:`stats`.
+  hit/miss counters are surfaced via :attr:`stats`;
+* **host-resident store + persistence** — ``store="host"`` keeps the log
+  out of device memory entirely (exact replays stream the slabs through
+  the double-buffered :class:`~repro.core.executor.HostStream` pipeline;
+  appends fold host slabs via :func:`~repro.core.executor.
+  execute_sweep_resumable` without ever concatenating the log on device),
+  and :meth:`save` / :meth:`load` checkpoint the whole service — slabs,
+  base design, streaming carries, ``log_version`` — via
+  :mod:`repro.checkpoint.ckpt`, so a restored service answers bitwise an
+  uninterrupted one.
 
 Two answer semantics, honestly separated (see docs/ARCHITECTURE.md
 "Service layer"):
@@ -53,10 +62,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.ckpt import (latest_step, restore_checkpoint,
+                                   save_checkpoint)
+from repro.core import segments as seg_lib
 from repro.core import sweep as sweep_lib
 from repro.core.counterfactual import (CounterfactualEngine, ScenarioGrid,
                                        SweepResult)
-from repro.core.executor import (SweepCarry, SweepPlan, as_chunk_spec,
+from repro.core.executor import (ChunkSpec, HostStream, SweepCarry,
+                                 SweepPlan, as_chunk_spec,
                                  as_scenario_chunk_spec,
                                  check_append_alignment, execute_sweep,
                                  execute_sweep_resumable, initial_carry)
@@ -122,13 +135,33 @@ class CounterfactualService:
     :class:`~repro.core.executor.SweepPlan` every exact replay runs on —
     any cell produces bit-identical answers, so the plan is a pure
     capacity/placement choice.
+
+    ``store="host"`` keeps the log out of device memory entirely: slabs
+    stay host-resident numpy, the exact path replays them through the
+    double-buffered :class:`~repro.core.executor.HostStream` pipeline
+    (device residency O(events_per_chunk · C), answers still bitwise the
+    device-resident replay), and appends fold the new slab into streaming
+    carries without ever materialising the concatenated log on device.
+    Host mode serves design-only scenarios on ``placement="batched"``
+    with no mesh / scenario chunking (overlay families raise the
+    executor's host-stream error); ``events_per_chunk`` must hold whole
+    canonical reduction blocks (a multiple of
+    :data:`~repro.core.segments.REDUCE_BLOCKS`), and replay chunk sizes
+    are re-aligned to the canonical grid per log size (the grid coarsens
+    as N grows — see :func:`~repro.core.segments.reduce_block_size`).
+
+    :meth:`save` / :meth:`load` persist the whole service (slabs, base
+    design, streaming carries, log version) through
+    :mod:`repro.checkpoint.ckpt`, so a restored service answers — and
+    keeps folding appends — bitwise an uninterrupted one.
     """
 
     def __init__(self, budgets, base_rule: Optional[AuctionRule] = None, *,
                  events=None, events_per_chunk: int = 256,
                  max_batch: int = 32, placement: str = "batched",
                  resolve: str = "auto", mesh=None, chunks=None,
-                 scenario_chunks=None, interpret: Optional[bool] = None):
+                 scenario_chunks=None, interpret: Optional[bool] = None,
+                 store: str = "device"):
         self.base_budgets = jnp.asarray(budgets, jnp.float32)
         if self.base_budgets.ndim != 1:
             raise ValueError(
@@ -141,6 +174,31 @@ class CounterfactualService:
         self.max_batch = int(max_batch)
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if store not in ("device", "host"):
+            raise ValueError(
+                f"unknown store: {store!r} (use 'device' or 'host')")
+        self.store = store
+        if store == "host":
+            if placement != "batched" or mesh is not None:
+                raise ValueError(
+                    "store='host' replays through the host-stream pipeline "
+                    "(placement='batched', no mesh); shard within a replay "
+                    "via store='device' + placement='sharded' instead")
+            if scenario_chunks is not None:
+                raise ValueError(
+                    "store='host' does not compose with scenario_chunks= "
+                    "(the host-stream driver runs all lanes per pass)")
+            if events_per_chunk % seg_lib.REDUCE_BLOCKS != 0:
+                raise ValueError(
+                    f"store='host' needs events_per_chunk to hold whole "
+                    f"canonical reduction blocks: {events_per_chunk} is not "
+                    f"a multiple of REDUCE_BLOCKS={seg_lib.REDUCE_BLOCKS}")
+            # replay chunk-size ambition; actual chunk sizes are re-aligned
+            # to the canonical grid per log size (_host_chunks)
+            self._host_epc_target = (
+                as_chunk_spec(chunks).events_per_chunk
+                if chunks is not None else int(events_per_chunk))
+            chunks = None
         # the exact-replay plan (validated here: unknown placement/resolve
         # and missing meshes fail at construction, not first ask)
         self.plan = SweepPlan(placement=placement, resolve=resolve,
@@ -176,17 +234,43 @@ class CounterfactualService:
         return self._n_events
 
     @property
-    def values(self) -> jax.Array:
-        """The full stored log (appended slabs concatenated), the exact
-        path's replay input. Cached per ``log_version``."""
+    def values(self):
+        """The full stored log, the exact path's replay input: the
+        appended slabs concatenated (cached per ``log_version``) — or,
+        under ``store="host"``, a zero-copy
+        :class:`~repro.core.executor.HostStream` view of the host-resident
+        slabs (never concatenated, never device-resident)."""
         if not self._slabs:
             raise ValueError(
                 "empty log: append events before asking the service")
+        if self.store == "host":
+            return HostStream(list(self._slabs))
         if self._values_version != self.log_version:
             self._values = (self._slabs[0] if len(self._slabs) == 1
                             else jnp.concatenate(self._slabs, axis=0))
             self._values_version = self.log_version
         return self._values
+
+    def _host_chunks(self, window: int, total: int) -> Optional[ChunkSpec]:
+        """An aligned host :class:`ChunkSpec` for streaming ``window``
+        events of a ``total``-event log (full replay: ``window == total``;
+        resumable fold: the new rows of a log that will have ``total``).
+
+        The canonical reduction grid coarsens with the log
+        (``reduce_block_size(total)``), so a fixed chunk size cannot stay
+        aligned forever; this picks the largest whole-block chunk at most
+        ``_host_epc_target`` that divides the window. Full replays always
+        have one (``events_per_chunk`` is a multiple of
+        ``REDUCE_BLOCKS``); a fold window may not — ``None`` means "no
+        aligned host chunking exists", and the caller folds the slab
+        through the device program instead (bitwise the same answer)."""
+        block = seg_lib.reduce_block_size(total)
+        if window % block:
+            return None
+        m = window // block
+        limit = max(self._host_epc_target // block, 1)
+        k = max(d for d in range(1, min(m, limit) + 1) if m % d == 0)
+        return ChunkSpec(block * k, source="host")
 
     def append(self, events) -> int:
         """Admit a new aligned event slab; returns the new ``log_version``.
@@ -210,16 +294,39 @@ class CounterfactualService:
             raise ValueError("append needs at least one event row")
         check_append_alignment(self._chunk_spec, events.shape[0])
         self.flush()
+        if self.store == "host":
+            events = np.asarray(jax.device_get(events), np.float32)
         self._slabs.append(events)
         self._n_events += events.shape[0]
         self.log_version += 1
         self.appends += 1
         self._cache.clear()
         for group in self._streams.values():
-            _, group.carry = execute_sweep_resumable(
-                events, group.budgets, group.rules, self._stream_plan,
-                carry=group.carry)
+            group.carry = self._fold(events, group.budgets, group.rules,
+                                     group.carry)
         return self.log_version
+
+    def _fold(self, slab, budgets, rules, carry) -> SweepCarry:
+        """Fold one new slab into a streaming carry — O(slab) work.
+
+        Under ``store="host"`` the slab is host-resident and streams
+        through the host-chunk pipeline when an aligned chunking exists
+        for this fold window (falling back to the device program on the
+        slab — same bits, slab-bounded device residency — when the
+        canonical grid misaligns)."""
+        n_new = slab.shape[0]
+        spec = (self._host_chunks(n_new, int(carry.n_events_seen) + n_new)
+                if self.store == "host" else None)
+        if spec is not None:
+            plan = dataclasses.replace(self._stream_plan, chunks=spec)
+            _, carry = execute_sweep_resumable(
+                HostStream([np.asarray(slab, np.float32)]), budgets, rules,
+                plan, carry=carry)
+            return carry
+        _, carry = execute_sweep_resumable(
+            jnp.asarray(slab), budgets, rules, self._stream_plan,
+            carry=carry)
+        return carry
 
     # -- admission batching (the exact path) -------------------------------
 
@@ -293,6 +400,13 @@ class CounterfactualService:
         identical per-lane program and cannot change any other lane's
         bits."""
         plan = self.plan
+        if self.store == "host":
+            # host-stream replays run all lanes per pass (no scenario
+            # chunking) with chunk sizes re-aligned to the canonical grid
+            # at the current log size
+            return dataclasses.replace(
+                plan, chunks=self._host_chunks(self._n_events,
+                                               self._n_events)), n_lanes
         spc = (plan.scenario_chunks.scenarios_per_chunk
                if plan.scenario_chunks is not None else None)
         if spc is None and n_lanes > self.max_batch:
@@ -426,9 +540,7 @@ class CounterfactualService:
         lane_budgets = budgets[None, :]
         carry = initial_carry(1, self.n_campaigns)
         for slab in self._slabs:
-            _, carry = execute_sweep_resumable(
-                slab, lane_budgets, lane_rules, self._stream_plan,
-                carry=carry)
+            carry = self._fold(slab, lane_budgets, lane_rules, carry)
         group = self._streams.get(rule.kind)
         if group is None:
             self._streams[rule.kind] = _StreamGroup(
@@ -466,6 +578,120 @@ class CounterfactualService:
         raise ValueError(
             f"unknown streaming scenario: {label!r} (registered: "
             f"{[l for g in self._streams.values() for l in g.labels]})")
+
+    # -- persistence -------------------------------------------------------
+
+    def save(self, path) -> "object":
+        """Persist the whole service under ``path`` (a checkpoint directory
+        per ``log_version``, :func:`repro.checkpoint.ckpt.save_checkpoint`):
+        the stored slabs, the base design, and every streaming group's
+        stacked design + carried burnout frontier. Pending asks are
+        flushed first (tickets cannot survive a restart). Returns the
+        checkpoint directory; restore with :meth:`load`, after which
+        answers and appended folds are bitwise an uninterrupted
+        service's."""
+        self.flush()
+        tree = {
+            "slabs": [np.asarray(jax.device_get(s), np.float32)
+                      for s in self._slabs],
+            "base_budgets": np.asarray(self.base_budgets),
+            "base_multipliers": np.asarray(self.base_rule.multipliers),
+            "base_reserve": np.asarray(self.base_rule.reserve),
+            "streams": {
+                kind: {
+                    "multipliers": np.asarray(g.rules.multipliers),
+                    "reserve": np.asarray(jnp.atleast_1d(g.rules.reserve)),
+                    "budgets": np.asarray(g.budgets),
+                    "s_hat": np.asarray(g.carry.s_hat),
+                    "active": np.asarray(g.carry.active),
+                    "cap_times": np.asarray(g.carry.cap_times),
+                    "n_hat": np.asarray(g.carry.n_hat),
+                } for kind, g in self._streams.items()},
+        }
+        extra = {
+            "log_version": self.log_version,
+            "n_events": self._n_events,
+            "n_slabs": len(self._slabs),
+            "n_campaigns": self.n_campaigns,
+            "events_per_chunk": self._chunk_spec.events_per_chunk,
+            "max_batch": self.max_batch,
+            "store": self.store,
+            "base_kind": self.base_rule.kind,
+            "seq": self._seq,
+            "stream_labels": {k: list(g.labels)
+                              for k, g in self._streams.items()},
+            "stream_n_seen": {k: int(g.carry.n_events_seen)
+                              for k, g in self._streams.items()},
+            "counters": {"hits": self.hits, "misses": self.misses,
+                         "batches": self.batches, "appends": self.appends},
+        }
+        return save_checkpoint(path, self.log_version, tree, extra)
+
+    @classmethod
+    def load(cls, path, *, step: Optional[int] = None,
+             placement: str = "batched", resolve: str = "auto", mesh=None,
+             chunks=None, scenario_chunks=None,
+             interpret: Optional[bool] = None) -> "CounterfactualService":
+        """Restore a service saved by :meth:`save` (the latest checkpoint
+        under ``path``, or an explicit ``step`` = log version). Log slabs,
+        base design, log version and every streaming carry come back
+        exactly; the execution-plan knobs are per-process capacity choices
+        (meshes are not serialisable), so pass them here — any cell
+        answers bitwise, so the restored service's answers and subsequent
+        appended folds match an uninterrupted one bit-for-bit. The
+        delta-aware cache starts empty (first asks re-replay)."""
+        if step is None:
+            step = latest_step(path)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no service checkpoints under {path}")
+        # two-phase restore: the manifest names the tree structure (slab
+        # count, stream kinds), then the real tree restores into it
+        _, manifest = restore_checkpoint(path, {}, step=step)
+        extra = manifest["extra"]
+        kinds = list(extra["stream_labels"])
+        like = {
+            "slabs": [0] * int(extra["n_slabs"]),
+            "base_budgets": 0, "base_multipliers": 0, "base_reserve": 0,
+            "streams": {kind: {"multipliers": 0, "reserve": 0,
+                               "budgets": 0, "s_hat": 0, "active": 0,
+                               "cap_times": 0, "n_hat": 0}
+                        for kind in kinds},
+        }
+        tree, _ = restore_checkpoint(path, like, step=step)
+        base_rule = AuctionRule(multipliers=tree["base_multipliers"],
+                                reserve=tree["base_reserve"],
+                                kind=extra["base_kind"])
+        svc = cls(tree["base_budgets"], base_rule,
+                  events_per_chunk=int(extra["events_per_chunk"]),
+                  max_batch=int(extra["max_batch"]), placement=placement,
+                  resolve=resolve, mesh=mesh, chunks=chunks,
+                  scenario_chunks=scenario_chunks, interpret=interpret,
+                  store=extra["store"])
+        slabs = tree["slabs"]
+        if svc.store == "host":
+            slabs = [np.asarray(jax.device_get(s), np.float32)
+                     for s in slabs]
+        svc._slabs = list(slabs)
+        svc._n_events = int(extra["n_events"])
+        svc.log_version = int(extra["log_version"])
+        svc._seq = int(extra["seq"])
+        counters = extra["counters"]
+        svc.hits, svc.misses = int(counters["hits"]), int(counters["misses"])
+        svc.batches = int(counters["batches"])
+        svc.appends = int(counters["appends"])
+        for kind in kinds:
+            g = tree["streams"][kind]
+            svc._streams[kind] = _StreamGroup(
+                labels=list(extra["stream_labels"][kind]),
+                rules=AuctionRule(multipliers=g["multipliers"],
+                                  reserve=g["reserve"], kind=kind),
+                budgets=g["budgets"],
+                carry=SweepCarry(
+                    s_hat=g["s_hat"], active=g["active"],
+                    cap_times=g["cap_times"], n_hat=g["n_hat"],
+                    n_events_seen=int(extra["stream_n_seen"][kind])))
+        return svc
 
     # -- observability -----------------------------------------------------
 

@@ -66,6 +66,65 @@ def test_warm_start_skips_vi(env, oracle):
     assert float(err) < 0.02, float(err)
 
 
+def test_chunked_s2a_bitwise_unchunked(env):
+    """The chunked SORT2AGGREGATE spine rechunks the refine/replay pass
+    without changing the refinement: cap times, consistency gaps and
+    iteration counts are bit-for-bit the unchunked sweep for every aligned
+    chunk size (whole multiples of the crossing block), and final spends
+    are bitwise across chunkings (the crossing scan's carried total) and
+    allclose to the unchunked flat segment sums."""
+    from repro.core import ScenarioGrid
+    from repro.core.sweep import sweep_sort2aggregate
+    grid = ScenarioGrid.product(env.rule, env.budgets,
+                                bid_scales=[1.0, 1.2],
+                                budget_scales=[1.0, 0.6])
+    res_u, gap_u, it_u = sweep_sort2aggregate(env.values, grid.budgets,
+                                              grid.rules,
+                                              crossing_block=1024)
+    spends = []
+    for epc in (1024, 2048, 8192):
+        res_c, gap_c, it_c = sweep_sort2aggregate(
+            env.values, grid.budgets, grid.rules, chunks=epc,
+            crossing_block=1024)
+        assert np.array_equal(np.asarray(res_u.cap_times),
+                              np.asarray(res_c.cap_times)), epc
+        assert np.array_equal(np.asarray(gap_u), np.asarray(gap_c)), epc
+        assert np.array_equal(np.asarray(it_u), np.asarray(it_c)), epc
+        np.testing.assert_allclose(np.asarray(res_u.final_spend),
+                                   np.asarray(res_c.final_spend),
+                                   rtol=1e-5)
+        spends.append(np.asarray(res_c.final_spend))
+    for s in spends[1:]:
+        assert np.array_equal(spends[0], s)
+
+
+def test_chunked_s2a_alignment_contract(env):
+    from repro.core import ScenarioGrid
+    from repro.core.sweep import sweep_sort2aggregate
+    grid = ScenarioGrid.product(env.rule, env.budgets)
+    with pytest.raises(ValueError, match="chunk/grid misalignment"):
+        sweep_sort2aggregate(env.values, grid.budgets, grid.rules,
+                             chunks=512, crossing_block=1024)
+    with pytest.raises(ValueError, match="ragged chunk"):
+        sweep_sort2aggregate(env.values, grid.budgets, grid.rules,
+                             chunks=3072, crossing_block=1024)
+
+
+def test_chunked_s2a_through_engine(env):
+    """engine.sweep(method='sort2aggregate', chunks=...) is bitwise the
+    unchunked engine sweep on cap times / refine iters."""
+    from repro.core import CounterfactualEngine
+    eng = CounterfactualEngine(env.values, env.budgets, env.rule)
+    grid = eng.grid(bid_scales=(1.0, 1.3))
+    ref = eng.sweep(grid, method="sort2aggregate", crossing_block=2048)
+    out = eng.sweep(grid, method="sort2aggregate", chunks=2048,
+                    crossing_block=2048)
+    assert np.array_equal(np.asarray(ref.results.cap_times),
+                          np.asarray(out.results.cap_times))
+    assert np.array_equal(np.asarray(ref.refine_iters),
+                          np.asarray(out.refine_iters))
+
+
 def test_counterfactual_engine_revenue_direction(env):
     """Raising every bid multiplier cannot reduce first-price revenue on the
     same log (platform-level sanity of the counterfactual API)."""

@@ -132,6 +132,50 @@ def test_chunked_sweep_bitwise_any_aligned_chunk(epc, bid, bud):
                                       err_msg=f"chunks={epc}: {name}")
 
 
+@given(st.sampled_from([16, 32, 64, 128, 256, 512]),
+       st.sampled_from([1, 3, 4]),
+       st.sampled_from(["jnp", "fused"]),
+       st.sampled_from(["device", "batched"]),
+       st.booleans(),
+       st.floats(0.7, 1.4), st.floats(0.2, 2.0))
+def test_host_streamed_sweep_bitwise_any_aligned_chunk(
+        epc, n_slabs, resolve, placement, prefetch, bid, bud):
+    """Host-streamed execution is bit-for-bit the device-resident sweep
+    for EVERY aligned chunk size × placement × resolve back-end × pipeline
+    mode (double-buffered and synchronous per-chunk puts), with the log
+    split across arbitrary (even ragged) host slab boundaries — the
+    memory-unbounded analogue of the event-chunk invariance property."""
+    from repro.core import ScenarioGrid, SweepPlan, execute_sweep
+    from repro.core.executor import ChunkSpec, HostStream
+    env = _sweep_env()
+    grid = ScenarioGrid.product(AuctionRule.first_price(_SWEEP_C),
+                                env.budgets, bid_scales=[1.0, bid],
+                                budget_scales=[1.0, bud])
+    interpret = True if resolve == "fused" else None
+    spec = ChunkSpec(epc, source="host", prefetch=prefetch)
+    stream = HostStream(
+        [np.asarray(s) for s in np.array_split(np.asarray(env.values),
+                                               n_slabs)])
+    label = f"epc={epc} slabs={n_slabs} {resolve}/{placement} " \
+            f"prefetch={prefetch}"
+    if placement == "device":
+        # one unbatched lane
+        rule1, budgets1 = grid.scenario(1)
+        args = (budgets1, rule1)
+    else:
+        args = (grid.budgets, grid.rules)
+    ref = execute_sweep(env.values, *args,
+                        SweepPlan(placement=placement, resolve=resolve,
+                                  interpret=interpret))
+    out = execute_sweep(stream, *args,
+                        SweepPlan(placement=placement, resolve=resolve,
+                                  interpret=interpret, chunks=spec))
+    for name, a, b in zip(("final_spend", "cap_times", "retired",
+                           "boundaries", "num_rounds", "n_hat"), out, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{label}: {name}")
+
+
 @given(st.sampled_from([1, 2, 4]),
        st.sampled_from([None, 16, 64, 128]),
        st.sampled_from(["jnp", "fused"]),

@@ -11,6 +11,7 @@ log arrives in one fold, deterministic across services, and round-trippable
 through pickle / host transfer.
 """
 import pickle
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -474,6 +475,115 @@ def test_resumable_single_fold_matches_execute_sweep(env, base, grid):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert carry.n_events_seen == _N
     assert carry.num_scenarios == grid.num_scenarios
+
+
+# ---------------------------------------------------------------------------
+# host-resident store + persistence
+# ---------------------------------------------------------------------------
+
+def _service_with_streams(env, base, partition, values=None, **kwargs):
+    svc = CounterfactualService(env.budgets, base, events_per_chunk=_EPC,
+                                **kwargs)
+    svc.register("base")
+    svc.register("hot2", rule=base.with_multiplier(2, 1.7))
+    for slab in _splits(env.values if values is None else values,
+                        partition):
+        svc.append(slab)
+    return svc
+
+
+@pytest.mark.parametrize("partition", PARTITIONS,
+                         ids=["one", "uneven", "quarters"])
+def test_host_store_bitwise_device_store(env, base, grid, reference,
+                                         partition):
+    """store='host' keeps the log in host RAM (HostStream replays, host
+    slab folds) yet answers — exact and streaming — bit-for-bit the
+    device-store service across append partitions. The 'uneven' partition
+    exercises fold totals where the canonical grid misaligns with any
+    host chunking (the documented device-program fallback)."""
+    dev = _service_with_streams(env, base, partition, store="device")
+    host = _service_with_streams(env, base, partition, store="host")
+    _assert_bitwise(host.sweep(grid), reference)
+    for label in ("base", "hot2"):
+        a, b = dev.streaming(label), host.streaming(label)
+        np.testing.assert_array_equal(a.final_spend, b.final_spend)
+        np.testing.assert_array_equal(a.cap_times, b.cap_times)
+    a, b = dev.ask().result(), host.ask().result()
+    np.testing.assert_array_equal(a.final_spend, b.final_spend)
+    np.testing.assert_array_equal(a.cap_times, b.cap_times)
+
+
+def test_host_store_never_concatenates(env, base):
+    from repro.core.executor import HostStream
+    svc = _service_with_streams(env, base, (128, 128, 128, 128),
+                                store="host")
+    stream = svc.values
+    assert isinstance(stream, HostStream)
+    assert stream.n_events == _N and len(stream._slabs) == 4
+
+
+def test_host_store_validation(env, base):
+    from repro.launch.mesh import SweepMeshSpec
+    with pytest.raises(ValueError, match="unknown store"):
+        CounterfactualService(env.budgets, base, store="disk")
+    with pytest.raises(ValueError, match="host-stream"):
+        CounterfactualService(env.budgets, base, store="host",
+                              placement="sharded",
+                              mesh=SweepMeshSpec.for_devices())
+    with pytest.raises(ValueError, match="scenario_chunks"):
+        CounterfactualService(env.budgets, base, store="host",
+                              scenario_chunks=2)
+    with pytest.raises(ValueError, match="REDUCE_BLOCKS"):
+        CounterfactualService(env.budgets, base, store="host",
+                              events_per_chunk=48)
+
+
+@pytest.mark.parametrize("store", ["device", "host"])
+def test_save_load_append_cycle_bitwise_uninterrupted(env, base, grid,
+                                                      store):
+    """A service saved, restored, and appended-to answers bitwise a
+    service that never stopped — exact asks, grid sweeps, and streaming
+    frontiers alike."""
+    svc = _service_with_streams(env, base, (128, 256),
+                                values=env.values[:384], store=store)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt_dir = svc.save(d)
+        assert ckpt_dir.name == f"step_{svc.log_version:08d}"
+        restored = CounterfactualService.load(d)
+    assert restored.store == store
+    assert restored.log_version == svc.log_version
+    assert restored.n_events == svc.n_events
+    assert restored.stats["registered"] == 2
+    tail = env.values[384:]
+    svc.append(tail)
+    restored.append(tail)
+    for label in ("base", "hot2"):
+        a, b = svc.streaming(label), restored.streaming(label)
+        np.testing.assert_array_equal(a.final_spend, b.final_spend,
+                                      err_msg=label)
+        np.testing.assert_array_equal(a.cap_times, b.cap_times,
+                                      err_msg=label)
+    _assert_bitwise(restored.sweep(grid), svc.sweep(grid))
+    a = svc.ask(rule=base.with_multiplier(5, 0.4)).result()
+    b = restored.ask(rule=base.with_multiplier(5, 0.4)).result()
+    np.testing.assert_array_equal(a.final_spend, b.final_spend)
+    np.testing.assert_array_equal(a.cap_times, b.cap_times)
+    assert a.log_version == b.log_version
+
+
+def test_save_load_roundtrip_full_log_answer(env, base, grid, reference):
+    """A restored service's first answers replay the restored slabs —
+    bitwise the one-shot engine sweep of the full log."""
+    svc = _service_with_streams(env, base, (_N,), store="host")
+    with tempfile.TemporaryDirectory() as d:
+        svc.save(d)
+        restored = CounterfactualService.load(d)
+    _assert_bitwise(restored.sweep(grid), reference)
+
+
+def test_load_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no service checkpoints"):
+        CounterfactualService.load(tmp_path)
 
 
 # ---------------------------------------------------------------------------
