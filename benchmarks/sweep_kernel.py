@@ -47,6 +47,17 @@ Four layers; the first three for S in a configurable schedule (default
   and reported with the evaluation counts from the search ledger. Written
   to its OWN json section (``sweep_search``) so the CI invocation that runs
   only this layer (``--layers search``) does not clobber the kernel rows.
+* ``tuned`` — the measured plan autotuner (``repro.tune``): one
+  ``autotune`` pass on a tiny trial budget writes the persistent tuning
+  cache, then the end-to-end ``execute_sweep`` with the tuned plan
+  (resolved THROUGH that cache) is timed against the default plan with
+  ``common.time_pair`` interleaved medians, plus the cache-hit resolution
+  latency (what every later same-shape sweep pays). Written to its OWN
+  json section (``sweep_tuned``) with the winner configs per S. **CI
+  gate:** the tuned plan must not be more than 1.10x slower than the
+  default — the tuner records the default when nothing beats it, so a
+  bigger gap means resolution itself regressed; the benchmark exits
+  non-zero.
 * ``service`` — the always-on service's incremental-append streaming fold
   (``execute_sweep_resumable`` over the newest slab only, the O(new
   events) causal-frontier update) vs a full-log exact replay
@@ -78,7 +89,7 @@ from benchmarks.common import (bench_report, emit, sweep_argparser,
 
 
 LAYERS = ("resolve", "round", "sweep", "stream", "hoststream", "search",
-          "service")
+          "service", "tuned")
 
 
 def main(n_events: int = 2048, n_campaigns: int = 32,
@@ -384,6 +395,59 @@ def main(n_events: int = 2048, n_campaigns: int = 32,
         update_bench_json(out, "sweep_service", bench_report(
             service_records, n_campaigns=n_campaigns, slabs=4))
 
+    # --- tuned layer: autotuned plan vs the default plan, via the cache ----
+    tuned_gate = {}
+    if "tuned" in layers:
+        import time
+
+        from repro.core import execute_sweep
+        from repro.core.executor import SweepPlan
+        from repro.tune import autotune, resolve_plan, shared_cache
+
+        tuned_records = []
+        for s_count in s_values:
+            grid_s = ScenarioGrid.product(
+                base, env.budgets,
+                bid_scales=[1.0 + 0.02 * i for i in range(s_count)])
+            plan = SweepPlan(block_t="auto", tuned=True)
+            report = autotune(env.values, grid_s.budgets, grid_s.rules,
+                              plan, trials=5, quick_trials=2, top_k=3,
+                              max_events=min(n_events, 4096))
+            # cache-hit resolution latency: what every later same-shape
+            # sweep pays before its first trace (file stat + memo lookup)
+            cache = shared_cache(report.cache_path)
+            t0 = time.perf_counter()
+            for _ in range(100):
+                tuned_plan = resolve_plan(
+                    plan, n_events=n_events, n_campaigns=n_campaigns,
+                    n_scenarios=s_count, cache=cache)
+            resolve_us = (time.perf_counter() - t0) / 100 * 1e6
+
+            def run_tuned():
+                return execute_sweep(env.values, grid_s.budgets,
+                                     grid_s.rules, tuned_plan)[0]
+
+            def run_default():
+                return execute_sweep(env.values, grid_s.budgets,
+                                     grid_s.rules, SweepPlan())[0]
+
+            us_t, us_d = time_pair(run_tuned, run_default, repeats=15,
+                                   warmup=2)
+            tuned_gate[s_count] = (us_t, us_d)
+            for path, us in (("tuned", us_t), ("default", us_d)):
+                record(s_count, "tuned", path, us)
+                tuned_records.append(records.pop())
+            tuned_records[-2].update(
+                winner_config=report.winner_config, origin=report.origin,
+                n_candidates=report.n_candidates,
+                cache_hit_resolve_us=round(resolve_us, 1),
+                cache_path=str(report.cache_path))
+            print(f"tuned S={s_count}: winner {report.winner_config} "
+                  f"({report.origin}, {report.n_candidates} candidates), "
+                  f"cache-hit resolve {resolve_us:.0f}us")
+        update_bench_json(out, "sweep_tuned", bench_report(
+            tuned_records, n_events=n_events, n_campaigns=n_campaigns))
+
     if records:
         update_bench_json(out, "sweep_kernel", bench_report(
             records, n_events=n_events, n_campaigns=n_campaigns,
@@ -406,6 +470,18 @@ def main(n_events: int = 2048, n_campaigns: int = 32,
                 f"S={s_gate} on CPU")
         print(f"round gate ok at S={s_gate}: fused {us_fused:.0f}us vs "
               f"resolve+reduce {us_unfused:.0f}us")
+
+    # CI gate: the tuned plan must stay within 10% of the default plan at
+    # every S — the tuner falls back to the default config when nothing
+    # strictly beats it, so a bigger gap means plan resolution itself
+    # (cache consult / cost-model ranking) regressed the hot path.
+    for s_gate, (us_t, us_d) in sorted(tuned_gate.items()):
+        if us_t > 1.10 * us_d:
+            raise SystemExit(
+                f"TUNED PLAN REGRESSION: tuned sweep {us_t:.0f}us > "
+                f"default {us_d:.0f}us (+10% headroom) at S={s_gate}")
+        print(f"tuned gate ok at S={s_gate}: tuned {us_t:.0f}us vs "
+              f"default {us_d:.0f}us")
 
 
 if __name__ == "__main__":

@@ -258,6 +258,8 @@ class CounterfactualEngine:
               mesh=None,
               chunks=None,
               scenario_chunks=None,
+              block_t=256,
+              tuned: bool = False,
               key: Optional[jax.Array] = None) -> SweepResult:
         """Evaluate every scenario in ``grid`` in one batched device program.
 
@@ -345,6 +347,12 @@ class CounterfactualEngine:
         otherwise), bounding per-round intermediates by the chunk instead
         of the whole grid. Composes with ``driver=``, ``resolve=`` and
         event ``chunks=``.
+
+        ``block_t="auto"`` / ``tuned=True`` hand the plan's performance
+        knobs to the tuner (:mod:`repro.tune`): the executor resolves them
+        against the persistent tuning cache (one :meth:`tune` pass fills
+        it) or the cost-model ranking — answers stay bit-for-bit the
+        default plan's either way.
         """
         # a CompiledFamily bundles (values, grid, overlay); unpack it so
         # everything below sees the plain grid + the family's event log
@@ -365,7 +373,8 @@ class CounterfactualEngine:
         # the executor raises the same errors for every entry point
         plan = plan_for_driver(driver, resolve=resolve, mesh=mesh,
                                chunks=chunks,
-                               scenario_chunks=scenario_chunks)
+                               scenario_chunks=scenario_chunks,
+                               block_t=block_t, tuned=tuned)
         if chunks is not None and method not in ("parallel",
                                                  "sort2aggregate"):
             raise ValueError(
@@ -433,6 +442,48 @@ class CounterfactualEngine:
         return SweepResult(grid=grid, results=results,
                            n_events=self.n_events, base_index=base_index,
                            consistency_gaps=gaps, refine_iters=iters)
+
+    def tune(self, grid=None, *,
+             driver: str = "batched",
+             resolve: str = "auto",
+             mesh=None,
+             chunks=None,
+             scenario_chunks=None,
+             cache=None,
+             cache_path=None,
+             max_events: int = 4096,
+             trials: int = 7,
+             quick_trials: int = 3,
+             top_k: int = 4,
+             measure: bool = True):
+        """One measured tuning pass for this engine's log shape: enumerate
+        the legal knob lattice for the (driver, resolve, chunks) plan,
+        rank it by the roofline cost model, time the top candidates paired
+        against the default plan (``benchmarks.common.time_pair``), and
+        persist the winner in the tuning cache — after which every
+        same-shape ``sweep(..., tuned=True)`` (or ``block_t="auto"``)
+        resolves to it without measuring again.
+
+        ``grid`` defaults to a small representative product grid; any
+        :class:`ScenarioGrid` with the intended scenario count works — the
+        tuner's decisions key on shapes, not on the designs. Returns the
+        :class:`repro.tune.TuneReport` (winner config, paired medians,
+        cache path). Wall-clock only: every candidate is bit-for-bit the
+        default plan by the executor's chunk-equivalence contracts.
+        """
+        from repro import tune as tune_lib
+        if grid is None:
+            grid = self.grid(bid_scales=(1.0, 1.25),
+                             budget_scales=(1.0, 0.75))
+        plan = plan_for_driver(driver, resolve=resolve, mesh=mesh,
+                               chunks=chunks,
+                               scenario_chunks=scenario_chunks,
+                               block_t="auto", tuned=True)
+        return tune_lib.autotune(
+            self.values, grid.budgets, grid.rules, plan,
+            cache=cache, cache_path=cache_path, max_events=max_events,
+            trials=trials, quick_trials=quick_trials, top_k=top_k,
+            measure=measure)
 
     def grid_from_points(self, points: Sequence[dict]) -> ScenarioGrid:
         """A :class:`ScenarioGrid` from search-space points: each point is a

@@ -333,7 +333,13 @@ class SweepPlan:
       normally :meth:`repro.launch.mesh.SweepMeshSpec.for_processes`; each
       process passes its own event shard to :func:`execute_sweep`);
     * ``resolve`` — ``"jnp" | "pallas" | "fused" | "auto"``;
-    * ``block_t`` — Pallas event-tile size;
+    * ``block_t`` — Pallas event-tile size, or ``"auto"`` to let the plan
+      tuner (:mod:`repro.tune`) pick it at :func:`execute_sweep` time from
+      the persistent tuning cache / cost-model ranking;
+    * ``tuned`` — hand every *unpinned* knob (tile when ``"auto"``, chunk
+      specs when ``None``, host prefetch, ``skip_retired``) to the tuner.
+      Resolution never changes numerics: every candidate is bit-for-bit
+      the default plan by the chunk-equivalence contracts below;
     * ``interpret`` — force (True) / suppress (False) Pallas interpret mode;
       ``None`` = interpret off-TPU, except ``"fused"`` which falls back to
       its jnp oracle instead of interpreting;
@@ -349,16 +355,23 @@ class SweepPlan:
 
     placement: str = "batched"
     resolve: str = "auto"
-    block_t: int = 256
+    block_t: int = 256           # int, or "auto" for tuner resolution
     interpret: Optional[bool] = None
     skip_retired: bool = True
     mesh: Optional[SweepMeshSpec] = None
     chunks: Optional[ChunkSpec] = None
     scenario_chunks: Optional[ScenarioChunkSpec] = None
+    tuned: bool = False
 
     def __post_init__(self):
         if self.placement not in PLACEMENTS:
             raise _unknown("placement", self.placement, PLACEMENTS)
+        if self.block_t != "auto" and (
+                not isinstance(self.block_t, int)
+                or isinstance(self.block_t, bool) or self.block_t < 1):
+            raise ValueError(
+                f"SweepPlan.block_t must be a positive int or 'auto', got "
+                f"{self.block_t!r}")
         if self.resolve not in RESOLVE_BACKENDS + ("auto",):
             raise _unknown("resolve back-end", self.resolve,
                            RESOLVE_BACKENDS + ("auto",))
@@ -373,9 +386,10 @@ class SweepPlan:
 
 
 def plan_for_driver(driver: str, *, resolve: str = "auto",
-                    block_t: int = 256, interpret: Optional[bool] = None,
+                    block_t=256, interpret: Optional[bool] = None,
                     skip_retired: bool = True, mesh=None,
-                    chunks=None, scenario_chunks=None) -> SweepPlan:
+                    chunks=None, scenario_chunks=None,
+                    tuned: bool = False) -> SweepPlan:
     """Build the plan for a legacy ``driver=`` string (``sweep_parallel`` /
     ``engine.sweep``), with the one consistent unknown-driver error."""
     if driver not in SWEEP_DRIVERS:
@@ -390,7 +404,39 @@ def plan_for_driver(driver: str, *, resolve: str = "auto",
                      interpret=interpret, skip_retired=skip_retired,
                      mesh=mesh if meshed else None,
                      chunks=as_chunk_spec(chunks),
-                     scenario_chunks=as_scenario_chunk_spec(scenario_chunks))
+                     scenario_chunks=as_scenario_chunk_spec(scenario_chunks),
+                     tuned=tuned)
+
+
+def needs_tuning(plan: SweepPlan) -> bool:
+    """Whether the plan carries knobs the tuner must resolve before any
+    jitted program can treat it as static."""
+    return plan.tuned or plan.block_t == "auto"
+
+
+def resolve_auto_plan(plan: SweepPlan, *, n_events: int, n_campaigns: int,
+                      n_scenarios: int) -> SweepPlan:
+    """Resolve ``block_t="auto"`` / ``tuned=True`` to a concrete plan via
+    the tuning cache + cost-model ranking (:func:`repro.tune.resolve_plan`
+    — lazy import; tune depends on this module). No-op for concrete plans.
+    Resolution only moves bitwise-equivalence knobs, never answers."""
+    if not needs_tuning(plan):
+        return plan
+    from repro import tune
+    return tune.resolve_plan(plan, n_events=n_events,
+                             n_campaigns=n_campaigns,
+                             n_scenarios=n_scenarios)
+
+
+def _untuned(plan: SweepPlan) -> SweepPlan:
+    """Pin tuner knobs at executor defaults WITHOUT consulting the tuner —
+    for entry points whose knob lattice the tuner does not model (the
+    sort2aggregate spine, resumable folds)."""
+    if not needs_tuning(plan):
+        return plan
+    return dataclasses.replace(
+        plan, block_t=256 if plan.block_t == "auto" else plan.block_t,
+        tuned=False)
 
 
 # ---------------------------------------------------------------------------
@@ -1442,7 +1488,19 @@ def execute_sweep(values, budgets, rules, plan: SweepPlan, *,
     ``placement="multihost"`` takes THIS PROCESS's event shard as
     ``values`` (the full log under a single process) and returns
     replicated outputs on every process.
+
+    ``plan.block_t="auto"`` / ``plan.tuned=True`` resolve here — before
+    any jitted program sees the plan — through the tuning cache + cost
+    model (:func:`resolve_auto_plan`); the resolved plan's outputs are
+    bit-for-bit the default plan's.
     """
+    if needs_tuning(plan):
+        n_ev, n_c = (values.shape if isinstance(values, HostStream)
+                     else tuple(values.shape))
+        b = jnp.asarray(budgets)
+        plan = resolve_auto_plan(
+            plan, n_events=int(n_ev), n_campaigns=int(n_c),
+            n_scenarios=int(b.shape[0]) if b.ndim == 2 else 1)
     if isinstance(values, HostStream) or (
             plan.chunks is not None and plan.chunks.source == "host"):
         check_host_stream(plan, overlay=overlay)
@@ -1611,6 +1669,7 @@ def execute_sweep_resumable(values_new, budgets, rules, plan: SweepPlan, *,
     register design-only scenarios for streaming and route overlay
     families through the exact replay path.
     """
+    plan = _untuned(plan)   # the tuner models full sweeps, not fold windows
     if plan.placement != "batched":
         raise ValueError(
             "execute_sweep_resumable runs placement='batched' only (the "
@@ -1708,6 +1767,7 @@ def execute_s2a_sweep(values, budgets, rules, plan: SweepPlan, *,
     executor owns the placement dispatch and its validation
     (:func:`check_s2a_options`), the estimator modules own the algorithm.
     """
+    plan = _untuned(plan)   # the tuner models the parallel lattice only
     check_s2a_options(plan, record_events)
     if plan.placement == "sharded":
         from repro.core.sharded import sweep_sort2aggregate_sharded

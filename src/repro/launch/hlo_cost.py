@@ -28,15 +28,16 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
-    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
-}
+from repro.launch import hlo_text
+from repro.launch.hlo_text import ring_wire_bytes
 
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DTYPE_BYTES = hlo_text.DTYPE_BYTES
+_SHAPE_RE = hlo_text.SHAPE_RE
+_GROUPS_RE = hlo_text.GROUPS_RE
+_GROUPS_IOTA_RE = hlo_text.GROUPS_IOTA_RE
+
 _COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
 _INSTR_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],\{\}\s/]*?)\s*"
@@ -45,8 +46,6 @@ _CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
-_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,\s]+)\}")
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
 
@@ -60,21 +59,10 @@ _TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
                    "log-plus-one", "atan2", "cbrt", "erf"}
 
 
-def _shape_list(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
-    out = []
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
-        out.append((dt, shape))
-    return out
-
-
-def _type_bytes(type_str: str) -> int:
-    total = 0
-    for dt, shape in _shape_list(type_str):
-        total += _DTYPE_BYTES[dt] * (math.prod(shape) if shape else 1)
-    return total
+# shared with launch/roofline.py via launch/hlo_text.py; the local names
+# stay because tests and this module's walker address them directly
+_shape_list = hlo_text.shape_list
+_type_bytes = hlo_text.type_bytes
 
 
 @dataclasses.dataclass
@@ -122,13 +110,7 @@ def parse_module(text: str) -> Dict[str, Computation]:
 
 
 def _group_size(rest: str) -> int:
-    m = _GROUPS_IOTA_RE.search(rest)
-    if m:
-        return max(int(m.group(2)), 1)
-    m = _GROUPS_RE.search(rest)
-    if m:
-        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
-    return 2
+    return hlo_text.group_size(rest, default=2)
 
 
 def _operand_type(comp: Computation, comps: Dict[str, Computation],
@@ -272,16 +254,7 @@ def _comp_cost(comp: Computation, comps: Dict[str, Computation],
                     "all-to-all", "collective-permute"):
             nbytes = _type_bytes(ins.rtype)
             n = _group_size(ins.rest)
-            if base == "all-reduce":
-                wire = 2.0 * nbytes * (n - 1) / n
-            elif base == "all-gather":
-                wire = nbytes * (n - 1) / n
-            elif base == "reduce-scatter":
-                wire = nbytes * (n - 1)
-            elif base == "all-to-all":
-                wire = nbytes * (n - 1) / n
-            else:
-                wire = float(nbytes)
+            wire = ring_wire_bytes(base, nbytes, n)
             c = Cost(coll_wire_bytes=wire, coll_by_kind={base: wire})
             c.bytes = 2.0 * nbytes
             total += c

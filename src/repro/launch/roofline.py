@@ -3,9 +3,9 @@
 This container has no TPU; the *compiled dry-run* is the profile. Per
 (arch x shape x mesh) we derive three times (seconds, per step):
 
-  T_comp = device_FLOPs / PEAK_FLOPS
-  T_mem  = device_bytes  / HBM_BW
-  T_coll = device_wire_bytes / ICI_BW
+  T_comp = device_FLOPs / peak_flops
+  T_mem  = device_bytes  / hbm_bw
+  T_coll = device_wire_bytes / ici_bw
 
 ``compiled.cost_analysis()`` reports FLOPs / bytes for the *per-device* SPMD
 program. Collective wire bytes are parsed from the optimized HLO text
@@ -14,57 +14,66 @@ all-to-all / collective-permute we take the result tensor sizes and convert to
 per-device wire traffic with the standard ring formulas (x(n-1)/n, all-reduce
 x2(n-1)/n) using the replica-group size parsed from the op.
 
-Hardware constants (TPU v5e-like, per task spec): 197 TFLOP/s bf16,
-819 GB/s HBM, ~50 GB/s/link ICI.
+Hardware parameters live in :class:`HardwareSpec`; the module-level
+``PEAK_FLOPS`` / ``HBM_BW`` / ``ICI_BW`` constants are the TPU v5e-like
+defaults (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI) kept for
+callers that predate the dataclass.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
-import re
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
-PEAK_FLOPS = 197e12        # bf16 / chip
-HBM_BW = 819e9             # bytes/s / chip
-ICI_BW = 50e9              # bytes/s / link
+from repro.launch.hlo_text import (
+    COLLECTIVES as _COLLECTIVES,
+    group_size,
+    ring_wire_bytes,
+    type_bytes as _tensor_bytes,
+)
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
-    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Roofline hardware parameters for one accelerator flavour.
+
+    ``h2d_bw`` (host->device) and ``dispatch_us`` (per-launch overhead)
+    exist for the plan tuner's cost model; the classic three-term roofline
+    uses only the first three rates.
+    """
+    name: str
+    peak_flops: float          # FLOP/s per chip (bf16 for TPUs)
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per link
+    h2d_bw: float = 16e9       # host->device bytes/s (PCIe-ish default)
+    dispatch_us: float = 3.0   # per kernel-launch overhead, microseconds
+
+    @staticmethod
+    def for_backend(backend: str) -> "HardwareSpec":
+        """Best-guess spec for a jax backend name ('tpu'/'gpu'/'cpu')."""
+        key = {"tpu": "tpu-v5e", "gpu": "gpu-a100", "cpu": "cpu"}.get(
+            backend, "cpu")
+        return HARDWARE[key]
+
+
+HARDWARE: Dict[str, HardwareSpec] = {
+    # per task spec: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+    "tpu-v5e": HardwareSpec("tpu-v5e", 197e12, 819e9, 50e9, h2d_bw=16e9),
+    "tpu-v4": HardwareSpec("tpu-v4", 275e12, 1228e9, 100e9, h2d_bw=16e9),
+    "gpu-a100": HardwareSpec("gpu-a100", 312e12, 2039e9, 300e9, h2d_bw=25e9),
+    # CPU numbers are a coarse single-socket stand-in; the tuner only needs
+    # *relative* ranking on this backend, and measurement decides the rest.
+    "cpu": HardwareSpec("cpu", 0.5e12, 50e9, 50e9, h2d_bw=50e9,
+                        dispatch_us=8.0),
 }
 
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-# one shaped result:  f32[256,1024]{1,0}   (layout braces optional)
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,\s]+)\}")
-# e.g. replica_groups=[32,16]<=[16,32]T(1,0) — iota form: groups x size
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-
-
-def _tensor_bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
+V5E = HARDWARE["tpu-v5e"]
+PEAK_FLOPS = V5E.peak_flops    # bf16 / chip
+HBM_BW = V5E.hbm_bw            # bytes/s / chip
+ICI_BW = V5E.ici_bw            # bytes/s / link
 
 
 def _group_size(line: str) -> int:
-    m = _GROUPS_IOTA_RE.search(line)
-    if m:
-        return int(m.group(2))
-    m = _GROUPS_RE.search(line)
-    if m:
-        return len([x for x in m.group(1).split(",") if x.strip() != ""])
-    return 2   # conservative default when groups are implicit
+    return group_size(line, default=2)
 
 
 def _result_type(line: str) -> str:
@@ -107,16 +116,7 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
         if nbytes == 0:
             continue
         n = max(_group_size(s), 2)
-        if kind == "all-reduce":
-            wire = 2.0 * nbytes * (n - 1) / n
-        elif kind == "all-gather":
-            wire = nbytes * (n - 1) / n            # result = gathered
-        elif kind == "reduce-scatter":
-            wire = nbytes * (n - 1)                 # result = shard
-        elif kind == "all-to-all":
-            wire = nbytes * (n - 1) / n
-        else:                                       # collective-permute
-            wire = float(nbytes)
+        wire = ring_wire_bytes(kind, nbytes, n)
         stats.wire_bytes += wire
         stats.count += 1
         stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + wire
@@ -139,19 +139,45 @@ class RooflineTerms:
     per_device_memory_bytes: Optional[float] = None
     model_flops: Optional[float] = None
     useful_flops_ratio: Optional[float] = None
+    hardware: Optional[str] = None
+
+    @property
+    def t_step(self) -> float:
+        """Optimistic step time: the binding roofline term (full overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
 
     def to_dict(self):
         return dataclasses.asdict(self)
 
 
+def terms_from_cost(flops: float, nbytes: float, wire_bytes: float,
+                    hw: HardwareSpec,
+                    collective_detail: Optional[Dict[str, float]] = None,
+                    ) -> RooflineTerms:
+    """Roofline terms from already-extracted per-device counters."""
+    t_c = flops / hw.peak_flops
+    t_m = nbytes / hw.hbm_bw
+    t_x = wire_bytes / hw.ici_bw
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    return RooflineTerms(
+        flops_per_device=flops, bytes_per_device=nbytes,
+        wire_bytes_per_device=wire_bytes,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=max(terms, key=terms.get),
+        collective_detail=dict(collective_detail or {}), hardware=hw.name)
+
+
 def roofline(compiled, *, model_flops_per_device: Optional[float] = None,
              hlo_text: Optional[str] = None,
-             structural: bool = True) -> RooflineTerms:
+             structural: bool = True,
+             hw: Optional[HardwareSpec] = None) -> RooflineTerms:
     """Derive the three terms. ``structural=True`` uses the trip-count-aware
     HLO walker (repro.launch.hlo_cost) — XLA's own cost_analysis counts
-    while-loop bodies once, so scanned-layers programs need this."""
+    while-loop bodies once, so scanned-layers programs need this.
+    ``hw`` selects the hardware parameters (TPU v5e-like default)."""
     from repro.compat import compiled_cost_analysis
     from repro.launch import hlo_cost
+    hw = hw if hw is not None else V5E
     ca = compiled_cost_analysis(compiled)
     text = hlo_text if hlo_text is not None else compiled.as_text()
     if structural:
@@ -164,28 +190,19 @@ def roofline(compiled, *, model_flops_per_device: Optional[float] = None,
         flops = float(ca.get("flops", 0.0))
         nbytes = float(ca.get("bytes accessed", 0.0))
         coll = parse_collectives(text)
-    t_c = flops / PEAK_FLOPS
-    t_m = nbytes / HBM_BW
-    t_x = coll.wire_bytes / ICI_BW
-    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
-    bottleneck = max(terms, key=terms.get)
-    mem = None
+    out = terms_from_cost(flops, nbytes, coll.wire_bytes, hw,
+                          collective_detail=coll.by_kind)
     try:
         ma = compiled.memory_analysis()
-        mem = float(ma.temp_size_in_bytes + ma.argument_size_in_bytes
-                    + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+        out.per_device_memory_bytes = float(
+            ma.temp_size_in_bytes + ma.argument_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes)
     except Exception:
         pass
-    ratio = None
+    out.model_flops = model_flops_per_device
     if model_flops_per_device and flops > 0:
-        ratio = model_flops_per_device / flops
-    return RooflineTerms(
-        flops_per_device=flops, bytes_per_device=nbytes,
-        wire_bytes_per_device=coll.wire_bytes,
-        t_compute=t_c, t_memory=t_m, t_collective=t_x,
-        bottleneck=bottleneck, collective_detail=dict(coll.by_kind),
-        per_device_memory_bytes=mem,
-        model_flops=model_flops_per_device, useful_flops_ratio=ratio)
+        out.useful_flops_ratio = model_flops_per_device / flops
+    return out
 
 
 def model_flops_estimate(n_params_active: int, tokens: int) -> float:

@@ -161,7 +161,7 @@ class CounterfactualService:
                  max_batch: int = 32, placement: str = "batched",
                  resolve: str = "auto", mesh=None, chunks=None,
                  scenario_chunks=None, interpret: Optional[bool] = None,
-                 store: str = "device"):
+                 store: str = "device", tuned: bool = False):
         self.base_budgets = jnp.asarray(budgets, jnp.float32)
         if self.base_budgets.ndim != 1:
             raise ValueError(
@@ -200,12 +200,18 @@ class CounterfactualService:
                 if chunks is not None else int(events_per_chunk))
             chunks = None
         # the exact-replay plan (validated here: unknown placement/resolve
-        # and missing meshes fail at construction, not first ask)
+        # and missing meshes fail at construction, not first ask).
+        # tuned=True hands the plan's unpinned performance knobs to
+        # repro.tune at replay time (cache -> cost model); explicit
+        # chunks/scenario_chunks stay pinned, so append alignment and lane
+        # padding are unaffected — and every plan cell answers bitwise.
         self.plan = SweepPlan(placement=placement, resolve=resolve,
                               mesh=mesh, chunks=as_chunk_spec(chunks),
                               scenario_chunks=as_scenario_chunk_spec(
                                   scenario_chunks),
-                              interpret=interpret)
+                              interpret=interpret,
+                              block_t="auto" if tuned else 256,
+                              tuned=tuned)
         # the streaming-fold plan: batched single-device program, same
         # resolve preference (any back-end folds to identical bits)
         self._stream_plan = SweepPlan(placement="batched", resolve=resolve,
@@ -525,6 +531,41 @@ class CounterfactualService:
         return CounterfactualEngine(self.values, self.base_budgets,
                                     self.base_rule, service=self)
 
+    def tune(self, *, scenarios: Optional[int] = None, cache=None,
+             cache_path=None, max_events: int = 4096, trials: int = 7,
+             quick_trials: int = 3, top_k: int = 4, measure: bool = True):
+        """One measured tuning pass on the stored log, then pin the winner
+        as this service's replay plan: candidates are timed paired against
+        the default plan (``benchmarks.common.time_pair``) at a
+        representative lane count (``scenarios``, default ``max_batch``),
+        the winner is persisted in the tuning cache, and ``self.plan``
+        becomes the concrete tuned plan — explicit ctor
+        ``chunks``/``scenario_chunks`` stay pinned, so append alignment is
+        untouched, and every candidate answers bit-for-bit (the executor's
+        chunk-equivalence contracts), so the cache keeps its entries.
+        Returns the :class:`repro.tune.TuneReport`."""
+        from repro import tune as tune_lib
+        if self.store == "host":
+            raise ValueError(
+                "store='host' replans its chunking per log size "
+                "(_host_chunks), so there is no stable plan to tune; "
+                "construct the service with tuned=True instead — host "
+                "replays then resolve their free knobs through the tuning "
+                "cache at each ask.")
+        self.flush()
+        n_lanes = int(scenarios) if scenarios is not None else self.max_batch
+        grid = ScenarioGrid.product(
+            self.base_rule, self.base_budgets,
+            bid_scales=tuple(1.0 + 0.25 * i for i in range(n_lanes)))
+        plan = dataclasses.replace(self.plan, block_t="auto", tuned=True)
+        report = tune_lib.autotune(
+            self.values, grid.budgets, grid.rules, plan,
+            cache=cache, cache_path=cache_path, max_events=max_events,
+            trials=trials, quick_trials=quick_trials, top_k=top_k,
+            measure=measure)
+        self.plan = report.plan(plan)
+        return report
+
     # -- streaming carries (the causal path) -------------------------------
 
     def register(self, label: str, rule: Optional[AuctionRule] = None,
@@ -631,7 +672,8 @@ class CounterfactualService:
     def load(cls, path, *, step: Optional[int] = None,
              placement: str = "batched", resolve: str = "auto", mesh=None,
              chunks=None, scenario_chunks=None,
-             interpret: Optional[bool] = None) -> "CounterfactualService":
+             interpret: Optional[bool] = None,
+             tuned: bool = False) -> "CounterfactualService":
         """Restore a service saved by :meth:`save` (the latest checkpoint
         under ``path``, or an explicit ``step`` = log version). Log slabs,
         base design, log version and every streaming carry come back
@@ -667,7 +709,7 @@ class CounterfactualService:
                   max_batch=int(extra["max_batch"]), placement=placement,
                   resolve=resolve, mesh=mesh, chunks=chunks,
                   scenario_chunks=scenario_chunks, interpret=interpret,
-                  store=extra["store"])
+                  store=extra["store"], tuned=tuned)
         slabs = tree["slabs"]
         if svc.store == "host":
             slabs = [np.asarray(jax.device_get(s), np.float32)

@@ -1,0 +1,93 @@
+"""Measured plan autotuning: SweepPlan knobs as decisions, not constants.
+
+``SweepPlan(block_t="auto")`` / ``SweepPlan(tuned=True)`` turn the plan's
+performance knobs (event tile, event/scenario chunk sizes, host-stream
+prefetch, retired-lane predication) over to this package. Resolution at
+:func:`~repro.core.executor.execute_sweep` time is:
+
+1. consult the persistent tuning cache (:mod:`repro.tune.cache`) for a
+   *measured* winner at this (platform, device_count, shape-bucket, plan
+   axes) key — the path a hardware-measured cache file ships through;
+2. otherwise fall back to the pure cost-model ranking
+   (:mod:`repro.tune.space`): roofline T_comp/T_mem/T_coll under the
+   platform's :class:`~repro.launch.roofline.HardwareSpec` with the
+   executor's VMEM table as a hard feasibility filter.
+
+Measurements come from :func:`repro.tune.measure.autotune` (explicitly —
+resolution never times anything): interleaved ``time_pair`` medians
+against the default plan on a truncated log, persisted for every later
+same-shape sweep. All of it is wall-clock only: every candidate is
+bit-for-bit the default plan's outputs by the executor's
+chunk-equivalence contracts, so a stale or wrong cache entry can never
+change an answer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+from repro.core import executor as _ex
+from repro.tune.cache import (ENV_VAR, SCHEMA_VERSION, TuningCache,
+                              cache_key, default_cache_path, shared_cache)
+from repro.tune.measure import Measurement, TuneReport, autotune
+from repro.tune.space import (Candidate, ProblemShape, candidate_from_config,
+                              default_candidate, enumerate_candidates,
+                              free_knobs, predicted_cost, rank_candidates,
+                              shape_for)
+
+__all__ = [
+    "autotune", "resolve_plan", "Candidate", "ProblemShape", "TuneReport",
+    "Measurement", "TuningCache", "cache_key", "default_cache_path",
+    "shared_cache", "candidate_from_config", "default_candidate",
+    "enumerate_candidates", "free_knobs", "predicted_cost",
+    "rank_candidates", "shape_for", "ENV_VAR", "SCHEMA_VERSION",
+]
+
+
+def resolve_plan(plan: _ex.SweepPlan, *, n_events: int, n_campaigns: int,
+                 n_scenarios: int,
+                 cache: Optional[TuningCache] = None) -> _ex.SweepPlan:
+    """The concrete plan a tuned/auto plan executes as (cache -> cost
+    model; never measures). Idempotent on already-concrete plans."""
+    if not (plan.tuned or plan.block_t == "auto"):
+        return plan
+    if cache is None:
+        return _resolve_shared(plan, int(n_events), int(n_campaigns),
+                               int(n_scenarios),
+                               _shared_cache_stamp())
+    return _resolve(plan, int(n_events), int(n_campaigns),
+                    int(n_scenarios), cache)
+
+
+def _shared_cache_stamp():
+    """A hashable token that changes when the default cache file does —
+    the memo key that lets repeated same-shape resolutions skip even the
+    ranking while staying coherent with on-disk updates."""
+    from pathlib import Path
+    p = Path(default_cache_path())
+    try:
+        st = p.stat()
+        return (str(p), st.st_mtime_ns, st.st_size)
+    except OSError:
+        return (str(p), None, None)
+
+
+@functools.lru_cache(maxsize=512)
+def _resolve_shared(plan, n_events, n_campaigns, n_scenarios, _stamp):
+    return _resolve(plan, n_events, n_campaigns, n_scenarios,
+                    shared_cache())
+
+
+def _resolve(plan, n_events, n_campaigns, n_scenarios, cache):
+    from repro.tune import space as space_lib
+    shape = shape_for(plan, n_events=n_events, n_campaigns=n_campaigns,
+                      n_scenarios=n_scenarios)
+    entry = cache.get(cache_key(shape))
+    if entry is not None:
+        cand = candidate_from_config(entry["config"])
+        # buckets are coarser than shapes: re-validate against the exact
+        # alignment contracts before trusting a cached winner
+        if space_lib.is_legal(cand, plan, shape):
+            return cand.apply(plan)
+    ranked = rank_candidates(plan, shape)
+    return ranked[0][0].apply(plan)

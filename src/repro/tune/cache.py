@@ -1,0 +1,116 @@
+"""Persistent JSON tuning cache: measured winners keyed by problem shape.
+
+One cache file serves a whole fleet of same-shaped sweeps: the key is
+``platform | device_count | pow2-bucketed (N, C, S) | placement | resolve |
+source`` — coarse enough that a 40k-event log hits the entry measured on a
+48k-event log, fine enough that a fused-TPU winner never leaks onto a
+jnp-CPU sweep. Entries carry the winning knob config plus provenance
+(measured vs cost-model, medians, hardware name).
+
+The file format is the shipping vehicle for hardware CI can't see: a cache
+measured on a real TPU v5e pod checks in next to the code, and
+``SweepPlan(tuned=True)`` resolution on that hardware consults it with no
+code changes (``REPRO_TUNING_CACHE`` points at it). A missing, corrupt or
+schema-mismatched file degrades to the pure cost-model ranking — tuning
+never becomes a correctness dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.tune.space import ProblemShape
+
+SCHEMA_VERSION = 1
+ENV_VAR = "REPRO_TUNING_CACHE"
+DEFAULT_FILENAME = "TUNING_cache.json"
+
+
+def default_cache_path() -> Path:
+    """``$REPRO_TUNING_CACHE`` or ``TUNING_cache.json`` in the cwd (next to
+    BENCH_sweep.json, the repo's other cwd-anchored measurement record)."""
+    return Path(os.environ.get(ENV_VAR) or DEFAULT_FILENAME)
+
+
+def _bucket(n: int) -> int:
+    """Pow2 ceiling: shapes within a factor of two share a tuned entry."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def cache_key(shape: ProblemShape) -> str:
+    return (f"{shape.platform}|d{shape.device_count}"
+            f"|N{_bucket(shape.n_events)}|C{_bucket(shape.n_campaigns)}"
+            f"|S{_bucket(shape.n_scenarios)}"
+            f"|{shape.placement}|{shape.resolve}|{shape.source}")
+
+
+@dataclasses.dataclass
+class TuningCache:
+    """In-memory view of one cache file. ``load`` never raises on bad
+    input; ``save`` writes atomically (tmp + rename)."""
+
+    path: Path
+    entries: Dict[str, dict] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def load(cls, path=None) -> "TuningCache":
+        path = Path(path) if path is not None else default_cache_path()
+        entries: Dict[str, dict] = {}
+        try:
+            raw = json.loads(path.read_text())
+            if (isinstance(raw, dict)
+                    and raw.get("schema") == SCHEMA_VERSION
+                    and isinstance(raw.get("entries"), dict)):
+                entries = {
+                    k: v for k, v in raw["entries"].items()
+                    if isinstance(v, dict) and isinstance(
+                        v.get("config"), dict)}
+            # wrong schema / shape: fall through with an empty view — the
+            # cost-model fallback answers until someone re-measures
+        except (OSError, ValueError):
+            pass
+        return cls(path=path, entries=entries)
+
+    def get(self, key: str) -> Optional[dict]:
+        return self.entries.get(key)
+
+    def put(self, key: str, config: dict, *, origin: str = "measured",
+            **meta) -> dict:
+        entry = {"config": dict(config), "origin": origin, **meta}
+        self.entries[key] = entry
+        return entry
+
+    def save(self) -> Path:
+        payload = {"schema": SCHEMA_VERSION, "entries": self.entries}
+        tmp = self.path.with_suffix(self.path.suffix + ".tmp")
+        tmp.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+        os.replace(tmp, self.path)
+        _stamp_cache.clear()        # force re-read by path-memoized loaders
+        return self.path
+
+
+# resolve-time loads are memoized on (path, mtime, size) so a service
+# asking thousands of same-shape sweeps re-reads the file only when it
+# actually changes
+_stamp_cache: Dict[str, tuple] = {}
+
+
+def shared_cache(path=None) -> TuningCache:
+    """The memoized process-wide view of one cache file."""
+    p = Path(path) if path is not None else default_cache_path()
+    try:
+        st = p.stat()
+        stamp = (st.st_mtime_ns, st.st_size)
+    except OSError:
+        stamp = None
+    key = str(p)
+    hit = _stamp_cache.get(key)
+    if hit is not None and hit[0] == stamp:
+        return hit[1]
+    cache = TuningCache.load(p)
+    _stamp_cache[key] = (stamp, cache)
+    return cache
